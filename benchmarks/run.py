@@ -1,0 +1,39 @@
+"""Benchmark runner — one section per paper table/figure + the roofline.
+
+  table2    fl_convergence.py  — protocol comparison (acc vs bytes)
+  fig4      compression.py     — scaling's effect on update sparsity + ladder
+  table1    overhead.py        — #S params and S-training time overhead
+  roofline  roofline.py        — per (arch x shape x mesh) terms (needs the
+                                 dry-run sweep results json)
+
+Scale knobs: REPRO_BENCH_SCALE (default 1), REPRO_BENCH_FULL=1 (paper-size
+models).  Prints CSV sections.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(name, fn):
+    print(f"\n## {name}")
+    t0 = time.time()
+    fn()
+    print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+def main() -> None:
+    from benchmarks import (compression, fl_convergence, overhead, roofline,
+                            scaling_stats)
+    _section("table2: protocol comparison (acc vs transmitted bytes)",
+             fl_convergence.main)
+    _section("fig4: scaling vs update sparsity + compression ladder",
+             compression.main)
+    _section("fig3: scale statistics by depth + bidirectional/partial",
+             scaling_stats.main)
+    _section("table1: scaling params + overhead", overhead.main)
+    _section("roofline: per (arch x shape x mesh)", roofline.main)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import restore, save
+
+__all__ = ["save", "restore"]

@@ -1,0 +1,74 @@
+"""Pytree checkpointing: msgpack + zstandard (both available offline).
+
+Arrays are stored as {"__nd__": 1, dtype, shape, data}; any nested dict/list
+structure round-trips.  `restore(path, target=...)` reshapes into an existing
+treedef (NamedTuple optimizer states etc.).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    return {"__nd__": 1, "dtype": arr.dtype.str, "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _is_packed(obj) -> bool:
+    return isinstance(obj, dict) and obj.get("__nd__") == 1
+
+
+def _unpack_leaf(obj):
+    return np.frombuffer(obj["data"], np.dtype(obj["dtype"])).reshape(obj["shape"])
+
+
+def _encode(tree):
+    if isinstance(tree, dict):
+        return {str(k): _encode(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_encode(v) for v in tree]
+    if tree is None:
+        return None
+    return _pack_leaf(tree)
+
+
+def _decode(obj):
+    if _is_packed(obj):
+        return _unpack_leaf(obj)
+    if isinstance(obj, dict):
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+def save(path: str, tree: Any, level: int = 3) -> int:
+    """Write a pytree checkpoint; returns compressed byte count."""
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    payload = msgpack.packb(_encode(host_tree), use_bin_type=True)
+    data = zstandard.ZstdCompressor(level=level).compress(payload)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+    return len(data)
+
+
+def restore(path: str, target: Any | None = None) -> Any:
+    with open(path, "rb") as f:
+        payload = zstandard.ZstdDecompressor().decompress(f.read())
+    tree = _decode(msgpack.unpackb(payload, raw=False))
+    if target is None:
+        return tree
+    # rebuild with the target's treedef (restores tuples/NamedTuples)
+    leaves = jax.tree.leaves(tree)
+    treedef = jax.tree.structure(target)
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,4 @@
+"""DeepCABAC/NNC-style host codec for quantized differential updates."""
+from repro.coding.nnc import decode_tree, encode_tree, encoded_bytes, shapes_of
+
+__all__ = ["decode_tree", "encode_tree", "encoded_bytes", "shapes_of"]

@@ -1,0 +1,66 @@
+"""Plain bitstream writer/reader (host-side, numpy-backed).
+
+Used for the *bypass* portion of the NNC-style codec: raw bits whose
+probability is ~0.5 and which therefore gain nothing from arithmetic coding.
+Keeping them out of the arithmetic engine lets us vectorise them with numpy
+(run lengths, signs, exp-Golomb remainders), which makes exact byte
+measurement affordable inside the FL benchmarks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class BitWriter:
+    def __init__(self) -> None:
+        self._chunks: list[np.ndarray] = []  # uint8 arrays of 0/1 bits
+
+    def put_bit(self, bit: int) -> None:
+        self._chunks.append(np.array([bit & 1], np.uint8))
+
+    def put_bits(self, bits: np.ndarray) -> None:
+        """Append a 1-D array of 0/1 values (any int dtype)."""
+        if bits.size:
+            self._chunks.append(bits.astype(np.uint8) & 1)
+
+    def put_uint(self, value: int, width: int) -> None:
+        """Fixed-width big-endian unsigned integer."""
+        bits = (value >> np.arange(width - 1, -1, -1)) & 1
+        self._chunks.append(bits.astype(np.uint8))
+
+    @property
+    def bit_length(self) -> int:
+        return int(sum(c.size for c in self._chunks))
+
+    def to_bytes(self) -> bytes:
+        if not self._chunks:
+            return b""
+        bits = np.concatenate(self._chunks)
+        return np.packbits(bits).tobytes()
+
+
+class BitReader:
+    def __init__(self, data: bytes) -> None:
+        raw = np.frombuffer(data, np.uint8)
+        self._bits = np.unpackbits(raw)
+        self._pos = 0
+
+    def get_bit(self) -> int:
+        b = int(self._bits[self._pos])
+        self._pos += 1
+        return b
+
+    def get_bits(self, n: int) -> np.ndarray:
+        out = self._bits[self._pos:self._pos + n]
+        if out.size != n:
+            raise EOFError("bitstream exhausted")
+        self._pos += n
+        return out
+
+    def get_uint(self, width: int) -> int:
+        bits = self.get_bits(width)
+        return int(bits.dot(1 << np.arange(width - 1, -1, -1, dtype=np.int64)))
+
+    @property
+    def bits_remaining(self) -> int:
+        return int(self._bits.size - self._pos)

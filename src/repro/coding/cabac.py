@@ -1,0 +1,98 @@
+"""Adaptive binary arithmetic coder (LZMA-style binary range coder).
+
+This is the "CABAC" engine of our DeepCABAC-like NNC codec: context-adaptive
+probabilities (11-bit, shift-adapted) with carry-correct byte renormalisation.
+Bypass (p=0.5) bins live in a separate raw bitstream (see bitstream.py) so
+they can be vectorised; only context-coded bins pass through this engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_TOP = 1 << 24
+_BOT = 1 << 11  # probability scale (2048)
+_INIT_P = _BOT // 2
+_ADAPT_SHIFT = 5
+
+
+class ContextSet:
+    """A bank of adaptive probability states (probability of bit == 0)."""
+
+    def __init__(self, n: int) -> None:
+        self.p = np.full(n, _INIT_P, np.int32)
+
+    def reset(self) -> None:
+        self.p[:] = _INIT_P
+
+
+class Encoder:
+    def __init__(self) -> None:
+        self.low = 0
+        self.range = 0xFFFFFFFF
+        self.cache = 0
+        self.cache_size = 1
+        self.out = bytearray()
+
+    def _shift_low(self) -> None:
+        if self.low < 0xFF000000 or self.low >= 0x100000000:
+            carry = self.low >> 32
+            self.out.append((self.cache + carry) & 0xFF)
+            pending = (0xFF + carry) & 0xFF
+            for _ in range(self.cache_size - 1):
+                self.out.append(pending)
+            self.cache_size = 0
+            self.cache = (self.low >> 24) & 0xFF
+        self.cache_size += 1
+        self.low = (self.low << 8) & 0xFFFFFFFF
+
+    def encode_bit(self, ctxs: ContextSet, idx: int, bit: int) -> None:
+        p = int(ctxs.p[idx])
+        bound = (self.range >> 11) * p
+        if bit == 0:
+            self.range = bound
+            ctxs.p[idx] = p + ((_BOT - p) >> _ADAPT_SHIFT)
+        else:
+            self.low += bound
+            self.range -= bound
+            ctxs.p[idx] = p - (p >> _ADAPT_SHIFT)
+        while self.range < _TOP:
+            self.range = (self.range << 8) & 0xFFFFFFFF
+            self._shift_low()
+
+    def finish(self) -> bytes:
+        for _ in range(5):
+            self._shift_low()
+        return bytes(self.out)
+
+
+class Decoder:
+    def __init__(self, data: bytes) -> None:
+        self.data = data
+        self.pos = 0
+        self.range = 0xFFFFFFFF
+        self.code = 0
+        for _ in range(5):
+            self.code = ((self.code << 8) | self._next_byte()) & 0xFFFFFFFFFF
+        self.code &= 0xFFFFFFFF
+
+    def _next_byte(self) -> int:
+        b = self.data[self.pos] if self.pos < len(self.data) else 0
+        self.pos += 1
+        return b
+
+    def decode_bit(self, ctxs: ContextSet, idx: int) -> int:
+        p = int(ctxs.p[idx])
+        bound = (self.range >> 11) * p
+        if self.code < bound:
+            bit = 0
+            self.range = bound
+            ctxs.p[idx] = p + ((_BOT - p) >> _ADAPT_SHIFT)
+        else:
+            bit = 1
+            self.code -= bound
+            self.range -= bound
+            ctxs.p[idx] = p - (p >> _ADAPT_SHIFT)
+        while self.range < _TOP:
+            self.range = (self.range << 8) & 0xFFFFFFFF
+            self.code = ((self.code << 8) | self._next_byte()) & 0xFFFFFFFF
+        return bit

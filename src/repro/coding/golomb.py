@@ -1,0 +1,65 @@
+"""Exponential-Golomb codes (order-k), vectorised encode.
+
+DeepCABAC binarises quantization-level remainders with exp-Golomb codes whose
+bins are bypass-coded; STC's position coding is Golomb as well.  Encoding is
+fully vectorised (bit matrix assembly in numpy); decoding walks the bitstream
+sequentially (only used for round-trip verification and server decode).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.coding.bitstream import BitReader, BitWriter
+
+
+def egk_bit_length(values: np.ndarray, k: int) -> np.ndarray:
+    """Bits used by order-k exp-Golomb for each unsigned value."""
+    v = values.astype(np.int64) + (1 << k)
+    nbits = np.floor(np.log2(np.maximum(v, 1))).astype(np.int64) + 1
+    # prefix zeros = nbits - k - 1, then nbits bits of value
+    return 2 * nbits - k - 1
+
+
+def choose_k(values: np.ndarray) -> int:
+    """Cheap near-optimal order choice: k ~ log2(mean)."""
+    if values.size == 0:
+        return 0
+    mean = float(np.mean(values))
+    if mean < 1.0:
+        return 0
+    return min(15, int(np.floor(np.log2(mean + 1))))
+
+
+def encode_egk(writer: BitWriter, values: np.ndarray, k: int) -> None:
+    """Vectorised order-k exp-Golomb encode of unsigned ints."""
+    if values.size == 0:
+        return
+    v = values.astype(np.int64) + (1 << k)
+    nbits = np.floor(np.log2(v)).astype(np.int64) + 1
+    total = 2 * nbits - k - 1  # prefix (nbits-k-1 zeros) + nbits value bits
+    # Assemble all codewords into one flat bit array.
+    lengths = total
+    offsets = np.concatenate([[0], np.cumsum(lengths)[:-1]])
+    out = np.zeros(int(lengths.sum()), np.uint8)
+    # value bits are written MSB-first at the end of each codeword
+    for bit in range(int(nbits.max())):
+        # bit position from LSB
+        has = nbits > bit
+        pos = offsets + lengths - 1 - bit  # LSB at the last slot
+        out[pos[has]] = (v[has] >> bit) & 1
+    writer.put_bits(out)
+
+
+def decode_egk(reader: BitReader, count: int, k: int) -> np.ndarray:
+    out = np.empty(count, np.int64)
+    for i in range(count):
+        zeros = 0
+        while reader.get_bit() == 0:
+            zeros += 1
+        nbits = zeros + k + 1
+        rest = 0
+        for _ in range(nbits - 1):
+            rest = (rest << 1) | reader.get_bit()
+        v = (1 << (nbits - 1)) | rest
+        out[i] = v - (1 << k)
+    return out

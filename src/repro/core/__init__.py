@@ -1,0 +1,14 @@
+"""The paper's primary contribution: FSFL compression + scaling pipeline."""
+from repro.core.delta import CompressionConfig, compress_delta, delta_levels, ternary_compress
+from repro.core.quant import QuantConfig, quantize, dequantize
+from repro.core.residual import apply_error_feedback, zeros_like_tree
+from repro.core.scaling import apply_scale, init_scales, scale_mask
+from repro.core.sparsify import SparsifyConfig, sparsify_tree
+
+__all__ = [
+    "CompressionConfig", "compress_delta", "delta_levels", "ternary_compress",
+    "QuantConfig", "quantize", "dequantize",
+    "apply_error_feedback", "zeros_like_tree",
+    "apply_scale", "init_scales", "scale_mask",
+    "SparsifyConfig", "sparsify_tree",
+]

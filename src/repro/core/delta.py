@@ -1,0 +1,77 @@
+"""Differential-update compression pipeline (paper §3): sparsify -> quantize.
+
+`compress_delta` is the in-graph, dense-out reference used by the simulation
+regime and the tests; `DeltaCodec` (coding/nnc.py) turns the resulting integer
+levels into an actual DeepCABAC-style bitstream on the host.  The mesh path
+(dist/collectives.py) uses the static-shape compaction variants instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quant_lib
+from repro.core import sparsify as sparsify_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    sparsify: sparsify_lib.SparsifyConfig = dataclasses.field(
+        default_factory=sparsify_lib.SparsifyConfig
+    )
+    quant: quant_lib.QuantConfig = dataclasses.field(
+        default_factory=quant_lib.QuantConfig
+    )
+    enabled: bool = True  # False -> identity (raw FedAvg baseline)
+
+    def replace(self, **kw) -> "CompressionConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def tree_sub(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def compress_delta(delta: Any, cfg: CompressionConfig, fine_mask: Any | None = None) -> Any:
+    """sparsify -> quantize -> dequantize: the lossy round-trip the server sees.
+
+    Returns a pytree of the same dtype/shape as ``delta`` whose values are the
+    reconstruction after sparsification + uniform quantization.  This is
+    exactly the tensor the entropy coder would transmit losslessly, so the
+    difference `delta - compress_delta(delta)` is the residual (Eq. 5).
+    """
+    if not cfg.enabled:
+        return delta
+    sparse = sparsify_lib.sparsify_tree(delta, cfg.sparsify)
+    levels = quant_lib.quantize_tree(sparse, cfg.quant, fine_mask)
+    return quant_lib.dequantize_tree(levels, cfg.quant, fine_mask)
+
+
+def delta_levels(delta: Any, cfg: CompressionConfig, fine_mask: Any | None = None) -> Any:
+    """Integer quantization levels of the compressed delta (codec input)."""
+    sparse = sparsify_lib.sparsify_tree(delta, cfg.sparsify) if cfg.enabled else delta
+    return quant_lib.quantize_tree(sparse, cfg.quant, fine_mask)
+
+
+def ternary_compress(delta: Any, sparsity: float) -> Any:
+    """Sparse Ternary Compression (STC [21]) reference, for the baseline rows.
+
+    Top-k magnitude selection at fixed sparsity, surviving elements replaced by
+    the mean magnitude of the survivors with their sign: dW -> mu * sign(dW).
+    """
+
+    def one(dw: jax.Array) -> jax.Array:
+        mask = sparsify_lib.topk_mask_unstructured(dw, sparsity)
+        kept = jnp.where(mask, dw, 0.0)
+        denom = jnp.maximum(jnp.sum(mask), 1)
+        mu = jnp.sum(jnp.abs(kept)) / denom
+        return jnp.where(mask, mu * jnp.sign(dw), 0.0)
+
+    return jax.tree.map(one, delta)

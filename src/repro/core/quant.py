@@ -1,0 +1,93 @@
+"""Uniform quantization of differential weight updates (paper §3).
+
+The paper uses an integer-aligned uniform quantization scheme: quantization
+levels are ``[-q, ..., -1, 0, 1, ..., p] * step_size`` with a single global
+float ``step_size``.  Weight updates are snapped to the nearest level
+(round-to-nearest-even, matching numpy/jax default rounding).
+
+Default step sizes follow §5.1 of the paper:
+  * 4.88e-4 for unidirectional FL weight updates,
+  * 2.44e-4 for bidirectional settings,
+  * 2.38e-6 for scaling factors / biases / norm parameters ("fine" params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# Paper §5.1 constants.
+STEP_SIZE_UNI = 4.88e-4
+STEP_SIZE_BI = 2.44e-4
+STEP_SIZE_FINE = 2.38e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization configuration for a model update.
+
+    ``step_size`` applies to weight tensors; ``fine_step_size`` applies to
+    parameters named in ``fine_keys`` (scaling factors, biases, norm params),
+    which the paper quantizes much more finely.
+    """
+
+    step_size: float = STEP_SIZE_UNI
+    fine_step_size: float = STEP_SIZE_FINE
+    # int range clamp; DeepCABAC handles arbitrary ints but we keep levels
+    # bounded so int32 packing in collectives is safe.
+    max_level: int = 2**23
+
+    def step_for(self, is_fine: bool) -> float:
+        return self.fine_step_size if is_fine else self.step_size
+
+
+def quantize(x: jax.Array, step_size: float, max_level: int = 2**23) -> jax.Array:
+    """Map float tensor -> int32 quantization levels (round to nearest)."""
+    q = jnp.round(x / step_size)
+    q = jnp.clip(q, -max_level, max_level)
+    return q.astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, step_size: float, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * step_size).astype(dtype)
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array | None = None):
+    """Symmetric per-tensor int8 quantization (mesh collective path).
+
+    Returns (q, scale) with q int8 and ``x ~= q * scale``.  ``scale`` is
+    computed from the max-abs if not supplied.  Zero tensors get scale 1 to
+    avoid 0/0.
+    """
+    if scale is None:
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_tree(tree: Any, cfg: QuantConfig, fine_mask: Any | None = None) -> Any:
+    """Quantize every leaf of a pytree of float updates to int32 levels.
+
+    ``fine_mask`` is an optional pytree of bools (same structure) marking
+    leaves that use the fine step size.
+    """
+    if fine_mask is None:
+        fine_mask = jax.tree.map(lambda _: False, tree)
+    return jax.tree.map(
+        lambda x, f: quantize(x, cfg.step_for(f), cfg.max_level), tree, fine_mask
+    )
+
+
+def dequantize_tree(tree: Any, cfg: QuantConfig, fine_mask: Any | None = None, dtype=jnp.float32) -> Any:
+    if fine_mask is None:
+        fine_mask = jax.tree.map(lambda _: False, tree)
+    return jax.tree.map(
+        lambda q, f: dequantize(q, cfg.step_for(f), dtype), tree, fine_mask
+    )

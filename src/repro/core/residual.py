@@ -1,0 +1,37 @@
+"""Error accumulation / error feedback (paper §5.5, Eq. 5; STC-style).
+
+The residual stores what compression discarded so small-magnitude update
+elements can accumulate across rounds until they exceed a threshold:
+
+    dW_i^(t+1) = R_i^(t) + W_i^(t+1) - W_i^(t)          (Eq. 5, pre-compression)
+    R_i^(t+1)  = dW_i^(t+1) - compressed(dW_i^(t+1))    ("what was lost")
+
+Note the paper writes R^(t+1) = ΔŴ − ΔW which is the negated convention;
+tests pin ours: residual = uncompressed − compressed (what remains to send).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def zeros_like_tree(tree: Any) -> Any:
+    return jax.tree.map(lambda x: jax.numpy.zeros_like(x), tree)
+
+
+def apply_error_feedback(
+    raw_delta: Any,
+    residual: Any,
+    compress_fn: Callable[[Any], Any],
+):
+    """One error-feedback round on a pytree of updates.
+
+    Returns (compressed_delta, new_residual) where
+      compressed_delta = compress_fn(raw_delta + residual)
+      new_residual     = (raw_delta + residual) - compressed_delta
+    """
+    carried = jax.tree.map(lambda d, r: d + r, raw_delta, residual)
+    compressed = compress_fn(carried)
+    new_residual = jax.tree.map(lambda c, q: c - q, carried, compressed)
+    return compressed, new_residual

@@ -1,0 +1,83 @@
+"""Filter / output-neuron scaling factors (paper §4, Eq. 4).
+
+Every eligible weight tensor W (conv: (M,N,K,K); dense: (M,N); transformer
+matrices likewise treated output-dim-first) gets a trainable per-output scale
+S in R^M, initialised to 1 and applied multiplicatively:
+
+    W*_m = W_m * s_m
+
+Scales live in a pytree parallel to the params pytree; leaves of unscaled
+params hold a scalar 1.0 placeholder so tree structure stays uniform (their
+updates are masked out everywhere).  The paper's wrapper-module trick ("detect
+all conv/dense layers, replace with a scaled version") becomes a functional
+`apply_scale` used by the model definitions at matmul time — on TPU the scale
+fuses into the matmul epilogue (see kernels/scaled_matmul.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+# Predicate: (path_str, leaf) -> bool. Default: scale every >=2-D weight.
+ScalePredicate = Callable[[str, jax.Array], bool]
+
+
+def default_predicate(path: str, leaf: jax.Array) -> bool:
+    del path
+    return leaf.ndim >= 2
+
+
+def path_str(key_path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in key_path)
+
+
+def init_scales(params: Any, predicate: ScalePredicate = default_predicate) -> Any:
+    """Ones-initialised scales pytree (paper: S <- 1)."""
+
+    def leaf_init(kp, leaf):
+        if predicate(path_str(kp), leaf):
+            return jnp.ones((leaf.shape[0],), jnp.float32)
+        return jnp.ones((), jnp.float32)
+
+    return jax.tree_util.tree_map_with_path(leaf_init, params)
+
+
+def scale_mask(params: Any, predicate: ScalePredicate = default_predicate) -> Any:
+    """Pytree of python bools marking leaves that carry real scales."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: predicate(path_str(kp), leaf), params
+    )
+
+
+def num_scale_params(scales: Any, mask: Any) -> int:
+    """Paper Table 1 `#params_add`."""
+    leaves = jax.tree.leaves(jax.tree.map(lambda s, m: s.size if m else 0, scales, mask))
+    return int(sum(leaves))
+
+
+def apply_scale(w: jax.Array, s: jax.Array) -> jax.Array:
+    """W*_m = W_m * s_m (Eq. 4); scalar placeholder broadcasts trivially."""
+    if s.ndim == 0:
+        return w * s
+    return w * s.reshape((s.shape[0],) + (1,) * (w.ndim - 1)).astype(w.dtype)
+
+
+def apply_scales_tree(params: Any, scales: Any) -> Any:
+    """Materialise the scaled network (used by the simulation regime / ref)."""
+    return jax.tree.map(apply_scale, params, scales)
+
+
+def bake_scales(params: Any, scales: Any) -> Any:
+    """Fold scales into weights and reset scales to 1 (server-side option)."""
+    baked = apply_scales_tree(params, scales)
+    ones = jax.tree.map(lambda s: jnp.ones_like(s), scales)
+    return baked, ones
+
+
+def masked_update(scales: Any, updates: Any, mask: Any) -> Any:
+    """Apply updates only where the mask marks a real scale leaf."""
+    return jax.tree.map(
+        lambda s, u, m: s + u if m else s, scales, updates, mask
+    )

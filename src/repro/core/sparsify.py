@@ -1,0 +1,171 @@
+"""Sparsification of differential updates (paper §3, Eqs. 2 and 3).
+
+Two paradigms, both implemented as pure-jnp masking ops plus static-shape
+"compaction" variants used by the mesh collectives:
+
+* unstructured (Eq. 2): Gaussian-approximation threshold
+    theta_u = max(|mean - delta*std|, |mean + delta*std|),  theta_u >= step/2
+  any |dw| < theta_u is zeroed.
+
+* structured (Eq. 3): whole convolutional filters (dim-0 slices of a
+  4-D conv weight, i.e. F in R^{N x K x K}) or dense output rows are zeroed
+  when the mean |dF| of the filter falls below
+    theta_s = gamma / M * sum_m |mean(dF_m)|
+  NOTE the paper's Eq. 3 sums |ΔF̄| — the absolute value of the filter means —
+  we follow the more robust reading mean(|ΔF|) per filter for the score and
+  gamma/M * sum(scores) for the threshold; with gamma=1 this is "keep filters
+  whose mean update magnitude is above the average".  Tests pin the behaviour.
+
+* fixed-rate: top-k by magnitude (unstructured) or by row score (structured),
+  matching the constant 96% sparsity used for Table 2 and required for
+  static-shape TPU collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsifyConfig:
+    delta: float = 1.0          # Eq. 2 threshold shift
+    gamma: float = 1.0          # Eq. 3 threshold shift
+    step_size: float = 4.88e-4  # lower clamp for theta_u
+    unstructured: bool = True
+    structured: bool = True
+    # Fixed-rate mode (Table 2): if set, overrides thresholds with top-k.
+    fixed_sparsity: float | None = None  # e.g. 0.96 keeps 4%
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 — unstructured Gaussian-approximation threshold
+# ---------------------------------------------------------------------------
+
+def unstructured_threshold(dw: jax.Array, delta: float, step_size: float) -> jax.Array:
+    """theta_u per Eq. 2 (scalar for one parameter tensor)."""
+    mean = jnp.mean(dw)
+    std = jnp.std(dw)
+    theta = jnp.maximum(jnp.abs(mean - delta * std), jnp.abs(mean + delta * std))
+    return jnp.maximum(theta, step_size / 2.0)
+
+
+def sparsify_unstructured(dw: jax.Array, delta: float = 1.0,
+                          step_size: float = 4.88e-4) -> jax.Array:
+    theta = unstructured_threshold(dw, delta, step_size)
+    return jnp.where(jnp.abs(dw) >= theta, dw, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3 — structured filter / output-row sparsification
+# ---------------------------------------------------------------------------
+
+def row_scores(dw: jax.Array) -> jax.Array:
+    """Mean |dw| per output slice (dim 0), shape (M,).
+
+    For conv weights (M,N,K,K) a "filter" is dw[m]; for dense (M,N) a row;
+    for 1-D params every element is its own row (paper's output-neuron case).
+    """
+    if dw.ndim == 0:
+        return jnp.abs(dw)[None]
+    return jnp.mean(jnp.abs(dw.reshape(dw.shape[0], -1)), axis=1)
+
+
+def structured_threshold(dw: jax.Array, gamma: float) -> jax.Array:
+    scores = row_scores(dw)
+    return gamma * jnp.mean(scores)
+
+
+def sparsify_structured(dw: jax.Array, gamma: float = 1.0) -> jax.Array:
+    if dw.ndim == 0:
+        return dw
+    scores = row_scores(dw)
+    theta = gamma * jnp.mean(scores)
+    keep = scores >= theta  # (M,)
+    keep = keep.reshape((-1,) + (1,) * (dw.ndim - 1))
+    return jnp.where(keep, dw, 0.0)
+
+
+def structured_keep_mask(dw: jax.Array, gamma: float = 1.0) -> jax.Array:
+    """Boolean (M,) mask of kept rows under Eq. 3."""
+    scores = row_scores(dw)
+    return scores >= gamma * jnp.mean(scores)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-rate (static shape) variants — Table 2 / TPU collectives
+# ---------------------------------------------------------------------------
+
+def keep_count(n: int, sparsity: float, minimum: int = 1) -> int:
+    """Static number of kept elements for a fixed sparsity rate."""
+    return max(minimum, int(round(n * (1.0 - sparsity))))
+
+
+def topk_mask_unstructured(dw: jax.Array, sparsity: float) -> jax.Array:
+    """Magnitude top-k mask at fixed sparsity (unstructured, any shape)."""
+    flat = jnp.abs(dw.reshape(-1))
+    k = keep_count(flat.shape[0], sparsity)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(dw) >= thresh)
+
+
+def sparsify_topk_unstructured(dw: jax.Array, sparsity: float) -> jax.Array:
+    return jnp.where(topk_mask_unstructured(dw, sparsity), dw, 0.0)
+
+
+def topk_rows(dw: jax.Array, sparsity: float):
+    """Structured fixed-rate compaction: top-k rows by mean-|.| score.
+
+    Returns (values, indices): values is the gathered (k, *row_shape) dense
+    block, indices the int32 row ids — a static-shape representation whose
+    size is what actually crosses the wire on the mesh.
+    """
+    assert dw.ndim >= 1
+    scores = row_scores(dw)
+    k = keep_count(dw.shape[0], sparsity)
+    _, idx = jax.lax.top_k(scores, k)
+    idx = jnp.sort(idx)  # deterministic layout, friendlier coding
+    return jnp.take(dw, idx, axis=0), idx.astype(jnp.int32)
+
+
+def scatter_rows(values: jax.Array, indices: jax.Array, num_rows: int) -> jax.Array:
+    """Inverse of :func:`topk_rows` — dense tensor with zeros elsewhere."""
+    out_shape = (num_rows,) + values.shape[1:]
+    return jnp.zeros(out_shape, values.dtype).at[indices].set(values)
+
+
+# ---------------------------------------------------------------------------
+# Combined pipeline on one tensor
+# ---------------------------------------------------------------------------
+
+def sparsify(dw: jax.Array, cfg: SparsifyConfig) -> jax.Array:
+    """Apply the configured sparsification (dense-out, mask semantics)."""
+    out = dw
+    if cfg.fixed_sparsity is not None:
+        if cfg.structured and out.ndim >= 2:
+            vals, idx = topk_rows(out, cfg.fixed_sparsity)
+            out = scatter_rows(vals, idx, out.shape[0])
+        elif cfg.unstructured:
+            out = sparsify_topk_unstructured(out, cfg.fixed_sparsity)
+        return out
+    if cfg.structured and out.ndim >= 2:
+        out = sparsify_structured(out, cfg.gamma)
+    if cfg.unstructured:
+        out = sparsify_unstructured(out, cfg.delta, cfg.step_size)
+    return out
+
+
+def sparsify_tree(tree, cfg: SparsifyConfig):
+    return jax.tree.map(lambda x: sparsify(x, cfg), tree)
+
+
+def sparsity_of(x: jax.Array) -> jax.Array:
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+def tree_sparsity(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    zeros = sum(jnp.sum((l == 0)) for l in leaves)
+    total = sum(l.size for l in leaves)
+    return zeros / total

@@ -1,0 +1,81 @@
+"""Deterministic synthetic datasets (offline container — see DESIGN.md §8.1).
+
+Image tasks are class-conditional mixtures: each class owns a set of smooth
+random prototypes; a sample is prototype + structured noise + random shift /
+horizontal flip (the paper's augmentation).  This is genuinely learnable
+(CNNs climb well above chance) while requiring real feature learning, so the
+relative orderings of FL protocols (the paper's claims) are exercised.
+
+Stand-ins: `cifar_like` (32x32x3, 10 classes), `voc_like` (32x32x3, 20),
+`xray_like` (32x32x1, 2 classes).  LM tasks use an order-2 Markov chain over
+the vocabulary so language-model smoke training has learnable structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageTask:
+    name: str
+    num_classes: int
+    channels: int
+    size: int = 32
+    prototypes_per_class: int = 4
+    noise: float = 0.35
+
+
+CIFAR_LIKE = ImageTask("cifar_like", 10, 3)
+VOC_LIKE = ImageTask("voc_like", 20, 3)
+XRAY_LIKE = ImageTask("xray_like", 2, 1)
+
+
+def _smooth_prototypes(key, task: ImageTask) -> jax.Array:
+    """Low-frequency random prototypes (P, H, W, C) in [-1, 1]."""
+    p = task.num_classes * task.prototypes_per_class
+    coarse = jax.random.normal(key, (p, 8, 8, task.channels))
+    protos = jax.image.resize(coarse, (p, task.size, task.size, task.channels),
+                              method="bilinear")
+    return jnp.tanh(protos * 1.5)
+
+
+def make_image_dataset(key: jax.Array, task: ImageTask, num_samples: int):
+    """Returns (images (N,H,W,C) float32 normalised, labels (N,) int32)."""
+    kp, kl, kn, ks, kf = jax.random.split(key, 5)
+    protos = _smooth_prototypes(kp, task)
+    labels = jax.random.randint(kl, (num_samples,), 0, task.num_classes)
+    which = jax.random.randint(ks, (num_samples,), 0, task.prototypes_per_class)
+    base = protos[labels * task.prototypes_per_class + which]
+    noise = task.noise * jax.random.normal(kn, base.shape)
+    imgs = base + noise
+    # random horizontal flip (paper's augmentation)
+    flip = jax.random.bernoulli(kf, 0.5, (num_samples,))
+    imgs = jnp.where(flip[:, None, None, None], imgs[:, :, ::-1, :], imgs)
+    # normalise
+    imgs = (imgs - jnp.mean(imgs)) / (jnp.std(imgs) + 1e-6)
+    return imgs.astype(jnp.float32), labels.astype(jnp.int32)
+
+
+def make_markov_lm(key: jax.Array, vocab: int, num_seqs: int, seq_len: int,
+                   branching: int = 4):
+    """Order-1 Markov token sequences: each token has `branching` likely
+    successors — a learnable LM task with ~log2(branching) bits/token floor."""
+    kt, ks, kw = jax.random.split(key, 3)
+    successors = jax.random.randint(kt, (vocab, branching), 0, vocab)
+    start = jax.random.randint(ks, (num_seqs,), 0, vocab)
+    choice = jax.random.randint(kw, (num_seqs, seq_len), 0, branching)
+
+    def step(tok, ch):
+        nxt = successors[tok, ch]
+        return nxt, nxt
+
+    def one(seq_start, chs):
+        _, toks = jax.lax.scan(step, seq_start, chs)
+        return toks
+
+    toks = jax.vmap(one)(start, choice)
+    inputs = jnp.concatenate([start[:, None], toks[:, :-1]], axis=1)
+    return inputs.astype(jnp.int32), toks.astype(jnp.int32)

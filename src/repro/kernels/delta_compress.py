@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused differential-update compression (paper §3 on the
+mesh wire format) — threshold sparsify (Eq. 2 style) + per-block symmetric
+int8 quantization in ONE pass over the delta.
+
+The unfused jnp pipeline reads the delta three times (mask, max, quantize);
+this kernel streams each 1-D block through VMEM once and emits the int8
+payload + per-block scale, which is exactly what dist/collectives.py puts on
+the wire.  Memory-bound: one HBM read, 1/4 + eps write.
+
+Companion: `delta_apply` — fused dequant + server-side apply (W += c·q·s).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compress_kernel(d_ref, theta_ref, q_ref, s_ref):
+    d = d_ref[...].astype(jnp.float32)
+    theta = theta_ref[0]
+    kept = jnp.where(jnp.abs(d) >= theta, d, 0.0)
+    amax = jnp.max(jnp.abs(kept))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(kept / scale), -127, 127).astype(jnp.int8)
+    s_ref[0] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def delta_compress(delta: jax.Array, theta: jax.Array, *, block: int = 1024,
+                   interpret: bool = False):
+    """delta: (n,) n % block == 0; theta: scalar threshold (Eq. 2 output).
+
+    Returns (q int8 (n,), scales f32 (n/block,)).
+    """
+    n = delta.shape[0]
+    assert n % block == 0, (n, block)
+    nblk = n // block
+    theta_arr = jnp.broadcast_to(jnp.asarray(theta, jnp.float32), (1,))
+    return pl.pallas_call(
+        _compress_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int8),
+                   jax.ShapeDtypeStruct((nblk,), jnp.float32)],
+        interpret=interpret,
+    )(delta, theta_arr)
+
+
+def _apply_kernel(w_ref, q_ref, s_ref, coef_ref, o_ref):
+    deq = q_ref[...].astype(jnp.float32) * s_ref[0]
+    o_ref[...] = (w_ref[...].astype(jnp.float32)
+                  + coef_ref[0] * deq).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def delta_apply(w: jax.Array, q: jax.Array, scales: jax.Array,
+                coef: float = 1.0, *, block: int = 1024,
+                interpret: bool = False) -> jax.Array:
+    """Fused dequantize + apply: returns w + coef * (q * scale)."""
+    n = w.shape[0]
+    assert n % block == 0 and q.shape == (n,)
+    nblk = n // block
+    coef_arr = jnp.broadcast_to(jnp.asarray(coef, jnp.float32), (1,))
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), w.dtype),
+        interpret=interpret,
+    )(w, q, scales, coef_arr)

@@ -1,0 +1,66 @@
+"""Jit'd public wrappers for the Pallas kernels: shape padding + dispatch.
+
+On CPU (this container) the kernels run with interpret=True; on real TPU the
+same call sites compile to Mosaic.  `INTERPRET` flips automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import delta_compress as dc
+from repro.kernels import row_stats as rs
+from repro.kernels import scaled_matmul as sm
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def scaled_matmul(x, w, s, *, bm=128, bn=128, bk=128):
+    """y = x @ (s ⊙ W).T with padding to block multiples."""
+    x2, M = _pad_to(x, 0, bm)
+    x2, K = _pad_to(x2, 1, bk)
+    w2, N = _pad_to(w, 0, bn)
+    w2, _ = _pad_to(w2, 1, bk)
+    s2, _ = _pad_to(s, 0, bn)
+    out = sm.scaled_matmul(x2, w2, s2, bm=bm, bn=bn, bk=bk,
+                           interpret=INTERPRET)
+    return out[:M, :N]
+
+
+def delta_compress(delta, theta, *, block=1024):
+    flat = delta.reshape(-1)
+    flat, n = _pad_to(flat, 0, block)
+    q, scales = dc.delta_compress(flat, theta, block=block,
+                                  interpret=INTERPRET)
+    return q[:n].reshape(delta.shape) if n != flat.shape[0] else \
+        (q.reshape(delta.shape) if n == q.shape[0] else q[:n]), scales
+
+
+def delta_compress_flat(delta, theta, *, block=1024):
+    """No-unpad variant for pre-padded buckets (the dist path)."""
+    return dc.delta_compress(delta, theta, block=block, interpret=INTERPRET)
+
+
+def delta_apply(w, q, scales, coef=1.0, *, block=1024):
+    return dc.delta_apply(w, q, scales, coef, block=block,
+                          interpret=INTERPRET)
+
+
+def row_stats(w, *, bm=128, bn=512):
+    w2, M = _pad_to(w, 0, bm)
+    w2, N = _pad_to(w2, 1, bn)
+    out = rs.row_stats(w2, bm=bm, bn=bn, interpret=INTERPRET)
+    # padding zeros dilute the mean; rescale to the true column count
+    return out[:M] * (w2.shape[1] / N)

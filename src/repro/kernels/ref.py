@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scaled_matmul(x: jax.Array, w: jax.Array, s: jax.Array) -> jax.Array:
+    """y = x @ (s ⊙ W).T — Eq. 4 applied at matmul time.
+
+    x: (M, K); w: (N, K) output-rows-first; s: (N,).  float32 accumulate.
+    """
+    scaled = w.astype(jnp.float32) * s.astype(jnp.float32)[:, None]
+    return jnp.dot(x.astype(jnp.float32), scaled.T,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def delta_compress(delta: jax.Array, theta: float, block: int):
+    """Fused Eq.2-style threshold sparsify + per-block symmetric int8 quant.
+
+    delta: (n,) with n % block == 0.  Returns (q int8 (n,), scales f32
+    (n/block,)): kept = |d| >= theta, scale = max|kept|/127 (1 if all zero).
+    """
+    d = delta.astype(jnp.float32).reshape(-1, block)
+    kept = jnp.where(jnp.abs(d) >= theta, d, 0.0)
+    amax = jnp.max(jnp.abs(kept), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(kept / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def delta_apply(w: jax.Array, q: jax.Array, scales: jax.Array, block: int,
+                mean_coef: float = 1.0) -> jax.Array:
+    """Fused dequant + apply: W += coef * (q * scale) (server-side update)."""
+    deq = (q.astype(jnp.float32).reshape(-1, block)
+           * scales[:, None]).reshape(w.shape)
+    return (w.astype(jnp.float32) + mean_coef * deq).astype(w.dtype)
+
+
+def row_stats(w: jax.Array) -> jax.Array:
+    """Per-output-row mean |w| — the Eq. 3 structured-sparsity score."""
+    return jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=1)

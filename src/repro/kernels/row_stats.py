@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: per-output-row mean-|.| scores (Eq. 3 structured
+sparsification).  Reduction over the row tiled through VMEM; partial sums
+accumulate in a scratch tile across the column grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(w_ref, o_ref, acc_ref, *, ncols: int, n_total: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.sum(jnp.abs(w_ref[...].astype(jnp.float32)), axis=1)
+
+    @pl.when(pl.program_id(1) == ncols - 1)
+    def _done():
+        o_ref[...] = acc_ref[...] / n_total
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def row_stats(w: jax.Array, *, bm: int = 128, bn: int = 512,
+              interpret: bool = False) -> jax.Array:
+    """w: (M, N) -> (M,) mean |w| per row. M % bm == 0, N % bn == 0."""
+    M, N = w.shape
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    ncols = N // bn
+    return pl.pallas_call(
+        functools.partial(_kernel, ncols=ncols, n_total=N),
+        grid=(M // bm, ncols),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm,), jnp.float32)],
+        interpret=interpret,
+    )(w)

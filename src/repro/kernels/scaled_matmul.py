@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: matmul with the paper's per-output-row scaling factors
+(Eq. 4) fused into the MXU epilogue — S never materialises a scaled weight
+copy (the GPU implementation's wrapper-module multiply becomes a free fma on
+the accumulator tile).
+
+Grid (M/bm, N/bn, K/bk); K is the reduction axis, accumulated in a VMEM
+scratch tile; the scale is applied once, when the last K block retires.
+Block shapes default to MXU-aligned 128 multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32).T,
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        # epilogue: per-output-row scale (rows of W = columns of the output)
+        o_ref[...] = (acc_ref[...] * s_ref[...][None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def scaled_matmul(x: jax.Array, w: jax.Array, s: jax.Array, *,
+                  bm: int = 128, bn: int = 128, bk: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """y[m, n] = sum_k x[m, k] * w[n, k] * s[n].
+
+    x: (M, K); w: (N, K); s: (N,). M, K, N must divide the block shapes
+    (ops.py pads otherwise).
+    """
+    M, K = x.shape
+    N, K2 = w.shape
+    assert K == K2 and s.shape == (N,)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, s)

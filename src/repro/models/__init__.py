@@ -1,0 +1,6 @@
+from repro.models.cnn import (CNNModel, mobilenet_proj_only_predicate,
+                              mobilenetv2_small, resnet18_small, vgg11_thinned,
+                              vgg16_tiny)
+
+__all__ = ["CNNModel", "vgg11_thinned", "vgg16_tiny", "resnet18_small",
+           "mobilenetv2_small", "mobilenet_proj_only_predicate"]

@@ -1,0 +1,346 @@
+"""GQA attention: chunked online-softmax forward (train/prefill) and
+flash-decode-style cached decode with sequence-sharded KV + LSE combine.
+
+Written as per-shard code (see common.ShardCtx):
+
+* train/prefill — Megatron sequence-parallel: gather the seq-sharded residual
+  stream, column-parallel q/k/v over local heads, chunked attention (online
+  softmax, memory O(chunk^2)), row-parallel output proj, reduce-scatter back.
+  KV projections are replicated when n_kv_heads doesn't divide tp (GQA with
+  few KV heads) — the paper-assigned archs all have kv_heads < 16.
+
+* decode — the KV cache is laid out (kv_groups x seq_parts) across the tp
+  axis: each shard owns one kv-head group and 1/r of the sequence, computes
+  partial attention for ALL q heads of its group, and partials are combined
+  with a log-sum-exp psum within the group (axis_index_groups).  This is the
+  TPU-native flash-decoding analogue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ShardCtx, softcap
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnParamsSpec:
+    """Static split of heads across the tp axis (built by dist/sharding.py)."""
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_model: int
+    tp: int = 1
+    replicated: bool = False  # tiny archs: full attention on every shard
+
+    @property
+    def q_local(self) -> int:
+        return self.n_heads if self.replicated else self.n_heads // self.tp
+
+    @property
+    def kv_sharded(self) -> bool:
+        return (not self.replicated) and self.n_kv_heads % self.tp == 0
+
+    @property
+    def kv_local(self) -> int:
+        return self.n_kv_heads // self.tp if self.kv_sharded else self.n_kv_heads
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    # ---- decode plan: kv_groups x seq_parts == tp --------------------
+    @property
+    def decode_kv_shards(self) -> int:
+        if self.replicated:
+            return 1
+        return min(self.n_kv_heads, self.tp)
+
+    @property
+    def decode_seq_parts(self) -> int:
+        return max(1, self.tp // self.decode_kv_shards)
+
+    @property
+    def decode_q_local(self) -> int:
+        """q heads computed per shard in decode (its kv-group's heads)."""
+        return self.n_heads // self.decode_kv_shards
+
+    @property
+    def decode_kv_local(self) -> int:
+        return self.n_kv_heads // self.decode_kv_shards
+
+
+def init_attn(key, spec: AttnParamsSpec, dtype=jnp.float32):
+    """Per-shard parameter shapes for the TRAIN/PREFILL sharding."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd, d = spec.head_dim, spec.d_model
+    return {
+        "wq": common.he_init(kq, spec.q_local * hd, d, dtype),
+        "wk": common.he_init(kk, spec.kv_local * hd, d, dtype),
+        "wv": common.he_init(kv, spec.kv_local * hd, d, dtype),
+        "wo": common.he_init(ko, d, spec.q_local * hd, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool, window=None,
+                      attn_softcap: float | None = None,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      q_offset=0, k_offset=0):
+    """q: (B, Sq, G, Hg, hd); k, v: (B, Sk, G, hd) -> (B, Sq, G, Hg, hd).
+
+    G = kv-head groups, Hg = q heads per group.  `window` may be a traced
+    scalar (per-layer local/global patterns); None = full attention.
+    Memory is bounded by O(q_chunk * kv_chunk) per (B, G, Hg).
+    """
+    B, Sq, G, Hg, hd = q.shape
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    assert nq * q_chunk == Sq and nk * kv_chunk == Sk, (Sq, Sk, q_chunk, kv_chunk)
+    scale = hd ** -0.5
+
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, G, Hg, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kv_chunk, G, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kv_chunk, G, hd), 1, 0)
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, q_chunk)
+    k_pos = k_offset + jnp.arange(Sk).reshape(nk, kv_chunk)
+
+    def q_block(_, qin):
+        qc, qp = qin  # (B, qc, G, Hg, hd), (qc,)
+
+        def kv_block(carry, kin):
+            m, l, acc = carry
+            kc, vc, kp = kin
+            s = jnp.einsum("bqghd,bkgd->bghqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, attn_softcap)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window is not None:
+                mask &= (qp[:, None] - kp[None, :]) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bghqk,bkgd->bghqd", p, vc, preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, G, Hg, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, G, Hg, q_chunk), jnp.float32),
+                jnp.zeros((B, G, Hg, q_chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, (ks, vs, k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,G,Hg,qc,hd)
+        return None, jnp.moveaxis(out, 3, 1)                 # (B,qc,G,Hg,hd)
+
+    _, outs = jax.lax.scan(q_block, None, (qs, q_pos))       # (nq,B,qc,G,Hg,hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, G, Hg, hd)
+    return out.astype(q.dtype)
+
+
+def attn_forward(params, x_sp, spec: AttnParamsSpec, ctx: ShardCtx, *,
+                 positions=None, causal=True, window=None,
+                 attn_softcap=None, rope_theta=10000.0,
+                 mrope_sections=None, mrope_positions=None,
+                 kv_override=None, q_chunk=512, kv_chunk=512,
+                 return_kv: bool = False, defer_reduce: bool = False):
+    """Sequence-parallel attention block body (no norms/residual).
+
+    x_sp: (B, S/tp, D) seq-sharded (or (B, S, D) when tp == 1).
+    kv_override: (k, v) tuple for cross-attention (already shaped
+    (B, Sk, kv_local, hd)).  Returns (B, S/tp, D), plus (k, v) if requested.
+    """
+    x = common.sp_all_gather(x_sp, ctx)  # (B, S, D)
+    B, S, _ = x.shape
+    hd = spec.head_dim
+
+    q = (x @ params["wq"].T).reshape(B, S, spec.q_local, hd)
+    if kv_override is None:
+        k = (x @ params["wk"].T).reshape(B, S, spec.kv_local, hd)
+        v = (x @ params["wv"].T).reshape(B, S, spec.kv_local, hd)
+    else:
+        k, v = kv_override
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if mrope_sections is not None:
+        mp = (mrope_positions if mrope_positions is not None
+              else common.text_mrope_positions(positions))
+        q = common.apply_mrope(q, mp, mrope_sections, rope_theta)
+        if kv_override is None:
+            k = common.apply_mrope(k, mp, mrope_sections, rope_theta)
+    elif rope_theta is not None:
+        q = common.apply_rope(q, positions, rope_theta)
+        if kv_override is None:
+            k = common.apply_rope(k, positions, rope_theta)
+
+    # ---- group q heads with their kv heads -------------------------------
+    if spec.kv_sharded or spec.replicated or ctx.tp == 1:
+        G = k.shape[2]
+        Hg = spec.q_local // G
+        qg = q.reshape(B, S, G, Hg, hd)
+        kg, vg = k, v
+    else:
+        # kv replicated, q col-parallel: select the kv groups this shard's
+        # q heads belong to. q heads [i0, i0+q_local) with i0 = idx*q_local.
+        idx = common.axis_index(ctx)
+        gsz = spec.group_size
+        if spec.q_local >= gsz:
+            # local q heads span whole groups
+            G = spec.q_local // gsz
+            g0 = idx * G
+            kg = jax.lax.dynamic_slice_in_dim(k, g0, G, axis=2)
+            vg = jax.lax.dynamic_slice_in_dim(v, g0, G, axis=2)
+            qg = q.reshape(B, S, G, gsz, hd)
+        else:
+            # several shards share one group
+            G = 1
+            g0 = (idx * spec.q_local) // gsz
+            kg = jax.lax.dynamic_slice_in_dim(k, g0, 1, axis=2)
+            vg = jax.lax.dynamic_slice_in_dim(v, g0, 1, axis=2)
+            qg = q.reshape(B, S, 1, spec.q_local, hd)
+
+    out = chunked_attention(qg, kg, vg, causal=causal, window=window,
+                            attn_softcap=attn_softcap,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(B, S, spec.q_local * hd)
+    y = out @ params["wo"].T                    # row-parallel partial (B,S,D)
+    if defer_reduce:
+        return y                                 # caller fuses the reduce
+    y = common.sp_reduce_scatter(y, ctx)        # (B, S/tp, D)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# cached decode (one token)
+# ---------------------------------------------------------------------------
+
+def decode_groups(spec: AttnParamsSpec, ctx: ShardCtx):
+    """axis_index_groups for the within-group LSE combine, or None."""
+    if ctx.tp == 1 or spec.decode_seq_parts == 1:
+        return None
+    r = spec.decode_seq_parts
+    return [[g * r + j for j in range(r)] for g in range(ctx.tp // r)]
+
+
+def decode_attn_forward(params, x, cache_k, cache_v, pos, spec: AttnParamsSpec,
+                        ctx: ShardCtx, *, window=None, attn_softcap=None,
+                        rope_theta=10000.0, mrope_sections=None,
+                        cross_kv=None):
+    """One-token cached attention, sequence-sharded KV cache.
+
+    x: (B, D) replicated over tp. cache_k/v: (B, kv_dec_local, S_loc, hd).
+    pos: scalar int32 — index of the token being generated.
+    params here use the DECODE sharding: wq (dec_q_local*hd, d),
+    wk/wv (kv_dec_local*hd, d) for this shard's kv group, wo (d, keep*hd).
+    Returns (y (B, D) [replicated], new_cache_k, new_cache_v).
+    """
+    B, d = x.shape
+    hd = spec.head_dim
+    r = spec.decode_seq_parts
+    S_loc = cache_k.shape[2]
+    idx = common.axis_index(ctx)
+    part = jnp.mod(idx, r)
+
+    q = (x @ params["wq"].T).reshape(B, spec.decode_q_local if not spec.replicated
+                                     else spec.n_heads, hd)
+    pos_b = jnp.full((B,), pos)[:, None]
+    if mrope_sections is not None:
+        mp = common.text_mrope_positions(pos_b)
+        q = common.apply_mrope(q[:, None], mp, mrope_sections, rope_theta)[:, 0]
+    elif rope_theta is not None:
+        q = common.apply_rope(q[:, None], pos_b, rope_theta)[:, 0]
+
+    if cross_kv is None:
+        k_new = (x @ params["wk"].T).reshape(B, cache_k.shape[1], hd)
+        v_new = (x @ params["wv"].T).reshape(B, cache_v.shape[1], hd)
+        if mrope_sections is not None:
+            mp = common.text_mrope_positions(pos_b)
+            k_new = common.apply_mrope(k_new[:, None], mp, mrope_sections, rope_theta)[:, 0]
+        elif rope_theta is not None:
+            k_new = common.apply_rope(k_new[:, None], pos_b, rope_theta)[:, 0]
+        # ring-buffer write: global slot pos % S  (S = r * S_loc); the shard
+        # owning that slot performs the write.
+        S_total = r * S_loc
+        slot = jnp.mod(pos, S_total)
+        owner = slot // S_loc
+        local_slot = jnp.clip(slot - owner * S_loc, 0, S_loc - 1)
+        upd_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new[:, :, None, :], local_slot, axis=2)
+        upd_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new[:, :, None, :], local_slot, axis=2)
+        is_owner = (part == owner)
+        cache_k = jnp.where(is_owner, upd_k, cache_k)
+        cache_v = jnp.where(is_owner, upd_v, cache_v)
+        kq, vq = cache_k, cache_v
+        # validity: a local slot holds a real token iff its global index
+        # (part*S_loc + j) <= pos (ring semantics: pos-S_total < g <= pos)
+        g = part * S_loc + jnp.arange(S_loc)
+        valid = (g <= pos) & (g > pos - S_total)
+        if window is not None:
+            valid &= (pos - g) < window
+    else:
+        kq, vq = cross_kv
+        valid = jnp.ones((kq.shape[2],), bool)
+
+    G_loc = kq.shape[1]
+    Hg = q.shape[1] // G_loc
+    qg = q.reshape(B, G_loc, Hg, hd)
+    s = jnp.einsum("bghd,bgsd->bghs", qg, kq,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    s = softcap(s, attn_softcap)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bghs,bgsd->bghd", p, vq, preferred_element_type=jnp.float32)
+
+    groups = decode_groups(spec, ctx)
+    if groups is not None:
+        m_g = jax.lax.pmax(m, ctx.tp_axis, axis_index_groups=groups)
+        w = jnp.exp(m - m_g)
+        l = jax.lax.psum(l * w, ctx.tp_axis, axis_index_groups=groups)
+        o = jax.lax.psum(o * w[..., None], ctx.tp_axis, axis_index_groups=groups)
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    out = out.reshape(B, -1, hd)  # (B, dec_q_local, hd)
+
+    if not spec.replicated and ctx.tp > 1:
+        # keep this shard's q-head slice, row-parallel wo + psum
+        keep = spec.n_heads // ctx.tp
+        off = jnp.mod(idx, r) * keep
+        out = jax.lax.dynamic_slice_in_dim(out, off, keep, axis=1)
+        y = out.reshape(B, keep * hd) @ params["wo"].T
+        y = jax.lax.psum(y, ctx.tp_axis)
+    else:
+        y = out.reshape(B, -1) @ params["wo"].T
+    return y, cache_k, cache_v
+
+
+def init_decode_attn(key, spec: AttnParamsSpec, dtype=jnp.float32):
+    """Decode-sharded attention params (per shard)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd, d = spec.head_dim, spec.d_model
+    q_loc = spec.n_heads if spec.replicated else spec.decode_q_local
+    kv_loc = spec.decode_kv_local
+    keep = spec.n_heads if (spec.replicated or spec.tp == 1) else spec.n_heads // spec.tp
+    return {
+        "wq": common.he_init(kq, q_loc * hd, d, dtype),
+        "wk": common.he_init(kk, kv_loc * hd, d, dtype),
+        "wv": common.he_init(kv, kv_loc * hd, d, dtype),
+        "wo": common.he_init(ko, d, keep * hd, dtype),
+    }

@@ -1,0 +1,252 @@
+"""CNN model families used by the paper (VGG / ResNet / MobileNetV2-style),
+in pure JAX with functional params + BatchNorm running-stat state.
+
+Conventions
+  * conv weights: (O, I, Kh, Kw) — dim 0 is the *filter* axis the paper's
+    scaling factors and structured sparsification operate on (Eqs. 3/4).
+  * dense weights: (O, I) — dim 0 is the output-neuron axis.
+  * `apply(params, state, x, train)` returns (logits, new_state); BatchNorm
+    running stats live in `state` so Algorithm 1's "freeze BN during
+    S-training" is just `train=False`.
+  * scaling factors are applied by the caller (protocol) through
+    `scaling.apply_scales_tree` — models see already-scaled params, exactly
+    like the paper's wrapper modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+_CONV_DN = ("NHWC", "OIHW", "NHWC")
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+# ------------------------------------------------------------------ layers
+
+def conv_init(key, out_c, in_c, k):
+    fan_in = in_c * k * k
+    w = jax.random.normal(key, (out_c, in_c, k, k)) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w.astype(jnp.float32)}
+
+
+def conv_apply(p, x, stride=1, padding="SAME", groups=1):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=_CONV_DN, feature_group_count=groups)
+
+
+def dense_init(key, out_d, in_d):
+    w = jax.random.normal(key, (out_d, in_d)) * jnp.sqrt(2.0 / in_d)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((out_d,), jnp.float32)}
+
+
+def dense_apply(p, x):
+    return x @ p["w"].T + p["b"]
+
+
+def bn_init(c):
+    return ({"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)},
+            {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)})
+
+
+def bn_apply(p, s, x, train: bool):
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+        new_s = {"mean": BN_MOMENTUM * s["mean"] + (1 - BN_MOMENTUM) * mean,
+                 "var": BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * jax.lax.rsqrt(var + BN_EPS) * p["gamma"] + p["beta"]
+    return y, new_s
+
+
+# ------------------------------------------------------------------ model API
+
+@dataclasses.dataclass(frozen=True)
+class CNNModel:
+    name: str
+    init: Callable  # key -> (params, state)
+    apply: Callable  # (params, state, x, train) -> (logits, new_state)
+
+
+# ------------------------------------------------------------------ VGG
+
+def make_vgg(name: str, widths, num_classes: int, in_channels: int = 3,
+             dense_width: int = 128, pool_after=(0, 1, 3, 5, 7)) -> CNNModel:
+    """Thinned VGG11 (paper §5.1: [32,64,128,...,128], 128-wide dense)."""
+    pool_after = set(pool_after)
+
+    def init(key):
+        keys = jax.random.split(key, len(widths) + 2)
+        params, state = {}, {}
+        in_c = in_channels
+        for i, w in enumerate(widths):
+            p_bn, s_bn = bn_init(w)
+            params[f"conv{i}"] = conv_init(keys[i], w, in_c, 3)
+            params[f"bn{i}"] = p_bn
+            state[f"bn{i}"] = s_bn
+            in_c = w
+        params["fc0"] = dense_init(keys[-2], dense_width, widths[-1])
+        params["fc1"] = dense_init(keys[-1], num_classes, dense_width)
+        return params, state
+
+    def apply(params, state, x, train=False):
+        new_state = dict(state)
+        for i in range(len(widths)):
+            x = conv_apply(params[f"conv{i}"], x)
+            x, new_state[f"bn{i}"] = bn_apply(params[f"bn{i}"], state[f"bn{i}"], x, train)
+            x = jax.nn.relu(x)
+            if i in pool_after:
+                x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                          (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = jnp.mean(x, axis=(1, 2))  # global average pool
+        x = jax.nn.relu(dense_apply(params["fc0"], x))
+        return dense_apply(params["fc1"], x), new_state
+
+    return CNNModel(name, init, apply)
+
+
+def vgg11_thinned(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
+    return make_vgg("vgg11_thinned", [32, 64, 128, 128, 128, 128, 128, 128],
+                    num_classes, in_channels)
+
+
+def vgg16_tiny(num_classes: int = 2, in_channels: int = 1) -> CNNModel:
+    return make_vgg("vgg16_tiny", [32, 32, 64, 64, 128, 128, 128, 128, 128, 128],
+                    num_classes, in_channels, pool_after=(1, 3, 5, 7, 9))
+
+
+# ------------------------------------------------------------------ ResNet
+
+def make_resnet(name: str, widths, blocks_per_stage: int, num_classes: int,
+                in_channels: int = 3) -> CNNModel:
+    """ResNet18-style basic blocks, thinned for 32x32 inputs."""
+
+    def init(key):
+        params, state = {}, {}
+        keys = iter(jax.random.split(key, 4 + 4 * len(widths) * blocks_per_stage + 2))
+        params["stem"] = conv_init(next(keys), widths[0], in_channels, 3)
+        p, s = bn_init(widths[0])
+        params["stem_bn"], state["stem_bn"] = p, s
+        in_c = widths[0]
+        for si, w in enumerate(widths):
+            for bi in range(blocks_per_stage):
+                pre = f"s{si}b{bi}"
+                params[f"{pre}_c1"] = conv_init(next(keys), w, in_c, 3)
+                params[f"{pre}_bn1"], state[f"{pre}_bn1"] = bn_init(w)
+                params[f"{pre}_c2"] = conv_init(next(keys), w, w, 3)
+                params[f"{pre}_bn2"], state[f"{pre}_bn2"] = bn_init(w)
+                if in_c != w:
+                    params[f"{pre}_proj"] = conv_init(next(keys), w, in_c, 1)
+                in_c = w
+        params["fc"] = dense_init(next(keys), num_classes, widths[-1])
+        return params, state
+
+    def apply(params, state, x, train=False):
+        new_state = dict(state)
+        x = conv_apply(params["stem"], x)
+        x, new_state["stem_bn"] = bn_apply(params["stem_bn"], state["stem_bn"], x, train)
+        x = jax.nn.relu(x)
+        in_c = widths[0]
+        for si, w in enumerate(widths):
+            for bi in range(blocks_per_stage):
+                pre = f"s{si}b{bi}"
+                stride = 2 if (bi == 0 and si > 0) else 1
+                h = conv_apply(params[f"{pre}_c1"], x, stride=stride)
+                h, new_state[f"{pre}_bn1"] = bn_apply(params[f"{pre}_bn1"], state[f"{pre}_bn1"], h, train)
+                h = jax.nn.relu(h)
+                h = conv_apply(params[f"{pre}_c2"], h)
+                h, new_state[f"{pre}_bn2"] = bn_apply(params[f"{pre}_bn2"], state[f"{pre}_bn2"], h, train)
+                sc = x
+                if f"{pre}_proj" in params:
+                    sc = conv_apply(params[f"{pre}_proj"], x, stride=stride)
+                elif stride != 1:
+                    sc = x[:, ::stride, ::stride, :]
+                x = jax.nn.relu(h + sc)
+                in_c = w
+        x = jnp.mean(x, axis=(1, 2))
+        return dense_apply(params["fc"], x), new_state
+
+    return CNNModel(name, init, apply)
+
+
+def resnet18_small(num_classes: int = 20, in_channels: int = 3) -> CNNModel:
+    return make_resnet("resnet18_small", [32, 64, 128, 128], 2, num_classes, in_channels)
+
+
+# ------------------------------------------------------------------ MobileNetV2
+
+def make_mobilenet(name: str, num_classes: int, in_channels: int = 3,
+                   blocks=((16, 1), (24, 2), (32, 2), (64, 1)), expand: int = 4) -> CNNModel:
+    """Inverted-residual blocks: expand 1x1 -> depthwise 3x3 -> project 1x1.
+    The paper's "S only on output convolutions of each inverted residual
+    block" variant is expressed by a scale predicate on '_proj' paths."""
+
+    def init(key):
+        params, state = {}, {}
+        keys = iter(jax.random.split(key, 3 + 6 * sum(n for _, n in blocks) + 2))
+        stem_w = 16
+        params["stem"] = conv_init(next(keys), stem_w, in_channels, 3)
+        params["stem_bn"], state["stem_bn"] = bn_init(stem_w)
+        in_c = stem_w
+        for si, (w, n) in enumerate(blocks):
+            for bi in range(n):
+                pre = f"ir{si}_{bi}"
+                mid = in_c * expand
+                params[f"{pre}_expand"] = conv_init(next(keys), mid, in_c, 1)
+                params[f"{pre}_bn1"], state[f"{pre}_bn1"] = bn_init(mid)
+                params[f"{pre}_dw"] = conv_init(next(keys), mid, 1, 3)  # depthwise
+                params[f"{pre}_bn2"], state[f"{pre}_bn2"] = bn_init(mid)
+                params[f"{pre}_proj"] = conv_init(next(keys), w, mid, 1)
+                params[f"{pre}_bn3"], state[f"{pre}_bn3"] = bn_init(w)
+                in_c = w
+        params["head"] = conv_init(next(keys), 128, in_c, 1)
+        params["head_bn"], state["head_bn"] = bn_init(128)
+        params["fc"] = dense_init(next(keys), num_classes, 128)
+        return params, state
+
+    def apply(params, state, x, train=False):
+        new_state = dict(state)
+        x = conv_apply(params["stem"], x, stride=1)
+        x, new_state["stem_bn"] = bn_apply(params["stem_bn"], state["stem_bn"], x, train)
+        x = jax.nn.relu6(x)
+        in_c = 16
+        for si, (w, n) in enumerate(blocks):
+            for bi in range(n):
+                pre = f"ir{si}_{bi}"
+                stride = 2 if (bi == 0 and si > 0) else 1
+                mid = in_c * expand
+                h = conv_apply(params[f"{pre}_expand"], x)
+                h, new_state[f"{pre}_bn1"] = bn_apply(params[f"{pre}_bn1"], state[f"{pre}_bn1"], h, train)
+                h = jax.nn.relu6(h)
+                h = conv_apply(params[f"{pre}_dw"], h, stride=stride, groups=mid)
+                h, new_state[f"{pre}_bn2"] = bn_apply(params[f"{pre}_bn2"], state[f"{pre}_bn2"], h, train)
+                h = jax.nn.relu6(h)
+                h = conv_apply(params[f"{pre}_proj"], h)
+                h, new_state[f"{pre}_bn3"] = bn_apply(params[f"{pre}_bn3"], state[f"{pre}_bn3"], h, train)
+                x = (x + h) if (stride == 1 and in_c == w) else h
+                in_c = w
+        x = conv_apply(params["head"], x)
+        x, new_state["head_bn"] = bn_apply(params["head_bn"], state["head_bn"], x, train)
+        x = jax.nn.relu6(x)
+        x = jnp.mean(x, axis=(1, 2))
+        return dense_apply(params["fc"], x), new_state
+
+    return CNNModel(name, init, apply)
+
+
+def mobilenetv2_small(num_classes: int = 20, in_channels: int = 3) -> CNNModel:
+    return make_mobilenet("mobilenetv2_small", num_classes, in_channels)
+
+
+def mobilenet_proj_only_predicate(path: str, leaf) -> bool:
+    """Paper's reduced-S MobileNetV2 variant: scales only on the output
+    (projection) convolutions of each inverted-residual block."""
+    return leaf.ndim >= 2 and ("_proj" in path or path.startswith(("head", "fc")))

@@ -1,0 +1,163 @@
+"""Shared transformer building blocks, written as *per-shard* code.
+
+Every layer function takes a ``ShardCtx``: under ``tp_size == 1`` (smoke
+tests, simulation regime) all collectives are no-ops; inside ``shard_map``
+over the production mesh the same code runs Megatron-style tensor parallelism
+with sequence-parallel residual streams.
+
+Weight layout convention matches the paper's scaling/sparsification axis:
+all matrices are (out_dim, in_dim) with dim 0 = output rows (= "filters"),
+and matmuls are ``x @ w.T`` (see core/scaling.py, kernels/scaled_matmul.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Per-shard execution context (all static)."""
+    tp_axis: str | None = None        # model axis name inside shard_map
+    tp_size: int = 1
+    dp_axes: tuple = ()               # client/data axes (grad sync happens outside)
+    attn_replicated: bool = False     # tiny archs whose heads don't split tp-ways
+    seq_parallel: bool = True         # residual stream sharded on seq over tp
+    sp_int8: bool = False             # int8-quantized SP all-gathers (§Perf)
+
+    @property
+    def tp(self) -> int:
+        return self.tp_size if self.tp_axis else 1
+
+
+UNSHARDED = ShardCtx()
+
+
+def psum_tp(x, ctx: ShardCtx):
+    if ctx.tp_axis is None or ctx.tp_size == 1:
+        return x
+    return jax.lax.psum(x, ctx.tp_axis)
+
+
+def axis_index(ctx: ShardCtx):
+    if ctx.tp_axis is None or ctx.tp_size == 1:
+        return jnp.zeros((), jnp.int32)
+    return jax.lax.axis_index(ctx.tp_axis)
+
+
+def sp_all_gather(x, ctx: ShardCtx, axis: int = 1):
+    """Gather the sequence-parallel shard dim back to full sequence.
+
+    With ctx.sp_int8 the payload is per-token symmetric int8 (+f16 scales):
+    a beyond-paper §Perf lever that halves gather bytes on the wire."""
+    if ctx.tp_axis is None or ctx.tp_size == 1 or not ctx.seq_parallel:
+        return x
+    if not ctx.sp_int8:
+        return jax.lax.all_gather(x, ctx.tp_axis, axis=axis, tiled=True)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    qg = jax.lax.all_gather(q, ctx.tp_axis, axis=axis, tiled=True)
+    sg = jax.lax.all_gather(scale.astype(jnp.float16), ctx.tp_axis,
+                            axis=axis, tiled=True)
+    return (qg.astype(jnp.float32) * sg.astype(jnp.float32)).astype(x.dtype)
+
+
+def sp_reduce_scatter(x, ctx: ShardCtx, axis: int = 1):
+    """Sum partial outputs across tp and keep this shard's seq slice."""
+    if ctx.tp_axis is None or ctx.tp_size == 1:
+        return x
+    if not ctx.seq_parallel:
+        return jax.lax.psum(x, ctx.tp_axis)
+    return jax.lax.psum_scatter(x, ctx.tp_axis, scatter_dimension=axis, tiled=True)
+
+
+# ---------------------------------------------------------------- init
+
+def he_init(key, out_d, in_d, dtype=jnp.float32):
+    return (jax.random.normal(key, (out_d, in_d)) * jnp.sqrt(1.0 / in_d)).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * (1.0 + gamma)).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)
+
+
+def softcap(x, cap: float | None):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(angles)[..., None, :], jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, sections: tuple[int, int, int],
+                theta: float = 10000.0):
+    """Qwen2-VL multimodal RoPE: the head_dim/2 frequency slots are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (..., S, H, hd); positions_3d: (3, ..., S).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)  # (half,)
+    # build per-slot positions by section
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    # angles[..., s, j] = pos[sec_id[j], ..., s] * freqs[j]
+    pos = jnp.take(positions_3d, sec_id, axis=0)  # (half, ..., S) via moveaxis
+    pos = jnp.moveaxis(pos, 0, -1)                # (..., S, half)
+    angles = pos.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles)[..., None, :], jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(positions):
+    """Text-only M-RoPE degenerates to the same id on all three axes."""
+    return jnp.stack([positions, positions, positions], axis=0)
+
+
+# ---------------------------------------------------------------- losses
+
+def softmax_xent(logits, labels, valid=None):
+    """Mean token cross-entropy; logits (..., V), labels (...)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if valid is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

@@ -1,0 +1,305 @@
+"""Cached decoding (serve path): cache init, prefill->cache, one-token step.
+
+Cache layouts (per shard, see attention.py DecodePlan):
+  dense/moe/vlm : k,v (L, B, kv_dec_local, S_loc, hd), S_loc = cache_len / r
+  ssm           : state (L, B, H_loc, N, P) + conv tail (L, B, K-1, C)
+  hybrid        : per-superblock tuples of the two above
+  encdec        : decoder self-cache + static cross K/V per layer
+
+Prefill emits the cache directly in decode layout (phase-specific layouts —
+disaggregated prefill/decode serving).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, mlp, moe, rglru, ssm, transformer
+from repro.models.common import ShardCtx
+from repro.models.transformer import ArchConfig, ShardPlan, GLOBAL_WINDOW
+
+
+class DecodeCache(NamedTuple):
+    pos: jax.Array       # scalar int32: next position to write
+    layers: Any          # family-specific pytree
+
+
+def _kv_cache_shape(cfg: ArchConfig, plan: ShardPlan, batch: int, cache_len: int):
+    spec = cfg.attn_spec(plan.tp, plan.attn_replicated)
+    r = spec.decode_seq_parts
+    s_loc = cache_len // r
+    return (batch, spec.decode_kv_local, s_loc, cfg.head_dim)
+
+
+def effective_cache_len(cfg: ArchConfig, seq_len: int) -> int:
+    """SWA archs cap the ring buffer at the window (long_500k viability)."""
+    if cfg.window is not None and cfg.local_global_period == 0:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, plan: ShardPlan, batch: int, cache_len: int,
+               enc_ctx: int | None = None):
+    dt = cfg.dtype
+    L = cfg.n_layers
+
+    def kv_pair(n_layers):
+        shp = (n_layers,) + _kv_cache_shape(cfg, plan, batch, cache_len)
+        return (jnp.zeros(shp, dt), jnp.zeros(shp, dt))
+
+    if cfg.family == "ssm":
+        sspec = cfg.ssm_spec()
+        hl = sspec.heads_local(plan.tp)
+        conv_ch = hl * sspec.head_dim + 2 * sspec.n_groups * sspec.d_state
+        layers = (
+            jnp.zeros((L, batch, hl, sspec.d_state, sspec.head_dim), jnp.float32),
+            jnp.zeros((L, batch, sspec.d_conv - 1, conv_ch), dt))
+    elif cfg.family == "hybrid":
+        pat = cfg.hybrid_pattern
+        n_super = L // len(pat)
+        tail = L - n_super * len(pat)
+        rspec = cfg.rglru_spec()
+        wl = rspec.width_local(plan.tp)
+
+        def sub_cache(kind, n):
+            if kind == "R":
+                return (jnp.zeros((n, batch, wl), jnp.float32),
+                        jnp.zeros((n, batch, rspec.d_conv - 1, wl), dt))
+            shp = (n,) + _kv_cache_shape(cfg, plan, batch, cache_len)
+            return (jnp.zeros(shp, dt), jnp.zeros(shp, dt))
+
+        layers = {
+            "super": tuple(sub_cache(k, n_super) for k in pat),
+            "tail": tuple(sub_cache(pat[i % len(pat)], 1) for i in range(tail)),
+        }
+    elif cfg.family == "encdec":
+        spec = cfg.attn_spec(plan.tp, plan.attn_replicated)
+        ec = enc_ctx or cfg.encoder_ctx
+        cross = (jnp.zeros((L, batch, spec.decode_kv_local, ec, cfg.head_dim), dt),
+                 jnp.zeros((L, batch, spec.decode_kv_local, ec, cfg.head_dim), dt))
+        layers = {"self": kv_pair(L), "cross": cross}
+    else:
+        layers = kv_pair(L)
+    return DecodeCache(jnp.zeros((), jnp.int32), layers)
+
+
+# ---------------------------------------------------------------------------
+# one-token decode step
+# ---------------------------------------------------------------------------
+
+def _decode_dense_layer(lp, x, ck, cv, pos, cfg, spec, ctx, window,
+                        cross_kv=None, cross_params=None):
+    h = common.rms_norm(x, lp["ln1"])
+    y, ck, cv = attention.decode_attn_forward(
+        lp["attn"], h, ck, cv, pos, spec, ctx,
+        window=window,  # may be traced; GLOBAL_WINDOW sentinel = full attn
+        attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+        mrope_sections=cfg.mrope_sections)
+    x = x + y
+    if cross_kv is not None:
+        hx = common.rms_norm(x, lp["lnx"])
+        yx, _, _ = attention.decode_attn_forward(
+            lp["xattn"], hx, cross_kv[0], cross_kv[1], pos, spec, ctx,
+            rope_theta=None, cross_kv=cross_kv)
+        x = x + yx
+    h2 = common.rms_norm(x, lp["ln2"])
+    if "moe" in lp:
+        y2, _ = moe.moe_forward(lp["moe"], h2[:, None, :], cfg.moe_spec(),
+                                ShardCtx(ctx.tp_axis, ctx.tp_size,
+                                         seq_parallel=False))
+        y2 = y2[:, 0, :]
+    else:
+        y2 = mlp.mlp_forward(lp["mlp"], h2[:, None, :],
+                             ShardCtx(ctx.tp_axis, ctx.tp_size,
+                                      seq_parallel=False), cfg.act)[:, 0, :]
+    return x + y2, ck, cv
+
+
+def decode_step(params, cache: DecodeCache, tokens, cfg: ArchConfig,
+                plan: ShardPlan, ctx: ShardCtx):
+    """tokens (B,) int32 -> (next_tokens (B,), new_cache)."""
+    src = transformer.as_source(params)
+    top = src.top()
+    spec = cfg.attn_spec(plan.tp, plan.attn_replicated)
+    pos = cache.pos
+    x = transformer.embed_lookup(top, tokens[:, None], cfg, plan, ctx)[:, 0]
+    windows = jnp.array(cfg.layer_windows(), jnp.int32)
+
+    if cfg.family == "ssm":
+        sspec = cfg.ssm_spec()
+        states, tails = cache.layers
+
+        def body(x, inp):
+            lp, st, tl = inp
+            h = common.rms_norm(x, lp["ln1"])
+            y, (st2, tl2) = ssm.ssm_decode_step(lp["ssm"], h, (st, tl), sspec, ctx)
+            return x + y, (st2, tl2)
+
+        xs, hook = src.stack("layers")
+
+        def body_h(x, inp):
+            return body(x, (hook(inp[0]),) + inp[1:])
+
+        x, (states, tails) = jax.lax.scan(body_h, x, (xs, states, tails))
+        new_layers = (states, tails)
+
+    elif cfg.family == "hybrid":
+        pat = cfg.hybrid_pattern
+        rspec = cfg.rglru_spec()
+        sup = cache.layers["super"]
+
+        def super_body(x, inp):
+            lp = inp[0]
+            caches = inp[1:]
+            outs = []
+            for j, kind in enumerate(pat):
+                sub, c = lp[f"sub{j}"], caches[j]
+                if kind == "R":
+                    h = common.rms_norm(x, sub["ln1"])
+                    y, c2 = rglru.rglru_decode_step(sub["rec"], h, c, rspec, ctx)
+                    x = x + y
+                    h2 = common.rms_norm(x, sub["ln2"])
+                    x = x + mlp.mlp_forward(sub["mlp"], h2[:, None, :],
+                                            ShardCtx(ctx.tp_axis, ctx.tp_size,
+                                                     seq_parallel=False),
+                                            cfg.act)[:, 0, :]
+                    outs.append(c2)
+                else:
+                    x, ck, cv = _decode_dense_layer(
+                        sub, x, c[0], c[1], pos, cfg, spec, ctx,
+                        cfg.window or GLOBAL_WINDOW)
+                    outs.append((ck, cv))
+            return x, tuple(outs)
+
+        sxs, shook = src.stack("superblocks")
+
+        def super_body_h(x, inp):
+            return super_body(x, (shook(inp[0]),) + inp[1:])
+
+        x, new_sup = jax.lax.scan(super_body_h, x, (sxs,) + sup)
+        new_tail = []
+        txs, thook = (src.stack("tail") if src.has("tail") else (None, None))
+        for i, c in enumerate(cache.layers["tail"]):
+            lp = thook(jax.tree.map(lambda a, i=i: a[i], txs))
+            kind = pat[i % len(pat)]
+            c0 = jax.tree.map(lambda a: a[0], c)
+            if kind == "R":
+                h = common.rms_norm(x, lp["ln1"])
+                y, c2 = rglru.rglru_decode_step(lp["rec"], h, c0, rspec, ctx)
+                x = x + y
+                h2 = common.rms_norm(x, lp["ln2"])
+                x = x + mlp.mlp_forward(lp["mlp"], h2[:, None, :],
+                                        ShardCtx(ctx.tp_axis, ctx.tp_size,
+                                                 seq_parallel=False),
+                                        cfg.act)[:, 0, :]
+                new_tail.append(jax.tree.map(lambda a: a[None], c2))
+            else:
+                x, ck, cv = _decode_dense_layer(lp, x, c0[0], c0[1], pos, cfg,
+                                                spec, ctx,
+                                                cfg.window or GLOBAL_WINDOW)
+                new_tail.append((ck[None], cv[None]))
+        new_layers = {"super": new_sup, "tail": tuple(new_tail)}
+
+    elif cfg.family == "encdec":
+        ck_all, cv_all = cache.layers["self"]
+        xk_all, xv_all = cache.layers["cross"]
+
+        def body(x, inp):
+            lp, ck, cv, xk, xv = inp
+            x, ck, cv = _decode_dense_layer(lp, x, ck, cv, pos, cfg, spec, ctx,
+                                            GLOBAL_WINDOW, cross_kv=(xk, xv))
+            return x, (ck, cv)
+
+        dxs, dhook = src.stack("dec_layers")
+
+        def body_h(x, inp):
+            return body(x, (dhook(inp[0]),) + inp[1:])
+
+        x, (ck_all, cv_all) = jax.lax.scan(
+            body_h, x, (dxs, ck_all, cv_all, xk_all, xv_all))
+        new_layers = {"self": (ck_all, cv_all), "cross": cache.layers["cross"]}
+
+    else:  # dense / moe / vlm
+        ck_all, cv_all = cache.layers
+
+        def body(x, inp):
+            lp, ck, cv, win = inp
+            x, ck, cv = _decode_dense_layer(lp, x, ck, cv, pos, cfg, spec, ctx, win)
+            return x, (ck, cv)
+
+        xs, hook = src.stack("layers")
+
+        def body_h(x, inp):
+            return body(x, (hook(inp[0]),) + inp[1:])
+
+        x, (ck_all, cv_all) = jax.lax.scan(
+            body_h, x, (xs, ck_all, cv_all, windows))
+        new_layers = (ck_all, cv_all)
+
+    x = common.rms_norm(x, top["final_ln"])
+    nxt, _ = transformer.greedy_token(x, top, cfg, ctx)
+    return nxt, DecodeCache(pos + 1, new_layers)
+
+
+# ---------------------------------------------------------------------------
+# prefill -> decode-layout cache (tp == 1 path used by smoke tests/examples)
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, cfg: ArchConfig, plan: ShardPlan, ctx: ShardCtx,
+            cache_len: int, **extras):
+    """Run the full-seq forward, build a decode cache. Single-shard layout
+    (smoke tests / examples); the launcher's production prefill is a separate
+    lowering with phase-specific sharding."""
+    assert ctx.tp == 1, "prefill->cache conversion is exercised at tp=1"
+    x, _, collected = transformer.forward_full(
+        params, tokens, cfg, plan, ctx, collect_cache=True, **extras)
+    B, S = tokens.shape
+    cache = init_cache(cfg, plan, B, cache_len,
+                       enc_ctx=extras.get("enc_embeds", jnp.zeros((1, 1, 1))).shape[1]
+                       if cfg.family == "encdec" else None)
+
+    def kv_to_cache(kv_stack, cache_kv, length):
+        k, v = kv_stack  # (L, B, S, KV, hd)
+        ck, cv = cache_kv
+        kk = jnp.moveaxis(k, 2, 3)[:, :, :, :length]
+        vv = jnp.moveaxis(v, 2, 3)[:, :, :, :length]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, kk.astype(ck.dtype), 0, axis=3)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, vv.astype(cv.dtype), 0, axis=3)
+        return ck, cv
+
+    if cfg.family == "ssm":
+        layers = collected  # already (states, tails) stacked by scan
+    elif cfg.family == "hybrid":
+        sup = []
+        for j, kind in enumerate(cfg.hybrid_pattern):
+            col = collected["super"][j]
+            tgt = cache.layers["super"][j]
+            if kind == "R":
+                sup.append(col)
+            else:
+                sup.append(kv_to_cache(col, tgt, min(S, tgt[0].shape[3])))
+        tail = []
+        for i, col in enumerate(collected.get("tail", [])):
+            tgt = cache.layers["tail"][i]
+            kind = cfg.hybrid_pattern[i % len(cfg.hybrid_pattern)]
+            if kind == "R":
+                tail.append(jax.tree.map(lambda a: a[None], col))
+            else:
+                k, v = col
+                tail.append(kv_to_cache((k[None], v[None]), tgt,
+                                        min(S, tgt[0].shape[3])))
+        layers = {"super": tuple(sup), "tail": tuple(tail)}
+    elif cfg.family == "encdec":
+        self_kv, cross_kv = collected
+        layers = {"self": kv_to_cache(self_kv, cache.layers["self"],
+                                      min(S, cache.layers["self"][0].shape[3])),
+                  "cross": jax.tree.map(lambda a: jnp.moveaxis(a, 2, 3),
+                                        cross_kv)}
+    else:
+        layers = kv_to_cache(collected, cache.layers,
+                             min(S, cache.layers[0].shape[3]))
+
+    nxt, _ = transformer.greedy_token(x[:, -1], params, cfg, ctx)
+    return nxt, DecodeCache(jnp.asarray(S, jnp.int32), layers)

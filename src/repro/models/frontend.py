@@ -1,0 +1,60 @@
+"""Modality frontend STUBS (the one sanctioned carve-out, see task spec).
+
+[audio] whisper: the mel-spectrogram + conv feature extractor is stubbed —
+`audio_embeds` produces the (B, n_frames, d_model) frame embeddings the
+encoder transformer consumes.
+
+[vlm] qwen2-vl: the ViT/SigLIP encoder + projector is stubbed —
+`vision_embeds` produces pre-projected patch embeddings plus the positions
+where they sit in the token sequence, and `mrope_positions` builds the 3-D
+(temporal, height, width) M-RoPE ids for a text+image layout with dynamic
+resolution expressed through (t, h, w) grid sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_embeds(key, batch: int, n_frames: int, d_model: int, dtype=jnp.float32):
+    """Stub conv-frontend output: smooth random frame embeddings."""
+    coarse = jax.random.normal(key, (batch, max(n_frames // 8, 1), d_model))
+    x = jax.image.resize(coarse, (batch, n_frames, d_model), "linear")
+    return (x * 0.02).astype(dtype)
+
+
+def vision_embeds(key, batch: int, n_patches: int, d_model: int,
+                  seq_len: int, dtype=jnp.float32):
+    """Stub ViT output: patch embeddings + their slot positions in the
+    sequence (a contiguous image region starting at position 1)."""
+    emb = (jax.random.normal(key, (batch, n_patches, d_model)) * 0.02).astype(dtype)
+    pos = jnp.broadcast_to(1 + jnp.arange(n_patches), (batch, n_patches))
+    assert n_patches + 1 <= seq_len
+    return emb, pos.astype(jnp.int32)
+
+
+def mrope_positions(batch: int, seq_len: int, image_start: int = 1,
+                    grid_t: int = 1, grid_h: int = 0, grid_w: int = 0):
+    """(3, B, S) position ids: text positions advance all three axes together;
+    image patches use (t, h, w) grid coordinates offset at the image start."""
+    n_img = grid_t * grid_h * grid_w
+    base = jnp.arange(seq_len)
+    if n_img == 0:
+        p = jnp.broadcast_to(base, (batch, seq_len))
+        return jnp.stack([p, p, p], axis=0)
+    t_ids = jnp.repeat(jnp.arange(grid_t), grid_h * grid_w)
+    h_ids = jnp.tile(jnp.repeat(jnp.arange(grid_h), grid_w), grid_t)
+    w_ids = jnp.tile(jnp.arange(grid_w), grid_t * grid_h)
+    img_span = jnp.arange(seq_len) - image_start          # 0.. within image
+    in_img = (img_span >= 0) & (img_span < n_img)
+    clip = jnp.clip(img_span, 0, n_img - 1)
+    # text after the image continues from max(image positions)+1
+    after = jnp.maximum(grid_t, jnp.maximum(grid_h, grid_w))
+    shift = jnp.where(jnp.arange(seq_len) >= image_start + n_img,
+                      after + jnp.arange(seq_len) - (image_start + n_img),
+                      jnp.arange(seq_len))
+    def axis(ids):
+        return jnp.where(in_img, image_start + ids[clip], shift)
+    p_t, p_h, p_w = axis(t_ids), axis(h_ids), axis(w_ids)
+    out = jnp.stack([p_t, p_h, p_w], axis=0)
+    return jnp.broadcast_to(out[:, None, :], (3, batch, seq_len)).astype(jnp.int32)

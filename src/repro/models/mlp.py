@@ -1,0 +1,42 @@
+"""Dense FFN (gated / plain), column->row parallel with sequence-parallel IO."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ShardCtx
+
+
+def init_mlp(key, d_model: int, d_ff_local: int, gated: bool = True,
+             dtype=jnp.float32):
+    kg, ku, kd = jax.random.split(key, 3)
+    p = {
+        "w_up": common.he_init(ku, d_ff_local, d_model, dtype),
+        "w_down": common.he_init(kd, d_model, d_ff_local, dtype),
+    }
+    if gated:
+        p["w_gate"] = common.he_init(kg, d_ff_local, d_model, dtype)
+    return p
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def mlp_forward(params, x_sp, ctx: ShardCtx, act: str = "silu",
+                defer_reduce: bool = False):
+    """x_sp: (B, S/tp, D) -> (B, S/tp, D). Column-parallel up/gate (d_ff is
+    sharded over tp in the params), row-parallel down + reduce-scatter."""
+    x = common.sp_all_gather(x_sp, ctx)
+    h = x @ params["w_up"].T
+    if "w_gate" in params:
+        h = act_fn(act)(x @ params["w_gate"].T) * h
+    else:
+        h = act_fn(act)(h)
+    y = h @ params["w_down"].T          # partial sum over sharded d_ff
+    if defer_reduce:
+        return y
+    return common.sp_reduce_scatter(y, ctx)

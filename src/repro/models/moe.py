@@ -1,0 +1,150 @@
+"""Mixture-of-Experts layer: top-k router with capacity-factor dispatch.
+
+Two execution plans (selected by `impl`):
+
+* "dense_tp" (default / baseline): every shard holds ALL experts with the
+  expert FFN dim sharded over tp (column/row parallel, like the dense MLP).
+  Dispatch/combine are einsums against a one-hot capacity tensor; no
+  all-to-all.  Robust for any (n_experts, tp) combination.
+
+* "ep_a2a" (optimized path, §Perf): experts sharded over the tp axis
+  (replicated ``tp // n_experts`` times when tp > n_experts); tokens routed
+  via ``lax.all_to_all``.  Requires tp % n_experts == 0 or
+  n_experts % tp == 0.
+
+Router load-balance auxiliary loss follows Switch/Mixtral:
+``aux = E * sum_e f_e * p_e`` with f = dispatch fraction, p = mean gate prob.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ShardCtx
+from repro.models.mlp import act_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int            # per-expert hidden (full, pre-sharding)
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    impl: str = "dense_tp"   # | "ep_a2a"
+
+    def d_ff_local(self, tp: int) -> int:
+        if self.impl == "dense_tp":
+            assert self.d_ff % tp == 0, (self.d_ff, tp)
+            return self.d_ff // tp
+        # ep_a2a: expert-parallel shards hold full expert width, but when
+        # tp > n_experts the surplus factor shards the width.
+        width_shards = max(1, tp // self.n_experts)
+        assert self.d_ff % width_shards == 0
+        return self.d_ff // width_shards
+
+    def experts_local(self, tp: int) -> int:
+        if self.impl == "dense_tp":
+            return self.n_experts
+        return max(1, self.n_experts // tp)
+
+
+def init_moe(key, spec: MoESpec, tp: int = 1, dtype=jnp.float32):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e = spec.experts_local(tp)
+    ffl = spec.d_ff_local(tp)
+    scale_in = jnp.sqrt(1.0 / spec.d_model)
+    scale_out = jnp.sqrt(1.0 / spec.d_ff)
+    return {
+        "router": common.he_init(kr, spec.n_experts, spec.d_model, dtype),
+        "w_gate": (jax.random.normal(kg, (e, ffl, spec.d_model)) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (e, ffl, spec.d_model)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (e, spec.d_model, ffl)) * scale_out).astype(dtype),
+    }
+
+
+def _route(x_flat, router, spec: MoESpec):
+    """x_flat: (T, D) -> gates (T, k), expert ids (T, k), probs (T, E)."""
+    logits = x_flat @ router.T
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, spec.top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    return gate_vals, ids, probs
+
+
+def _capacity(T: int, spec: MoESpec) -> int:
+    c = int(spec.capacity_factor * T * spec.top_k / spec.n_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _dispatch_tensors(gate_vals, ids, T: int, cap: int, spec: MoESpec):
+    """Position-in-expert assignment -> combine (T,E,C) and dispatch mask."""
+    E = spec.n_experts
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)          # (T, k, E)
+    pos = jnp.cumsum(onehot.reshape(T * spec.top_k, E), axis=0)  # running count
+    pos = (pos.reshape(T, spec.top_k, E) - 1.0)
+    keep = (pos < cap) & (onehot > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # (T,k,E,C)
+    dispatch = jnp.einsum("tke,tkec->tec", onehot * keep, pos_oh)          # (T,E,C)
+    combine = jnp.einsum("tk,tke,tkec->tec", gate_vals, onehot * keep, pos_oh)
+    return dispatch, combine
+
+
+def moe_forward(params, x_sp, spec: MoESpec, ctx: ShardCtx):
+    """x_sp: (B, S/tp, D) -> (y (B, S/tp, D), aux_loss scalar)."""
+    x = common.sp_all_gather(x_sp, ctx)
+    B, S, D = x.shape
+    xf = x.reshape(B * S, D)
+    T = B * S
+    gate_vals, ids, probs = _route(xf, params["router"], spec)
+    cap = _capacity(T, spec)
+    dispatch, combine = _dispatch_tensors(gate_vals, ids, T, cap, spec)
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    f = jnp.mean(jnp.sum(dispatch, axis=2) > 0, axis=0)  # (E,) dispatch frac
+    p = jnp.mean(probs, axis=0)
+    aux = spec.n_experts * jnp.sum(f * p)
+
+    if spec.impl == "ep_a2a" and ctx.tp > 1:
+        y = _ep_a2a_forward(params, xf, dispatch, combine, spec, ctx)
+    else:
+        expert_in = jnp.einsum("tec,td->ecd", dispatch, xf)       # (E,C,D)
+        h = jnp.einsum("ecd,efd->ecf", expert_in, params["w_gate"])
+        h = act_fn(spec.act)(h) * jnp.einsum("ecd,efd->ecf", expert_in, params["w_up"])
+        out = jnp.einsum("ecf,edf->ecd", h, params["w_down"])     # partial over ff
+        y = jnp.einsum("tec,ecd->td", combine, out)
+    y = y.reshape(B, S, D).astype(x.dtype)
+    return common.sp_reduce_scatter(y, ctx), aux
+
+
+def _ep_a2a_forward(params, xf, dispatch, combine, spec: MoESpec, ctx: ShardCtx):
+    """Expert-parallel plan (optimized path, §Perf): each shard owns one
+    expert slice ((tp // E)-way width-sharded when tp > E).  Routing metadata
+    is replicated (x was seq-gathered), so dispatch needs no all-to-all: each
+    shard gathers ITS expert's token block, computes its width slice, and one
+    all-reduce both sums the width partials and concatenates experts.
+    """
+    tp = ctx.tp
+    E = spec.n_experts
+    T, D = xf.shape
+    cap = dispatch.shape[2]
+    assert tp % E == 0, "ep_a2a needs tp % n_experts == 0 (else use dense_tp)"
+    idx = common.axis_index(ctx)
+    my_e = idx // (tp // E)
+
+    disp_e = jax.lax.dynamic_slice_in_dim(dispatch, my_e, 1, axis=1)[:, 0]  # (T,C)
+    h_in = jnp.einsum("tc,td->cd", disp_e, xf)                   # (C, D)
+    g = h_in @ params["w_gate"][0].T
+    u = h_in @ params["w_up"][0].T
+    out = (act_fn(spec.act)(g) * u) @ params["w_down"][0].T       # (C, D) partial
+    # scatter into the expert slot; the result stays PARTIAL (only this
+    # shard's expert filled) — the caller's reduce-scatter/psum over tp sums
+    # expert contributions and width partials in one collective.
+    full = jnp.zeros((E, cap, D), out.dtype)
+    full = jax.lax.dynamic_update_slice_in_dim(full, out[None], my_e, axis=0)
+    return jnp.einsum("tec,ecd->td", combine, full)

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is diagonal, so it parallelises over width (TP) trivially and
+over sequence via `associative_scan` with the first-order linear combine
+(A, b) o (A', b') = (A A', A' b + b').
+
+Griffin recurrent block: in-proj to (gate branch, recurrent branch), short
+causal depthwise conv on the recurrent branch, RG-LRU, gelu-gated merge,
+row-parallel out-proj.  Width is sharded over tp.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ShardCtx
+from repro.models.ssm import _causal_conv
+
+RGLRU_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_model: int
+    width: int            # lru_width (full)
+    d_conv: int = 4
+
+    def width_local(self, tp: int) -> int:
+        assert self.width % tp == 0
+        return self.width // tp
+
+
+def init_rglru(key, spec: RGLRUSpec, tp: int = 1, dtype=jnp.float32):
+    kx, kg, ka, ki, kl, ko = jax.random.split(key, 6)
+    wl = spec.width_local(tp)
+    d = spec.d_model
+    # Lambda init so that a^c in ~[0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(kl, (wl,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # softplus^-1(-log u / c)
+    return {
+        "w_in_x": common.he_init(kx, wl, d, dtype),      # recurrent branch
+        "w_in_g": common.he_init(kg, wl, d, dtype),      # gate branch
+        "conv_w": (jax.random.normal(key, (wl, spec.d_conv)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((wl,), dtype),
+        "w_a": common.he_init(ka, wl, wl, dtype),
+        "b_a": jnp.zeros((wl,), dtype),
+        "w_i": common.he_init(ki, wl, wl, dtype),
+        "b_i": jnp.zeros((wl,), dtype),
+        "lam": lam.astype(dtype),
+        "w_out": common.he_init(ko, d, wl, dtype),
+    }
+
+
+def _rglru_coeffs(params, x):
+    """x: (..., W_loc) -> (a, b) recurrence coefficients."""
+    r = jax.nn.sigmoid(x @ params["w_a"].T + params["b_a"])
+    i = jax.nn.sigmoid(x @ params["w_i"].T + params["b_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (i * x)
+    return a, b
+
+
+def rglru_scan(a, b, initial_h=None):
+    """h_t = a_t h_{t-1} + b_t over axis 1 via associative scan."""
+    if initial_h is not None:
+        # fold the initial state into the first element
+        b = b.at[:, 0].add(a[:, 0] * initial_h)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_forward(params, x_sp, spec: RGLRUSpec, ctx: ShardCtx,
+                        initial_state=None, return_state: bool = False):
+    """Griffin recurrent block. x_sp (B, S/tp, D) -> (B, S/tp, D)."""
+    x = common.sp_all_gather(x_sp, ctx)
+    gate = jax.nn.gelu(x @ params["w_in_g"].T)
+    u = x @ params["w_in_x"].T
+    u = _causal_conv(u, params["conv_w"], params["conv_b"])
+    a, b = _rglru_coeffs(params, u)
+    h = rglru_scan(a, b, initial_state)
+    y = ((h * gate) @ params["w_out"].T).astype(x.dtype)
+    y = common.sp_reduce_scatter(y, ctx)
+    if return_state:
+        conv_tail = (x @ params["w_in_x"].T)[:, -(spec.d_conv - 1):, :]
+        return y, (h[:, -1], conv_tail)
+    return y
+
+
+def rglru_decode_step(params, x, cache, spec: RGLRUSpec, ctx: ShardCtx):
+    """One-token step. x (B, D); cache = (h (B, W_loc), conv_tail)."""
+    h_prev, conv_tail = cache
+    gate = jax.nn.gelu(x @ params["w_in_g"].T)
+    u_raw = x @ params["w_in_x"].T                          # (B, W_loc)
+    window = jnp.concatenate([conv_tail, u_raw[:, None, :]], axis=1)
+    u = jnp.einsum("bkc,ck->bc", window, params["conv_w"]) + params["conv_b"]
+    a, b = _rglru_coeffs(params, u)
+    h = a * h_prev + b
+    y = ((h * gate) @ params["w_out"].T).astype(x.dtype)
+    y = common.psum_tp(y, ctx)
+    return y, (h.astype(jnp.float32), window[:, 1:, :].astype(conv_tail.dtype))

@@ -1,0 +1,210 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060), per-shard code.
+
+Chunked SSD: the sequence is split into chunks; within-chunk interactions use
+the quadratic (matmul, MXU-friendly) form with the 1-semiseparable decay mask,
+across-chunk interactions flow through the recurrent chunk states — linear in
+sequence length, which is what qualifies mamba2 for the long_500k shape.
+
+TP: SSM heads sharded over tp (32 heads / 16 = 2); B/C projections are shared
+across heads (n_groups=1) and computed replicated.  out_proj is row-parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ShardCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    def heads_local(self, tp: int) -> int:
+        assert self.n_heads % tp == 0, (self.n_heads, tp)
+        return self.n_heads // tp
+
+
+def init_ssm(key, spec: SSMSpec, tp: int = 1, dtype=jnp.float32):
+    kin, kconv, ka, kd, kdt, kn, kout = jax.random.split(key, 7)
+    hl = spec.heads_local(tp)
+    din_l = hl * spec.head_dim
+    gn = spec.n_groups * spec.d_state
+    # in_proj rows: [z | x | B | C | dt]  (B, C replicated across shards)
+    proj_rows = 2 * din_l + 2 * gn + hl
+    conv_ch = din_l + 2 * gn
+    return {
+        "in_proj": common.he_init(kin, proj_rows, spec.d_model, dtype),
+        "conv_w": (jax.random.normal(kconv, (conv_ch, spec.d_conv)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, hl)).astype(dtype),
+        "D_skip": jnp.ones((hl,), dtype),
+        "dt_bias": jnp.zeros((hl,), dtype),
+        "norm_g": jnp.zeros((din_l,), dtype),
+        "out_proj": common.he_init(kout, spec.d_model, din_l, dtype),
+    }
+
+
+def _split_proj(proj, spec: SSMSpec, hl: int):
+    din_l = hl * spec.head_dim
+    gn = spec.n_groups * spec.d_state
+    z = proj[..., :din_l]
+    x = proj[..., din_l:2 * din_l]
+    Bm = proj[..., 2 * din_l:2 * din_l + gn]
+    Cm = proj[..., 2 * din_l + gn:2 * din_l + 2 * gn]
+    dt = proj[..., 2 * din_l + 2 * gn:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq; x (B,S,C), w (C,K)."""
+    K = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[:, i] for i in range(K))
+    return out + b
+
+
+def ssd_chunked(xbar, Bm, Cm, abar_log, spec: SSMSpec,
+                initial_state=None):
+    """Core SSD scan. Shapes (per shard):
+      xbar (B,S,H,P)  abar_log (B,S,H)  Bm/Cm (B,S,N)  [n_groups==1]
+    Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    Bsz, S, H, P = xbar.shape
+    N = Bm.shape[-1]
+    Q = min(spec.chunk, S)
+    nc = S // Q
+    assert nc * Q == S
+
+    xb = xbar.reshape(Bsz, nc, Q, H, P)
+    al = abar_log.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    la = jnp.cumsum(al, axis=2)                     # (B,nc,Q,H) inclusive
+    la_last = la[:, :, -1:, :]                      # (B,nc,1,H)
+
+    # ---- within-chunk (quadratic, masked) --------------------------------
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc,
+                        preferred_element_type=jnp.float32)   # (B,nc,Q,K)
+    # decay L[i,j] = exp(la_i - la_j) for i >= j; mask BEFORE exp so the
+    # masked (upper-triangle) entries can't overflow to inf and poison grads
+    decay = la[:, :, :, None, :] - la[:, :, None, :, :]       # (B,nc,Q,K,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(tri[None, None, :, :, None], decay, -1e30))
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", scores, L, xb,
+                        preferred_element_type=jnp.float32)
+
+    # ---- chunk states ------------------------------------------------------
+    # state_c = sum_j exp(la_last - la_j) * B_j (x) xbar_j
+    w_state = jnp.exp(la_last - la)                 # (B,nc,Q,H)
+    S_local = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc, w_state, xb,
+                         preferred_element_type=jnp.float32)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    chunk_decay = jnp.exp(la_last[:, :, 0, :])      # (B,nc,H)
+
+    def step(carry, inp):
+        s_loc, dec = inp                            # (B,H,N,P), (B,H)
+        prev = carry
+        out = prev                                   # state entering this chunk
+        new = prev * dec[:, :, None, None] + s_loc
+        return new, out
+
+    init = (initial_state if initial_state is not None
+            else jnp.zeros((Bsz, H, N, P), jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(S_local, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)   # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc, jnp.exp(la), prev_states,
+                         preferred_element_type=jnp.float32)
+    y = (y_diag + y_inter).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+def ssm_forward(params, x_sp, spec: SSMSpec, ctx: ShardCtx,
+                initial_state=None, return_state: bool = False):
+    """x_sp: (B, S/tp, D) -> (B, S/tp, D).  NOTE: the recurrence runs over the
+    full sequence, so the seq-parallel stream is gathered first (the scan
+    itself is chunked, memory stays bounded)."""
+    x = common.sp_all_gather(x_sp, ctx)
+    Bsz, S, D = x.shape
+    hl = params["A_log"].shape[0]
+    P = spec.head_dim
+
+    proj = x @ params["in_proj"].T
+    z, xs, Bm, Cm, dt = _split_proj(proj, spec, hl)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"]))
+    xs = conv_out[..., : hl * P]
+    Bm = conv_out[..., hl * P: hl * P + spec.d_state]
+    Cm = conv_out[..., hl * P + spec.d_state:]
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])          # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))     # (H,)
+    abar_log = dt * A                                     # log decay
+    xh = xs.reshape(Bsz, S, hl, P)
+    xbar = xh * dt[..., None]
+
+    y, state = ssd_chunked(xbar, Bm, Cm, abar_log, spec, initial_state)
+    y = y + params["D_skip"][None, None, :, None] * xh
+    y = y.reshape(Bsz, S, hl * P)
+    y = common.rms_norm(y * jax.nn.silu(z), params["norm_g"])
+    out = (y @ params["out_proj"].T).astype(x.dtype)      # row-parallel partial
+    out = common.sp_reduce_scatter(out, ctx)
+    if return_state:
+        # decode cache: ssm state + conv tail (last d_conv-1 conv inputs)
+        conv_tail = conv_in[:, -(spec.d_conv - 1):, :]
+        return out, (state, conv_tail)
+    return out
+
+
+def ssm_decode_step(params, x, cache, spec: SSMSpec, ctx: ShardCtx):
+    """One-token step. x: (B, D); cache = (state (B,H,N,P), conv_tail
+    (B, d_conv-1, C)). Returns (y (B, D) [psum-replicated], new cache)."""
+    state, conv_tail = cache
+    Bsz, D = x.shape
+    hl = params["A_log"].shape[0]
+    P = spec.head_dim
+
+    proj = x @ params["in_proj"].T
+    z, xs, Bm, Cm, dt = _split_proj(proj, spec, hl)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)      # (B, C)
+    window = jnp.concatenate([conv_tail, conv_in[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,ck->bc", window, params["conv_w"]) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., : hl * P]
+    Bm = conv_out[..., hl * P: hl * P + spec.d_state]
+    Cm = conv_out[..., hl * P + spec.d_state:]
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])          # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    abar = jnp.exp(dt * A)                                # (B,H)
+    xh = xs.reshape(Bsz, hl, P)
+    new_state = (state * abar[:, :, None, None]
+                 + jnp.einsum("bn,bh,bhp->bhnp", Bm, dt, xh))
+    y = jnp.einsum("bn,bhnp->bhp", Cm, new_state)
+    y = y + params["D_skip"][None, :, None] * xh
+    y = y.reshape(Bsz, hl * P)
+    y = common.rms_norm(y * jax.nn.silu(z), params["norm_g"])
+    out = (y @ params["out_proj"].T).astype(x.dtype)
+    out = common.psum_tp(out, ctx)
+    return out, (new_state, window[:, 1:, :])

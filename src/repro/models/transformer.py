@@ -1,0 +1,568 @@
+"""Architecture assembler: dense / MoE / SSM / hybrid / enc-dec / VLM stacks
+from one ArchConfig, as per-shard functions (see common.ShardCtx).
+
+Key design points
+  * vocab-parallel embedding + LM head (Megatron-style): the embedding table
+    is sharded over tp; lookup psums, the head computes sharded logits and the
+    loss is a vocab-parallel cross-entropy (no (B,S,V) materialisation).
+  * uniform layer stacks are scanned with per-layer static-shaped extras
+    (e.g. alternating local/global windows ride the scan xs); non-uniform
+    stacks (hybrid R,R,A pattern) scan over super-blocks.
+  * serving uses phase-specific layouts (disaggregated prefill/decode): the
+    decode attention params/caches are laid out (kv_group x seq_part) across
+    tp (see attention.py); prefill emits the cache directly in that layout.
+  * every weight matrix is (out_rows, in) so the paper's per-output-row
+    scaling factors / structured sparsification apply uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, mlp, moe, rglru, ssm
+from repro.models.attention import AttnParamsSpec
+from repro.models.common import ShardCtx
+from repro.models.moe import MoESpec
+from repro.models.rglru import RGLRUSpec
+from repro.models.ssm import SSMSpec
+
+MOE_AUX_COEF = 0.01
+GLOBAL_WINDOW = 1 << 30  # "no window" sentinel usable as a traced value
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab: int = 32000
+    # attention behaviours
+    rope_theta: float = 10000.0
+    mrope_sections: tuple | None = None
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    window: int | None = None
+    local_global_period: int = 0    # 0: all global; k: every k-th layer global
+    act: str = "silu"
+    embed_scale: bool = False
+    tie_embeddings: bool = True
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "dense_tp"
+    # ssm / hybrid
+    ssm_d_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    hybrid_pattern: tuple = ()      # e.g. ("R", "R", "A")
+    rglru_width: int = 0
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_ctx: int = 0
+    # vlm
+    num_image_tokens: int = 0
+    # compute / §Perf variants
+    parallel_block: bool = False    # fused attn+FFN (one SP gather/scatter)
+    sp_int8: bool = False           # int8 SP gathers
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    dtype: Any = jnp.float32
+    citation: str = ""
+
+    # ------------------------------------------------------ derived specs
+    def padded_vocab(self, tp: int) -> int:
+        mult = 128 * tp
+        return ((self.vocab + mult - 1) // mult) * mult
+
+    def attn_spec(self, tp: int, replicated: bool) -> AttnParamsSpec:
+        return AttnParamsSpec(self.n_heads, self.n_kv_heads, self.head_dim,
+                              self.d_model, tp=tp, replicated=replicated)
+
+    def moe_spec(self) -> MoESpec:
+        return MoESpec(self.n_experts, self.top_k, self.d_model, self.d_ff,
+                       self.capacity_factor, self.act, self.moe_impl)
+
+    def ssm_spec(self) -> SSMSpec:
+        return SSMSpec(self.d_model, d_state=self.ssm_d_state,
+                       head_dim=self.ssm_head_dim, expand=self.ssm_expand)
+
+    def rglru_spec(self) -> RGLRUSpec:
+        return RGLRUSpec(self.d_model, self.rglru_width or self.d_model)
+
+    def layer_windows(self, seq_hint: int = 0) -> list:
+        """Per-layer window sizes (GLOBAL_WINDOW => full attention)."""
+        out = []
+        for i in range(self.n_layers):
+            if self.window is None:
+                out.append(GLOBAL_WINDOW)
+            elif self.local_global_period and (i % self.local_global_period
+                                               == self.local_global_period - 1):
+                out.append(GLOBAL_WINDOW)   # global layer
+            else:
+                out.append(self.window)
+        return out
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: 2 layers, d_model<=256, <=4 experts."""
+        kv = max(1, min(self.n_kv_heads, 2))
+        heads = max(kv, min(self.n_heads, 4))
+        heads = (heads // kv) * kv or kv
+        pattern = self.hybrid_pattern[:3] if self.hybrid_pattern else ()
+        new_hd = 64 if self.head_dim else 0
+        sections = self.mrope_sections
+        if sections and new_hd:
+            scale = (new_hd // 2) / sum(sections)
+            sections = tuple(int(s * scale) for s in sections)
+            sections = (sections[0] + (new_hd // 2 - sum(sections)),) + sections[1:]
+        return dataclasses.replace(
+            self,
+            name=self.name + "_reduced",
+            n_layers=3 if pattern else 2,
+            d_model=256, n_heads=heads, n_kv_heads=kv,
+            head_dim=new_hd, mrope_sections=sections,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            # drop-free routing at smoke scale so prefill==decode exactly
+            capacity_factor=4.0 if self.n_experts else self.capacity_factor,
+            window=min(self.window, 64) if self.window else None,
+            rglru_width=256 if self.rglru_width else 0,
+            ssm_d_state=min(self.ssm_d_state, 32) if self.ssm_d_state else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_ctx=min(self.encoder_ctx, 64) if self.encoder_ctx else 0,
+            num_image_tokens=min(self.num_image_tokens, 8),
+            q_chunk=64, kv_chunk=64,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Static sharding decisions for one arch on one mesh (dist/sharding.py)."""
+    tp: int = 1
+    attn_replicated: bool = False
+    decode_layout: bool = False       # attention params in decode sharding
+
+    def ctx(self, tp_axis: str | None = None, seq_parallel: bool = True) -> ShardCtx:
+        return ShardCtx(tp_axis=tp_axis, tp_size=self.tp,
+                        attn_replicated=self.attn_replicated,
+                        seq_parallel=seq_parallel)
+
+
+SINGLE = ShardPlan()
+
+
+class ParamSource:
+    """Indirection for parameter access: the mesh runtime stores params as
+    FSDP flat buckets and materialises one layer inside the scan body (see
+    dist/sharding.py); tests/examples use direct dicts.
+
+    stack(name) -> (xs, hook): xs is any pytree with a leading layer dim to
+    scan over; hook(slice) -> layer param tree.  top() -> non-stacked params.
+    """
+
+    def __init__(self, params: dict):
+        self._p = params
+
+    def has(self, name: str) -> bool:
+        return name in self._p
+
+    def top(self) -> dict:
+        from repro.dist.sharding import STACKED_KEYS  # no cycle at call time
+        return {k: v for k, v in self._p.items() if k not in STACKED_KEYS}
+
+    def stack(self, name: str):
+        return self._p[name], lambda x: x
+
+
+def as_source(params) -> "ParamSource":
+    return params if isinstance(params, ParamSource) else ParamSource(params)
+
+
+# ===========================================================================
+# parameter initialisation
+# ===========================================================================
+
+def _init_layer(key, cfg: ArchConfig, plan: ShardPlan, kind: str):
+    """kind: 'attn' | 'moe' | 'mlp' | 'ssm' | 'rglru' | 'cross'."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    spec = cfg.attn_spec(plan.tp, plan.attn_replicated)
+    dt = cfg.dtype
+    if kind == "ssm":
+        return {"ln1": jnp.zeros((cfg.d_model,), dt),
+                "ssm": ssm.init_ssm(k1, cfg.ssm_spec(), plan.tp, dt)}
+    if kind == "rglru":
+        return {"ln1": jnp.zeros((cfg.d_model,), dt),
+                "rec": rglru.init_rglru(k1, cfg.rglru_spec(), plan.tp, dt),
+                "ln2": jnp.zeros((cfg.d_model,), dt),
+                "mlp": mlp.init_mlp(k2, cfg.d_model, cfg.d_ff // plan.tp, True, dt)}
+    attn_init = (attention.init_decode_attn if plan.decode_layout
+                 else attention.init_attn)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dt),
+         "attn": attn_init(k1, spec, dt),
+         "ln2": jnp.zeros((cfg.d_model,), dt)}
+    if kind == "cross":
+        p["lnx"] = jnp.zeros((cfg.d_model,), dt)
+        p["xattn"] = attn_init(k3, spec, dt)
+    if kind == "moe":
+        p["moe"] = moe.init_moe(k2, cfg.moe_spec(), plan.tp, dt)
+    else:
+        p["mlp"] = mlp.init_mlp(k2, cfg.d_model, cfg.d_ff // plan.tp,
+                                cfg.act != "gelu_plain", dt)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ArchConfig, plan: ShardPlan = SINGLE):
+    keys = jax.random.split(key, cfg.n_layers + cfg.encoder_layers + 3)
+    vl = cfg.padded_vocab(plan.tp) // plan.tp
+    params: dict = {
+        "embed": common.embed_init(keys[-1], vl, cfg.d_model, cfg.dtype),
+        "final_ln": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.embed_init(keys[-2], vl, cfg.d_model, cfg.dtype)
+
+    if cfg.family == "ssm":
+        params["layers"] = _stack([_init_layer(keys[i], cfg, plan, "ssm")
+                                   for i in range(cfg.n_layers)])
+    elif cfg.family == "moe":
+        params["layers"] = _stack([_init_layer(keys[i], cfg, plan, "moe")
+                                   for i in range(cfg.n_layers)])
+    elif cfg.family == "hybrid":
+        pat = cfg.hybrid_pattern
+        n_super = cfg.n_layers // len(pat)
+        tail = cfg.n_layers - n_super * len(pat)
+        def super_block(k):
+            ks = jax.random.split(k, len(pat))
+            return {f"sub{j}": _init_layer(ks[j], cfg, plan,
+                                           "rglru" if pat[j] == "R" else "attn")
+                    for j in range(len(pat))}
+        params["superblocks"] = _stack([super_block(keys[i]) for i in range(n_super)])
+        if tail:
+            params["tail"] = _stack([
+                _init_layer(keys[n_super + i], cfg, plan,
+                            "rglru" if pat[i % len(pat)] == "R" else "attn")
+                for i in range(tail)])
+    elif cfg.family == "encdec":
+        params["enc_layers"] = _stack([_init_layer(keys[i], cfg, plan, "attn")
+                                       for i in range(cfg.encoder_layers)])
+        params["dec_layers"] = _stack([
+            _init_layer(keys[cfg.encoder_layers + i], cfg, plan, "cross")
+            for i in range(cfg.n_layers)])
+        params["enc_final_ln"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    else:  # dense / vlm
+        params["layers"] = _stack([_init_layer(keys[i], cfg, plan, "attn")
+                                   for i in range(cfg.n_layers)])
+    return params
+
+
+# ===========================================================================
+# embedding / head (vocab-parallel)
+# ===========================================================================
+
+def embed_lookup(params, tokens, cfg: ArchConfig, plan: ShardPlan, ctx: ShardCtx):
+    """tokens (B, S) -> (B, S, D), psum-complete across tp."""
+    vl = params["embed"].shape[0]
+    idx = common.axis_index(ctx)
+    local = tokens - idx * vl
+    valid = (local >= 0) & (local < vl)
+    x = params["embed"][jnp.clip(local, 0, vl - 1)]
+    x = jnp.where(valid[..., None], x, 0)
+    x = common.psum_tp(x, ctx)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    return x
+
+
+def vocab_parallel_xent(x, labels, params, cfg: ArchConfig, ctx: ShardCtx):
+    """x (B, S, D) full-seq activations -> mean token cross-entropy."""
+    head = params.get("lm_head", params["embed"])
+    logits = (x @ head.T).astype(jnp.float32)          # (B, S, Vl)
+    logits = common.softcap(logits, cfg.final_softcap)
+    vl = head.shape[0]
+    idx = common.axis_index(ctx)
+
+    # stability shift: mathematically cancels in the gradient, so detach it
+    # BEFORE the pmax (which has no differentiation rule)
+    m_loc = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+    m = m_loc if ctx.tp == 1 else jax.lax.pmax(m_loc, ctx.tp_axis)
+    se = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
+    se = common.psum_tp(se, ctx)
+    local_lab = labels - idx * vl
+    lab_valid = (local_lab >= 0) & (local_lab < vl)
+    lab_logit = jnp.take_along_axis(
+        logits, jnp.clip(local_lab, 0, vl - 1)[..., None], axis=-1)[..., 0]
+    lab_logit = common.psum_tp(jnp.where(lab_valid, lab_logit, 0.0), ctx)
+    nll = jnp.log(se) + m - lab_logit
+    return jnp.mean(nll)
+
+
+def greedy_token(x, params, cfg: ArchConfig, ctx: ShardCtx):
+    """x (B, D) -> greedy next token ids (B,), vocab-parallel argmax."""
+    head = params.get("lm_head", params["embed"])
+    logits = common.softcap((x @ head.T).astype(jnp.float32), cfg.final_softcap)
+    vl = head.shape[0]
+    idx = common.axis_index(ctx)
+    loc_max = jnp.max(logits, axis=-1)
+    loc_arg = jnp.argmax(logits, axis=-1) + idx * vl
+    if ctx.tp == 1:
+        return loc_arg.astype(jnp.int32), loc_max
+    g_max = jax.lax.pmax(loc_max, ctx.tp_axis)
+    cand = jnp.where(loc_max >= g_max, loc_arg, jnp.iinfo(jnp.int32).max)
+    g_arg = jax.lax.pmin(cand.astype(jnp.int32), ctx.tp_axis)
+    return g_arg, g_max
+
+
+# ===========================================================================
+# forward (training / prefill)
+# ===========================================================================
+
+def _slice_seq(x, ctx: ShardCtx):
+    """Full-seq (B,S,D) -> this shard's seq slice (B,S/tp,D)."""
+    if ctx.tp == 1 or not ctx.seq_parallel:
+        return x
+    S = x.shape[1]
+    idx = common.axis_index(ctx)
+    return jax.lax.dynamic_slice_in_dim(x, idx * (S // ctx.tp), S // ctx.tp, 1)
+
+
+def _attn_layer(p, x_sp, cfg, spec, ctx, window, positions=None,
+                mrope_positions=None, causal=True, cross_kv=None,
+                return_kv=False):
+    if cfg.parallel_block and cross_kv is None and not return_kv and "mlp" in p:
+        # §Perf: PaLM-style parallel block — ONE gather feeds both branches,
+        # partial outputs sum into ONE reduce-scatter (4 -> 2 SP collectives)
+        h = common.rms_norm(x_sp, p["ln1"])
+        hg = common.sp_all_gather(h, ctx)
+        ya = attention.attn_forward(
+            p["attn"], hg, spec, dataclasses.replace(ctx, seq_parallel=False),
+            positions=positions, causal=causal, window=window,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            mrope_sections=cfg.mrope_sections, mrope_positions=mrope_positions,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, defer_reduce=True)
+        ym = mlp.mlp_forward(p["mlp"], hg,
+                             dataclasses.replace(ctx, seq_parallel=False),
+                             cfg.act, defer_reduce=True)
+        y = common.sp_reduce_scatter(ya + ym, ctx)
+        return x_sp + y, 0.0
+    h = common.rms_norm(x_sp, p["ln1"])
+    res = attention.attn_forward(
+        p["attn"], h, spec, ctx, positions=positions, causal=causal,
+        window=window, attn_softcap=cfg.attn_softcap,
+        rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+        mrope_positions=mrope_positions,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, return_kv=return_kv)
+    if return_kv:
+        res, kv = res
+    x_sp = x_sp + res
+    if cross_kv is not None:
+        hx = common.rms_norm(x_sp, p["lnx"])
+        x_sp = x_sp + attention.attn_forward(
+            p["xattn"], hx, spec, ctx, causal=False, rope_theta=None,
+            kv_override=cross_kv, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h2 = common.rms_norm(x_sp, p["ln2"])
+    if "moe" in p:
+        y, aux = moe.moe_forward(p["moe"], h2, cfg.moe_spec(), ctx)
+    else:
+        y, aux = mlp.mlp_forward(p["mlp"], h2, ctx, cfg.act), 0.0
+    x_sp = x_sp + y
+    if return_kv:
+        return x_sp, aux, kv
+    return x_sp, aux
+
+
+def forward_full(params, tokens, cfg: ArchConfig, plan: ShardPlan,
+                 ctx: ShardCtx, *, enc_embeds=None, patch_embeds=None,
+                 patch_positions=None, mrope_positions=None,
+                 collect_cache: bool = False):
+    """Full-sequence forward -> (x_full (B,S,D), aux_loss, cache|None).
+
+    enc_embeds: (B, enc_ctx, D) stub frontend output (encdec).
+    patch_embeds/(B,n_img,D) + patch_positions (B,n_img): VLM stub.
+    """
+    src = as_source(params)
+    top = src.top()
+    spec = cfg.attn_spec(plan.tp, plan.attn_replicated)
+    x = embed_lookup(top, tokens, cfg, plan, ctx)
+    if patch_embeds is not None:
+        b_idx = jnp.arange(x.shape[0])[:, None]
+        x = x.at[b_idx, patch_positions].set(patch_embeds.astype(x.dtype))
+    x_sp = _slice_seq(x, ctx)
+
+    aux_total = 0.0
+    windows = jnp.array(cfg.layer_windows(), jnp.int32)
+    cache = [] if collect_cache else None
+
+    if cfg.family == "ssm":
+        sspec = cfg.ssm_spec()
+
+        def body(carry, lp):
+            x_sp = carry
+            h = common.rms_norm(x_sp, lp["ln1"])
+            if collect_cache:
+                y, st = ssm.ssm_forward(lp["ssm"], h, sspec, ctx, return_state=True)
+                x_sp = x_sp + y
+                return x_sp, st
+            x_sp = x_sp + ssm.ssm_forward(lp["ssm"], h, sspec, ctx)
+            return x_sp, 0.0
+
+        xs, hook = src.stack("layers")
+
+        def body_h(carry, raw):
+            return body(carry, hook(raw))
+
+        x_sp, states = jax.lax.scan(jax.checkpoint(body_h), x_sp, xs)
+        if collect_cache:
+            cache = states
+
+    elif cfg.family == "hybrid":
+        rspec = cfg.rglru_spec()
+        pat = cfg.hybrid_pattern
+
+        def sub_forward(x_sp, lp, kind, win, want_cache):
+            if kind == "R":
+                h = common.rms_norm(x_sp, lp["ln1"])
+                if want_cache:
+                    y, st = rglru.rglru_block_forward(lp["rec"], h, rspec, ctx,
+                                                      return_state=True)
+                else:
+                    y = rglru.rglru_block_forward(lp["rec"], h, rspec, ctx)
+                    st = 0.0
+                x_sp = x_sp + y
+                h2 = common.rms_norm(x_sp, lp["ln2"])
+                x_sp = x_sp + mlp.mlp_forward(lp["mlp"], h2, ctx, cfg.act)
+                return x_sp, st
+            if want_cache:
+                x_sp, _, kv = _attn_layer(lp, x_sp, cfg, spec, ctx, win,
+                                          return_kv=True)
+                return x_sp, kv
+            x_sp, _ = _attn_layer(lp, x_sp, cfg, spec, ctx, win)
+            return x_sp, 0.0
+
+        def super_body(carry, sp_params):
+            x_sp = carry
+            sts = []
+            for j, kind in enumerate(pat):
+                x_sp, st = sub_forward(x_sp, sp_params[f"sub{j}"], kind,
+                                       cfg.window or GLOBAL_WINDOW, collect_cache)
+                sts.append(st)
+            return x_sp, tuple(sts)
+
+        sxs, shook = src.stack("superblocks")
+
+        def super_body_h(carry, raw):
+            return super_body(carry, shook(raw))
+
+        x_sp, sts = jax.lax.scan(jax.checkpoint(super_body_h), x_sp, sxs)
+        if collect_cache:
+            cache = {"super": sts}
+        if src.has("tail"):
+            txs, thook = src.stack("tail")
+            n_tail = jax.tree.leaves(txs)[0].shape[0]
+            tail_sts = []
+            for i in range(n_tail):
+                lp = thook(jax.tree.map(lambda a, i=i: a[i], txs))
+                x_sp, st = sub_forward(x_sp, lp, pat[i % len(pat)],
+                                       cfg.window or GLOBAL_WINDOW, collect_cache)
+                tail_sts.append(st)
+            if collect_cache:
+                cache["tail"] = tail_sts
+
+    elif cfg.family == "encdec":
+        enc = _slice_seq(enc_embeds.astype(cfg.dtype), ctx)
+
+        def enc_body(carry, lp):
+            h, _ = _attn_layer(lp, carry, cfg, spec, ctx, GLOBAL_WINDOW,
+                               causal=False)
+            return h, 0.0
+
+        exs, ehook = src.stack("enc_layers")
+
+        def enc_body_h(carry, raw):
+            return enc_body(carry, ehook(raw))
+
+        enc, _ = jax.lax.scan(jax.checkpoint(enc_body_h), enc, exs)
+        enc = common.rms_norm(enc, top["enc_final_ln"])
+        enc_full = common.sp_all_gather(enc, ctx)
+
+        def dec_body(carry, lp):
+            x_sp = carry
+            # cross kv computed from encoder output with this layer's xattn
+            kx = (enc_full @ lp["xattn"]["wk"].T)
+            vx = (enc_full @ lp["xattn"]["wv"].T)
+            B, Se = enc_full.shape[:2]
+            kx = kx.reshape(B, Se, -1, cfg.head_dim)
+            vx = vx.reshape(B, Se, -1, cfg.head_dim)
+            if collect_cache:
+                x_sp, _, kv = _attn_layer(lp, x_sp, cfg, spec, ctx,
+                                          GLOBAL_WINDOW, cross_kv=(kx, vx),
+                                          return_kv=True)
+                return x_sp, (kv, (kx, vx))
+            x_sp, _ = _attn_layer(lp, x_sp, cfg, spec, ctx, GLOBAL_WINDOW,
+                                  cross_kv=(kx, vx))
+            return x_sp, 0.0
+
+        dxs, dhook = src.stack("dec_layers")
+
+        def dec_body_h(carry, raw):
+            return dec_body(carry, dhook(raw))
+
+        x_sp, kvs = jax.lax.scan(jax.checkpoint(dec_body_h), x_sp, dxs)
+        if collect_cache:
+            cache = kvs
+
+    else:  # dense / moe / vlm
+        def body(carry, inp):
+            x_sp, aux = carry
+            lp, win = inp
+            if collect_cache:
+                x_sp, a, kv = _attn_layer(lp, x_sp, cfg, spec, ctx, win,
+                                          mrope_positions=mrope_positions,
+                                          return_kv=True)
+                return (x_sp, aux + a), kv
+            x_sp, a = _attn_layer(lp, x_sp, cfg, spec, ctx, win,
+                                  mrope_positions=mrope_positions)
+            return (x_sp, aux + a), 0.0
+
+        xs, hook = src.stack("layers")
+
+        def body_h(carry, raw):
+            lp_raw, win = raw
+            return body(carry, (hook(lp_raw), win))
+
+        (x_sp, aux_total), kvs = jax.lax.scan(
+            jax.checkpoint(body_h), (x_sp, 0.0), (xs, windows))
+        if collect_cache:
+            cache = kvs
+
+    x_sp = common.rms_norm(x_sp, top["final_ln"])
+    x = common.sp_all_gather(x_sp, ctx)
+    return x, aux_total, cache
+
+
+def loss_fn(params, batch, cfg: ArchConfig, plan: ShardPlan, ctx: ShardCtx):
+    """batch: dict(tokens, labels [, enc_embeds, patch_*, mrope_positions])."""
+    x, aux, _ = forward_full(
+        params, batch["tokens"], cfg, plan, ctx,
+        enc_embeds=batch.get("enc_embeds"),
+        patch_embeds=batch.get("patch_embeds"),
+        patch_positions=batch.get("patch_positions"),
+        mrope_positions=batch.get("mrope_positions"))
+    loss = vocab_parallel_xent(x, batch["labels"], as_source(params).top(),
+                               cfg, ctx)
+    if cfg.n_experts:
+        loss = loss + MOE_AUX_COEF * aux / max(cfg.n_layers, 1)
+    return loss

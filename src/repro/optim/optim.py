@@ -1,0 +1,101 @@
+"""Pure-JAX optimizers (no optax in this container).
+
+Optax-like API: ``opt = adam(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params)`` with updates *added* to
+params.  Learning rates may be schedules (callables of the int step).
+
+The paper uses Adam (lr 1e-5) for weights and a *separate* Adam/SGD(m=0.9)
+instance for the scaling factors, with linear or CAWR schedules stepped per
+batch (§4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+LR = Union[float, Schedule]
+
+
+def _lr_at(lr: LR, step: jax.Array) -> jax.Array:
+    if callable(lr):
+        return jnp.asarray(lr(step), jnp.float32)
+    return jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+def sgd(lr: LR, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads, state, params=None):
+        del params
+        lr_t = _lr_at(lr, state.step)
+        if momentum:
+            new_m = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, new_m)
+        else:
+            new_m = None
+            updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, SGDState(state.step + 1, new_m)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(lr: LR, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return AdamState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(jnp.zeros_like, params),
+            jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        step = state.step + 1
+        lr_t = _lr_at(lr, state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v: -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)

@@ -1,0 +1,61 @@
+"""Learning-rate schedules (paper §4.1, Fig. 1).
+
+* ``constant``: no schedule.
+* ``linear``: linearly decaying from peak to ``end_factor*peak`` over the run.
+* ``cawr``: cosine annealing with warm restarts [17]; the paper restarts after
+  each main training epoch t (prior to training the scaling factors), i.e.
+  the restart period equals the steps of one communication epoch.
+
+Schedules are callables step -> lr, stepped once per inferenced batch.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(peak: float):
+    def fn(step):
+        return jnp.full((), peak, jnp.float32)
+    return fn
+
+
+def linear(peak: float, total_steps: int, end_factor: float = 0.0):
+    total = max(total_steps, 1)
+
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total, 0.0, 1.0)
+        return peak * ((1.0 - frac) + end_factor * frac)
+
+    return fn
+
+
+def cawr(peak: float, period: int, t_mult: float = 1.0, min_factor: float = 0.0):
+    """Cosine annealing warm restarts; with t_mult == 1 the period is fixed
+    (the paper restarts every communication epoch)."""
+    period = max(period, 1)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        if t_mult == 1.0:
+            pos = jnp.mod(s, period) / period
+        else:
+            # geometric periods: find current cycle position analytically
+            ratio = s * (t_mult - 1.0) / period + 1.0
+            n = jnp.floor(jnp.log(jnp.maximum(ratio, 1.0)) / jnp.log(t_mult))
+            start = period * (t_mult ** n - 1.0) / (t_mult - 1.0)
+            cur = period * t_mult ** n
+            pos = (s - start) / cur
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.clip(pos, 0.0, 1.0)))
+        return peak * (min_factor + (1.0 - min_factor) * cos)
+
+    return fn
+
+
+def make(name: str, peak: float, total_steps: int, period: int | None = None):
+    if name in ("none", "constant"):
+        return constant(peak)
+    if name == "linear":
+        return linear(peak, total_steps)
+    if name == "cawr":
+        return cawr(peak, period or max(total_steps // 15, 1))
+    raise ValueError(f"unknown schedule {name!r}")

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: REDUCED variants (2-3 layers, d_model<=256,
+<=4 experts) run one forward/train step on CPU asserting shapes + no NaNs,
+plus a cached decode step.  The FULL configs are exercised only via the
+dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs, make_inputs
+from repro.models import decode as decode_lib
+from repro.models import transformer
+from repro.models.common import UNSHARDED
+from repro.models.transformer import SINGLE
+from repro.optim import adam, apply_updates
+
+ARCHS = sorted(all_configs().keys())
+BATCH, SEQ = 2, 64
+
+
+@pytest.fixture(scope="module")
+def reduced_cfgs():
+    return {name: cfg.reduced() for name, cfg in all_configs().items()}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch, reduced_cfgs):
+    cfg = reduced_cfgs[arch]
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg, SINGLE)
+    batch = make_inputs(jax.random.PRNGKey(1), cfg, BATCH, SEQ)
+
+    @jax.jit
+    def loss_and_grad(p):
+        return jax.value_and_grad(
+            lambda q: transformer.loss_fn(q, batch, cfg, SINGLE, UNSHARDED))(p)
+
+    loss, grads = loss_and_grad(params)
+    assert np.isfinite(float(loss)), arch
+    # a sensible LM init: loss near log(vocab)
+    assert float(loss) < np.log(cfg.vocab) * 3
+
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+    opt = adam(1e-3)
+    upd, _ = opt.update(grads, opt.init(params), params)
+    params2 = apply_updates(params, upd)
+    loss2, _ = loss_and_grad(params2)
+    assert np.isfinite(float(loss2)), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch, reduced_cfgs):
+    cfg = reduced_cfgs[arch]
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg, SINGLE)
+    cache = decode_lib.init_cache(cfg, SINGLE, BATCH, cache_len=32,
+                                  enc_ctx=cfg.encoder_ctx or None)
+    toks = jnp.array([1, 2], jnp.int32)
+
+    step = jax.jit(lambda c, t: decode_lib.decode_step(
+        params, c, t, cfg, SINGLE, UNSHARDED))
+    for i in range(3):
+        toks, cache = step(cache, toks)
+    assert toks.shape == (BATCH,)
+    assert int(cache.pos) == 3
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.padded_vocab(1))))
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "mamba2-370m",
+                                  "recurrentgemma-9b", "whisper-small",
+                                  "mixtral-8x22b"])
+def test_prefill_then_decode_consistency(arch, reduced_cfgs):
+    """Prefill must agree with step-by-step decode (same greedy tokens)."""
+    cfg = reduced_cfgs[arch]
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg, SINGLE)
+    extras = {}
+    if cfg.family == "encdec":
+        batch = make_inputs(jax.random.PRNGKey(1), cfg, BATCH, 16)
+        extras["enc_embeds"] = batch["enc_embeds"]
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (BATCH, 16), 0, cfg.vocab)
+    cache_len = 32
+
+    nxt_pre, cache_pre = decode_lib.prefill(params, prompt, cfg, SINGLE,
+                                            UNSHARDED, cache_len, **extras)
+
+    # replay the same prompt token-by-token through decode_step
+    cache = decode_lib.init_cache(cfg, SINGLE, BATCH, cache_len,
+                                  enc_ctx=cfg.encoder_ctx or None)
+    if cfg.family == "encdec":
+        cache = cache._replace(layers={**cache.layers,
+                                       "cross": cache_pre.layers["cross"]})
+    toks = prompt[:, 0]
+    nxt = None
+    for i in range(prompt.shape[1]):
+        nxt, cache = decode_lib.decode_step(params, cache, prompt[:, i], cfg,
+                                            SINGLE, UNSHARDED)
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(nxt_pre))
+
+
+def test_exact_assigned_dimensions():
+    """Pin the full configs to the assignment table."""
+    cfgs = all_configs()
+    expect = {
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+    }
+    for name, (L, d, h, kv, ff, v) in expect.items():
+        c = cfgs[name]
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab) == (L, d, h, kv, ff, v), name
+    m = cfgs["mamba2-370m"]
+    assert (m.n_layers, m.d_model, m.vocab, m.ssm_d_state) == (48, 1024, 50280, 128)
+    assert cfgs["dbrx-132b"].n_experts == 16 and cfgs["dbrx-132b"].top_k == 4
+    assert cfgs["mixtral-8x22b"].n_experts == 8 and cfgs["mixtral-8x22b"].top_k == 2
+
+
+def test_moe_reduced_within_limits(reduced_cfgs):
+    for name, cfg in reduced_cfgs.items():
+        assert cfg.n_layers <= 3
+        assert cfg.d_model <= 512
+        assert cfg.n_experts <= 4

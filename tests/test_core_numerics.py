@@ -1,0 +1,213 @@
+"""Unit + property tests for the core compression numerics (paper Eqs. 1-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import delta as delta_lib
+from repro.core import quant as quant_lib
+from repro.core import residual as residual_lib
+from repro.core import scaling as scaling_lib
+from repro.core import sparsify as sparsify_lib
+
+
+# ---------------------------------------------------------------- quantize
+
+def test_quantize_levels_are_multiples_of_step():
+    x = jnp.array([0.0, 1e-3, -2.5e-3, 4.9e-4, -4.9e-4])
+    step = quant_lib.STEP_SIZE_UNI
+    q = quant_lib.quantize(x, step)
+    deq = quant_lib.dequantize(q, step)
+    np.testing.assert_allclose(deq, np.round(np.asarray(x) / step) * step, rtol=1e-6)
+
+
+@given(st.lists(st.floats(-1.0, 1.0, allow_nan=False), min_size=1, max_size=64),
+       st.floats(1e-6, 1e-1))
+@settings(max_examples=50, deadline=None)
+def test_quantize_error_bounded_by_half_step(vals, step):
+    x = jnp.array(vals, jnp.float32)
+    q = quant_lib.quantize(x, step)
+    deq = quant_lib.dequantize(q, step)
+    # fp32 relative error on x/step adds ~|x|*eps slack on top of step/2
+    slack = step / 2 + np.max(np.abs(np.asarray(x))) * 2e-6 + 1e-9
+    assert np.max(np.abs(np.asarray(deq - x))) <= slack
+
+
+def test_int8_roundtrip_zero_tensor():
+    q, scale = quant_lib.quantize_int8(jnp.zeros((8,)))
+    assert float(scale) == 1.0
+    np.testing.assert_array_equal(np.asarray(q), 0)
+
+
+@given(st.lists(st.floats(-10, 10, allow_nan=False, width=32), min_size=1, max_size=128))
+@settings(max_examples=50, deadline=None)
+def test_int8_error_bound(vals):
+    x = jnp.array(vals, jnp.float32)
+    q, scale = quant_lib.quantize_int8(x)
+    deq = quant_lib.dequantize_int8(q, scale)
+    assert np.max(np.abs(np.asarray(deq - x))) <= float(scale) / 2 + 1e-6
+
+
+# ---------------------------------------------------------------- Eq. 2
+
+def test_eq2_threshold_matches_formula():
+    key = jax.random.PRNGKey(0)
+    dw = jax.random.normal(key, (256,)) * 1e-2
+    theta = sparsify_lib.unstructured_threshold(dw, delta=1.5, step_size=1e-5)
+    m, s = float(jnp.mean(dw)), float(jnp.std(dw))
+    expect = max(abs(m - 1.5 * s), abs(m + 1.5 * s))
+    assert np.isclose(float(theta), max(expect, 0.5e-5), rtol=1e-5)
+
+
+def test_eq2_step_size_clamp():
+    dw = jnp.zeros((16,))  # mean=std=0 -> clamp active
+    theta = sparsify_lib.unstructured_threshold(dw, 1.0, step_size=4.88e-4)
+    assert float(theta) == pytest.approx(4.88e-4 / 2)
+
+
+def test_eq2_zeroes_small_elements_only():
+    dw = jnp.array([0.001, -0.001, 5.0, -5.0])
+    out = sparsify_lib.sparsify_unstructured(dw, delta=1.0)
+    assert float(out[0]) == 0.0 and float(out[1]) == 0.0
+    assert float(out[2]) == 5.0 and float(out[3]) == -5.0
+
+
+# ---------------------------------------------------------------- Eq. 3
+
+def test_eq3_structured_drops_weak_filters():
+    # filters 0,1 tiny; filters 2,3 large -> threshold = mean of scores
+    dw = jnp.stack([
+        jnp.full((3, 3, 3), 1e-4), jnp.full((3, 3, 3), 1e-4),
+        jnp.full((3, 3, 3), 1.0), jnp.full((3, 3, 3), 2.0),
+    ])
+    out = sparsify_lib.sparsify_structured(dw, gamma=1.0)
+    assert float(jnp.abs(out[0]).sum()) == 0.0
+    assert float(jnp.abs(out[1]).sum()) == 0.0
+    np.testing.assert_allclose(np.asarray(out[2]), 1.0)
+
+
+def test_eq3_gamma_zero_keeps_everything():
+    dw = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+    out = sparsify_lib.sparsify_structured(dw, gamma=0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dw))
+
+
+@given(st.integers(2, 16), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_structured_rows_all_or_nothing(m, n):
+    dw = jax.random.normal(jax.random.PRNGKey(m * 31 + n), (m, n))
+    out = np.asarray(sparsify_lib.sparsify_structured(dw, gamma=1.0))
+    for r in range(m):
+        row = out[r]
+        assert np.all(row == 0) or np.all(row == np.asarray(dw)[r])
+
+
+# ---------------------------------------------------------------- fixed rate
+
+def test_topk_rows_roundtrip():
+    dw = jax.random.normal(jax.random.PRNGKey(2), (32, 8))
+    vals, idx = sparsify_lib.topk_rows(dw, sparsity=0.75)
+    assert vals.shape == (8, 8)
+    dense = sparsify_lib.scatter_rows(vals, idx, 32)
+    kept = np.asarray(sparsify_lib.row_scores(dw))
+    order = np.argsort(-kept)[:8]
+    assert set(np.asarray(idx).tolist()) == set(order.tolist())
+    np.testing.assert_allclose(np.asarray(dense)[np.asarray(idx)], np.asarray(vals))
+
+
+@given(st.integers(8, 200), st.floats(0.5, 0.99))
+@settings(max_examples=30, deadline=None)
+def test_fixed_unstructured_sparsity_rate(n, rate):
+    dw = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    out = sparsify_lib.sparsify_topk_unstructured(dw, rate)
+    k = sparsify_lib.keep_count(n, rate)
+    assert int(jnp.sum(out != 0)) == k
+
+
+# ---------------------------------------------------------------- residuals
+
+def test_error_feedback_identity_compression_clears_residual():
+    tree = {"w": jnp.arange(4.0)}
+    res = residual_lib.zeros_like_tree(tree)
+    comp, new_res = residual_lib.apply_error_feedback(tree, res, lambda t: t)
+    np.testing.assert_allclose(np.asarray(new_res["w"]), 0.0)
+    np.testing.assert_allclose(np.asarray(comp["w"]), np.asarray(tree["w"]))
+
+
+def test_error_feedback_accumulates_until_threshold():
+    # compression zeroes everything below 1.0; a 0.4 delta needs 3 rounds
+    def comp(t):
+        return jax.tree.map(lambda x: jnp.where(jnp.abs(x) >= 1.0, x, 0.0), t)
+
+    delta = {"w": jnp.array([0.4])}
+    res = residual_lib.zeros_like_tree(delta)
+    sent = []
+    for _ in range(3):
+        c, res = residual_lib.apply_error_feedback(delta, res, comp)
+        sent.append(float(c["w"][0]))
+    assert sent[0] == 0.0 and sent[1] == 0.0 and sent[2] == pytest.approx(1.2)
+    assert float(res["w"][0]) == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------- scaling
+
+def test_scale_apply_eq4():
+    w = jnp.ones((4, 3, 2, 2))
+    s = jnp.array([1.0, 2.0, 0.0, -1.0])
+    out = scaling_lib.apply_scale(w, s)
+    np.testing.assert_allclose(np.asarray(out[1]), 2.0)
+    np.testing.assert_allclose(np.asarray(out[2]), 0.0)
+    np.testing.assert_allclose(np.asarray(out[3]), -1.0)
+
+
+def test_init_scales_structure_and_ones():
+    params = {"conv": {"w": jnp.zeros((8, 3, 3, 3)), "b": jnp.zeros((8,))},
+              "dense": {"w": jnp.zeros((10, 8))}}
+    scales = scaling_lib.init_scales(params)
+    mask = scaling_lib.scale_mask(params)
+    assert scales["conv"]["w"].shape == (8,)
+    assert scales["conv"]["b"].shape == ()       # placeholder
+    assert mask["conv"]["w"] and not mask["conv"]["b"]
+    assert scaling_lib.num_scale_params(scales, mask) == 18
+    # identity at init
+    scaled = scaling_lib.apply_scales_tree(params, scales)
+    for a, b in zip(jax.tree.leaves(scaled), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_bake_scales_preserves_function():
+    params = {"w": jnp.array([[1.0, 2.0], [3.0, 4.0]])}
+    scales = {"w": jnp.array([2.0, 0.5])}
+    baked, ones = scaling_lib.bake_scales(params, scales)
+    np.testing.assert_allclose(np.asarray(baked["w"]),
+                               [[2.0, 4.0], [1.5, 2.0]])
+    np.testing.assert_allclose(np.asarray(ones["w"]), 1.0)
+
+
+# ---------------------------------------------------------------- pipeline
+
+def test_compress_delta_is_lossy_roundtrip():
+    cfg = delta_lib.CompressionConfig()
+    key = jax.random.PRNGKey(3)
+    delta = {"w": jax.random.normal(key, (16, 8)) * 1e-2}
+    out = delta_lib.compress_delta(delta, cfg)
+    step = cfg.quant.step_size
+    vals = np.asarray(out["w"])
+    assert np.allclose(vals, np.round(vals / step) * step, atol=1e-9)
+
+
+def test_compress_disabled_is_identity():
+    cfg = delta_lib.CompressionConfig(enabled=False)
+    delta = {"w": jnp.array([1e-9, 2.0])}
+    out = delta_lib.compress_delta(delta, cfg)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(delta["w"]))
+
+
+def test_ternary_compression_values():
+    dw = {"w": jnp.array([10.0, -6.0, 0.1, -0.2, 0.05, 0.0, 0.0, 0.0])}
+    out = delta_lib.ternary_compress(dw, sparsity=0.75)["w"]
+    nz = np.asarray(out)[np.asarray(out) != 0]
+    assert len(nz) == 2
+    assert np.allclose(np.abs(nz), 8.0)  # mean(|10|,|6|)
+    assert nz[0] > 0 and nz[1] < 0

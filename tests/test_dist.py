@@ -1,0 +1,197 @@
+"""Distributed runtime tests on an 8-device simulated mesh.
+
+jax locks the device count at first init, so these run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, timeout=560) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+COMMON = """
+import jax, jax.numpy as jnp, dataclasses, numpy as np
+from repro.configs import base as cbase
+from repro.dist.sharding import MeshLayout, make_plan
+from repro.dist import train_step as train_lib
+from repro.dist.collectives import MeshCompression
+from repro.launch.mesh import make_mesh
+
+def setup(arch="gemma2-2b", compression=True, scale_step=True, cpp=2):
+    cfg = dataclasses.replace(cbase.get(arch).reduced(), dtype=jnp.float32)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    layout = MeshLayout(1, 4, 2, clients_per_pod=cpp)
+    plan = make_plan(cfg, 2)
+    settings = train_lib.TrainSettings(
+        microbatches=2, lr=1e-3,
+        compression=MeshCompression(enabled=compression, block=64, sparsity=0.9),
+        scale_step=scale_step)
+    make, sds, sh, specs = train_lib.make_train_step(cfg, layout, plan, mesh, settings)
+    B, S = 8, 64
+    from repro.configs import make_inputs
+    batch = make_inputs(jax.random.PRNGKey(1), cfg, B, S)
+    batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+    fn = make(batch_sds)
+    batch_sh = train_lib.batch_shardings(cfg, layout, mesh, batch_sds)
+    run = jax.jit(fn, in_shardings=(sh, batch_sh), out_shardings=(sh, None))
+    state = train_lib.init_state(jax.random.PRNGKey(0), cfg, layout, plan, mesh, settings)
+    return cfg, run, state, batch
+"""
+
+
+def test_train_step_learns_with_compression():
+    out = run_sub(COMMON + """
+cfg, run, state, batch = setup()
+losses = []
+for _ in range(6):
+    state, m = run(state, batch)
+    losses.append(float(m["loss"]))
+assert all(np.isfinite(losses)), losses
+assert losses[-1] < losses[0], losses
+print("OK", losses[0], losses[-1])
+""")
+    assert "OK" in out
+
+
+def test_compressed_payload_smaller_than_dense():
+    out = run_sub(COMMON + """
+cfg, run, state, batch = setup(compression=True)
+_, m1 = run(state, batch)
+cfg, run2, state2, batch = setup(compression=False)
+_, m2 = run2(state2, batch)
+p_comp, p_dense = float(m1["payload_bytes"]), float(m2["payload_bytes"])
+assert p_comp < p_dense / 4, (p_comp, p_dense)
+print("OK", p_comp, p_dense)
+""")
+    assert "OK" in out
+
+
+def test_moe_and_ssm_archs_train_on_mesh():
+    out = run_sub(COMMON + """
+for arch in ["mixtral-8x22b", "mamba2-370m"]:
+    cfg, run, state, batch = setup(arch)
+    losses = []
+    for _ in range(3):
+        state, m = run(state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses)), (arch, losses)
+    print("OK", arch, losses)
+""")
+    assert out.count("OK") == 2
+
+
+def test_tp_equivalence_with_single_device():
+    """The sharded forward must match the unsharded model numerically."""
+    out = run_sub(COMMON + """
+from repro.models import transformer
+from repro.models.common import ShardCtx, UNSHARDED
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+cfg = dataclasses.replace(cbase.get("internlm2-1.8b").reduced(), dtype=jnp.float32)
+mesh = make_mesh((1, 4), ("data", "model"))
+plan4 = make_plan(cfg, 4)
+# single-device params; re-init per shard deterministically is hard, so test
+# the vocab-parallel loss against a replicated-weight equivalent at tp=4 with
+# attn replicated for exactness.
+B, S = 2, 64
+tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+
+params1 = transformer.init_params(jax.random.PRNGKey(0), cfg, transformer.SINGLE)
+loss1 = transformer.loss_fn(params1, {"tokens": tokens, "labels": labels},
+                            cfg, transformer.SINGLE, UNSHARDED)
+
+# build tp=4 params by SLICING the single-device params per shard
+plan = make_plan(cfg, 4)
+spec = cfg.attn_spec(4, plan.attn_replicated)
+def shard_params(idx):
+    import numpy as np
+    p = jax.tree.map(lambda x: np.asarray(x), params1)
+    out = {"final_ln": p["final_ln"]}
+    vl = cfg.padded_vocab(4) // 4
+    emb = np.zeros((cfg.padded_vocab(4), cfg.d_model), np.float32)
+    emb[:cfg.vocab] = p["embed"][:cfg.vocab]
+    out["embed"] = emb[idx*vl:(idx+1)*vl]
+    layers = p["layers"]
+    hl = spec.q_local
+    hd = cfg.head_dim
+    def sl(name, arr):
+        if name == "wq":
+            return arr.reshape(-1, cfg.n_heads, hd, cfg.d_model)[:, idx*hl:(idx+1)*hl].reshape(arr.shape[0], hl*hd, cfg.d_model)
+        if name in ("wk", "wv"):
+            if spec.kv_sharded:
+                kvl = cfg.n_kv_heads // 4
+                return arr.reshape(-1, cfg.n_kv_heads, hd, cfg.d_model)[:, idx*kvl:(idx+1)*kvl].reshape(arr.shape[0], kvl*hd, cfg.d_model)
+            return arr
+        if name == "wo":
+            return arr.reshape(-1, cfg.d_model, cfg.n_heads, hd)[:, :, idx*hl:(idx+1)*hl].reshape(arr.shape[0], cfg.d_model, hl*hd)
+        return arr
+    ffl = cfg.d_ff // 4
+    lay = {
+        "ln1": layers["ln1"], "ln2": layers["ln2"],
+        "attn": {k: sl(k, v) for k, v in layers["attn"].items()},
+        "mlp": {"w_gate": layers["mlp"]["w_gate"][:, idx*ffl:(idx+1)*ffl],
+                 "w_up": layers["mlp"]["w_up"][:, idx*ffl:(idx+1)*ffl],
+                 "w_down": layers["mlp"]["w_down"][:, :, idx*ffl:(idx+1)*ffl]},
+    }
+    out["layers"] = lay
+    return out
+
+shards = [shard_params(i) for i in range(4)]
+gparams = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)  # (4, ...) leading
+
+ctx = ShardCtx(tp_axis="model", tp_size=4, attn_replicated=plan.attn_replicated,
+               seq_parallel=True)
+
+def per_chip(gp, tokens, labels):
+    p = jax.tree.map(lambda x: x[0], gp)
+    return transformer.loss_fn(p, {"tokens": tokens, "labels": labels}, cfg, plan, ctx)
+
+loss4 = shard_map(per_chip, mesh=mesh,
+                  in_specs=(P("model"), P(), P()), out_specs=P(),
+                  check_rep=False)(gparams, tokens, labels)
+print("loss1", float(loss1), "loss4", float(jnp.mean(loss4)))
+np.testing.assert_allclose(float(loss1), float(jnp.mean(loss4)), rtol=2e-4)
+print("OK tp-equivalence")
+""")
+    assert "OK tp-equivalence" in out
+
+
+def test_decode_step_mesh_runs():
+    out = run_sub(COMMON + """
+from repro.dist import serve_step as serve_lib
+cfg = dataclasses.replace(cbase.get("gemma2-2b").reduced(), dtype=jnp.float32)
+mesh = make_mesh((4, 2), ("data", "model"))
+layout = MeshLayout(1, 4, 2, clients_per_pod=2)
+fn, in_sds, in_sh, plan = serve_lib.make_decode_step(cfg, layout, mesh, 8, 64)
+(p_sds, c_sds, t_sds) = in_sds
+(p_sh, c_sh, t_sh) = in_sh
+run = jax.jit(fn, in_shardings=(p_sh[0], p_sh[1], c_sh, t_sh))
+# concrete zero-init params/cache just to execute
+import numpy as np
+pz = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p_sds[0])
+sz = jax.tree.map(lambda s: jnp.ones(s.shape, s.dtype), p_sds[1])
+cz = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), c_sds)
+toks = jnp.zeros((8,), jnp.int32)
+nxt, cache = run(pz, sz, cz, toks)
+assert nxt.shape == (8,)
+assert int(cache.pos) == 1
+print("OK decode mesh")
+""")
+    assert "OK decode mesh" in out

@@ -1,0 +1,132 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+hypothesis sweeps over shapes/dtypes per the kernel contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.delta_compress import delta_apply, delta_compress
+from repro.kernels.row_stats import row_stats
+from repro.kernels.scaled_matmul import scaled_matmul
+
+
+# ----------------------------------------------------------- scaled_matmul
+
+def test_scaled_matmul_exact_blocks():
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (256, 256))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (128, 256))
+    s = jax.random.normal(jax.random.fold_in(k, 2), (128,))
+    out = scaled_matmul(x, w, s, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.scaled_matmul(x, w, s)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_scaled_matmul_identity_scale_matches_plain():
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (128, 128))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (128, 128))
+    out = scaled_matmul(x, w, jnp.ones(128), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from([jnp.float32, jnp.bfloat16]))
+@settings(max_examples=10, deadline=None)
+def test_scaled_matmul_block_sweep(mi, ni, ki, dtype):
+    bm = bn = bk = 128
+    M, N, K = mi * bm, ni * bn, ki * bk
+    k = jax.random.PRNGKey(M * 31 + N * 7 + K)
+    x = jax.random.normal(k, (M, K), dtype)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (N, K), dtype)
+    s = jax.random.uniform(jax.random.fold_in(k, 2), (N,), jnp.float32, 0.5, 2)
+    out = scaled_matmul(x, w, s, interpret=True)
+    want = ref.scaled_matmul(x, w, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_scaled_matmul_ops_padding():
+    """The ops wrapper must handle non-block-multiple shapes."""
+    k = jax.random.PRNGKey(5)
+    x = jax.random.normal(k, (100, 200))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (77, 200))
+    s = jax.random.uniform(jax.random.fold_in(k, 2), (77,))
+    out = ops.scaled_matmul(x, w, s)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.scaled_matmul(x, w, s)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- delta_compress
+
+@given(st.integers(1, 6), st.floats(0.0, 0.5),
+       st.sampled_from([64, 128, 256]))
+@settings(max_examples=15, deadline=None)
+def test_delta_compress_matches_ref(nblk, theta, block):
+    n = nblk * block
+    d = jax.random.normal(jax.random.PRNGKey(nblk * 7 + block), (n,)) * 0.3
+    q, scales = delta_compress(d, theta, block=block, interpret=True)
+    q_ref, s_ref = ref.delta_compress(d, theta, block)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(s_ref),
+                               rtol=1e-6)
+
+
+def test_delta_compress_all_below_threshold():
+    d = jnp.full((256,), 1e-4)
+    q, scales = delta_compress(d, 1.0, block=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_allclose(np.asarray(scales), 1.0)
+
+
+def test_delta_compress_error_bound():
+    d = jax.random.normal(jax.random.PRNGKey(9), (1024,))
+    q, scales = delta_compress(d, 0.0, block=256, interpret=True)
+    deq = (np.asarray(q, np.float32).reshape(-1, 256)
+           * np.asarray(scales)[:, None]).reshape(-1)
+    err = np.abs(deq - np.asarray(d))
+    assert err.max() <= np.asarray(scales).max() / 2 + 1e-6
+
+
+def test_delta_apply_matches_ref():
+    k = jax.random.PRNGKey(11)
+    w = jax.random.normal(k, (512,))
+    d = jax.random.normal(jax.random.fold_in(k, 1), (512,)) * 0.1
+    q, scales = delta_compress(d, 0.0, block=128, interpret=True)
+    out = delta_apply(w, q, scales, coef=0.5, block=128, interpret=True)
+    want = ref.delta_apply(w, q, scales, 128, mean_coef=0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+# ----------------------------------------------------------- row_stats
+
+@given(st.integers(1, 3), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_row_stats_matches_ref(mi, ni):
+    M, N = mi * 128, ni * 512
+    w = jax.random.normal(jax.random.PRNGKey(M + N), (M, N))
+    out = row_stats(w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.row_stats(w)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_row_stats_ops_padding_rescale():
+    w = jax.random.normal(jax.random.PRNGKey(2), (100, 300))
+    out = ops.row_stats(w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.row_stats(w)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_row_stats_agrees_with_sparsify_scores():
+    """The kernel must agree with the Eq. 3 scores used by core/sparsify."""
+    from repro.core.sparsify import row_scores
+    w = jax.random.normal(jax.random.PRNGKey(3), (128, 512))
+    np.testing.assert_allclose(np.asarray(row_stats(w, interpret=True)),
+                               np.asarray(row_scores(w)), rtol=1e-5)

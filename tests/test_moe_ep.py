@@ -1,0 +1,69 @@
+"""Expert-parallel MoE (ep_a2a) vs dense-TP numerical equivalence on a real
+4-way model axis (subprocess; see test_dist.py for the pattern)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_ep_a2a_matches_dense_tp():
+    code = """
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.models import moe
+from repro.models.common import ShardCtx
+from repro.models.moe import MoESpec
+
+mesh = jax.make_mesh((4,), ("model",))
+E, D, FF, tp = 4, 32, 64, 4
+spec_dense = MoESpec(E, 2, D, FF, capacity_factor=4.0, impl="dense_tp")
+spec_ep = MoESpec(E, 2, D, FF, capacity_factor=4.0, impl="ep_a2a")
+
+key = jax.random.PRNGKey(0)
+# full (unsharded) expert weights
+router = jax.random.normal(key, (E, D)) * 0.1
+wg = jax.random.normal(jax.random.fold_in(key, 1), (E, FF, D)) * 0.1
+wu = jax.random.normal(jax.random.fold_in(key, 2), (E, FF, D)) * 0.1
+wd = jax.random.normal(jax.random.fold_in(key, 3), (E, D, FF)) * 0.1
+x = jax.random.normal(jax.random.fold_in(key, 4), (2, 16, D))
+
+def dense_shard(i):
+    ffl = FF // tp
+    return {"router": router, "w_gate": wg[:, i*ffl:(i+1)*ffl],
+            "w_up": wu[:, i*ffl:(i+1)*ffl], "w_down": wd[:, :, i*ffl:(i+1)*ffl]}
+
+def ep_shard(i):
+    # 1 expert per shard, full width
+    return {"router": router, "w_gate": wg[i:i+1], "w_up": wu[i:i+1],
+            "w_down": wd[i:i+1]}
+
+ctx = ShardCtx(tp_axis="model", tp_size=4, seq_parallel=True)
+
+def run(params_stack, spec):
+    def per_chip(p, x):
+        pl = jax.tree.map(lambda a: a[0], p)
+        # x arrives seq-sharded (S/tp per chip)
+        y, aux = moe.moe_forward(pl, x, spec, ctx)
+        return y
+    return shard_map(per_chip, mesh=mesh,
+                     in_specs=(P("model"), P(None, "model", None)),
+                     out_specs=P(None, "model", None), check_rep=False)(
+        params_stack, x)
+
+dstack = jax.tree.map(lambda *a: jnp.stack(a), *[dense_shard(i) for i in range(4)])
+estack = jax.tree.map(lambda *a: jnp.stack(a), *[ep_shard(i) for i in range(4)])
+y_dense = run(dstack, spec_dense)
+y_ep = run(estack, spec_ep)
+np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_ep),
+                           rtol=2e-4, atol=2e-5)
+print("OK ep_a2a == dense_tp")
+"""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

@@ -1,0 +1,101 @@
+"""Tests for the §Perf beyond-paper variants (parallel block, int8 SP,
+int8-resident decode source) — correctness at tp=1 and on the 8-device mesh
+(via subprocess, like test_dist)."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get, make_inputs
+from repro.models import transformer
+from repro.models.common import UNSHARDED
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_parallel_block_trains_tp1():
+    cfg = dataclasses.replace(get("internlm2-1.8b").reduced(),
+                              parallel_block=True)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg,
+                                     transformer.SINGLE)
+    batch = make_inputs(jax.random.PRNGKey(1), cfg, 2, 64)
+    loss, grads = jax.value_and_grad(
+        lambda p: transformer.loss_fn(p, batch, cfg, transformer.SINGLE,
+                                      UNSHARDED))(params)
+    assert np.isfinite(float(loss))
+    g = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(grads))
+    assert np.isfinite(g) and g > 0
+
+
+def test_sp_int8_is_noop_at_tp1():
+    """sp_int8 only quantizes real gathers; tp=1 must be bit-identical."""
+    cfg = get("internlm2-1.8b").reduced()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg,
+                                     transformer.SINGLE)
+    batch = make_inputs(jax.random.PRNGKey(1), cfg, 2, 64)
+    l1 = transformer.loss_fn(params, batch, cfg, transformer.SINGLE, UNSHARDED)
+    cfg2 = dataclasses.replace(cfg, sp_int8=True)
+    l2 = transformer.loss_fn(params, batch, cfg2, transformer.SINGLE, UNSHARDED)
+    assert float(l1) == float(l2)
+
+
+def test_sp_int8_gather_accuracy_on_mesh():
+    """Quantized SP gathers must stay close to exact on a real tp axis."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.models.common import ShardCtx, sp_all_gather
+mesh = jax.make_mesh((4,), ("model",))
+x = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 32))
+def f(x_sp, int8):
+    ctx = ShardCtx(tp_axis="model", tp_size=4, sp_int8=int8)
+    return sp_all_gather(x_sp, ctx)
+g_exact = shard_map(lambda x: f(x, False), mesh=mesh, in_specs=P(None, "model"),
+                    out_specs=P(None, "model"), check_rep=False)(x)
+g_q = shard_map(lambda x: f(x, True), mesh=mesh, in_specs=P(None, "model"),
+                out_specs=P(None, "model"), check_rep=False)(x)
+err = float(jnp.max(jnp.abs(g_exact - g_q)))
+amax = float(jnp.max(jnp.abs(x)))
+assert err <= amax / 127 + 1e-5, (err, amax)
+print("OK", err)
+"""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_int8_bucket_source_dequant_roundtrip():
+    """Int8BucketSource must reproduce ~the bf16 weights it quantized."""
+    from repro.dist.serve_step import Int8BucketSource
+    from repro.dist.sharding import MeshLayout, bucket_spec, flatten_stack
+    layout = MeshLayout(1, 1, 1, 1)
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (3, 128, 64)),
+            "b": jnp.zeros((3, 128))}
+    spec = bucket_spec(tree, True, 1024)
+    flat = flatten_stack(tree, spec)              # (3, padded)
+    q = jnp.clip(jnp.round(flat.reshape(3, -1, 1024) /
+                           (jnp.max(jnp.abs(flat.reshape(3, -1, 1024)),
+                                    axis=-1, keepdims=True) / 127 + 1e-12)),
+                 -127, 127).astype(jnp.int8).reshape(3, -1)
+    sc = (jnp.max(jnp.abs(flat.reshape(3, -1, 1024)), axis=-1) / 127
+          ).astype(jnp.float16)
+    scales = {"layers": jax.tree.map(
+        lambda l: jnp.ones((3, l.shape[1] if l.ndim > 1 else 1)), tree)}
+    src = Int8BucketSource({"layers": q}, {"layers": {
+        "w": jnp.ones((3, 128)), "b": jnp.ones((3, 1))}},
+        {"layers": sc}, {"layers": spec}, layout, jnp.float32)
+    xs, hook = src.stack("layers")
+    layer0 = hook(jax.tree.map(lambda a: a[0], xs))
+    want = jax.tree.map(lambda a: a[0], tree)
+    err = float(jnp.max(jnp.abs(layer0["w"] - want["w"])))
+    scale_max = float(jnp.max(sc.astype(jnp.float32)))
+    assert err <= scale_max / 2 + 1e-6, (err, scale_max)

@@ -1,0 +1,147 @@
+"""Tests for optimizers, schedules, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.data import federated, synthetic
+from repro.optim import adam, apply_updates, clip_by_global_norm, schedule, sgd
+
+
+# ---------------------------------------------------------------- optim
+
+def _quadratic_losses(opt, steps=200):
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss_fn)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(loss_fn(params))
+
+
+def test_sgd_converges_on_quadratic():
+    assert _quadratic_losses(sgd(0.1)) < 1e-6
+
+def test_sgd_momentum_converges():
+    assert _quadratic_losses(sgd(0.05, momentum=0.9)) < 1e-6
+
+def test_adam_converges_on_quadratic():
+    assert _quadratic_losses(adam(0.3)) < 1e-4
+
+
+def test_adam_bias_correction_first_step():
+    opt = adam(1.0, b1=0.9, b2=0.999, eps=0.0)
+    params = {"w": jnp.zeros(1)}
+    state = opt.init(params)
+    g = {"w": jnp.array([0.5])}
+    upd, _ = opt.update(g, state, params)
+    # first step with bias correction: update = -lr * g/|g| = -1
+    np.testing.assert_allclose(np.asarray(upd["w"]), -1.0, rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}  # norm 5
+    out = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- schedules
+
+def test_linear_schedule_endpoints():
+    fn = schedule.linear(1e-3, 100)
+    assert float(fn(jnp.array(0))) == pytest.approx(1e-3)
+    assert float(fn(jnp.array(100))) == pytest.approx(0.0, abs=1e-9)
+    assert float(fn(jnp.array(50))) == pytest.approx(5e-4)
+
+
+def test_cawr_restarts():
+    fn = schedule.cawr(1.0, period=10)
+    assert float(fn(jnp.array(0))) == pytest.approx(1.0)
+    assert float(fn(jnp.array(10))) == pytest.approx(1.0)   # warm restart
+    assert float(fn(jnp.array(5))) == pytest.approx(0.5, abs=1e-6)
+
+
+def test_cawr_tmult_periods_grow():
+    fn = schedule.cawr(1.0, period=10, t_mult=2.0)
+    # restart boundaries at 10, 30: step 10 and 30 are fresh peaks
+    assert float(fn(jnp.array(10))) > 0.99
+    assert float(fn(jnp.array(30))) > 0.99
+    assert float(fn(jnp.array(20))) == pytest.approx(0.5, abs=1e-2)
+
+
+# ---------------------------------------------------------------- data
+
+def test_image_dataset_learnable_structure():
+    x, y = synthetic.make_image_dataset(jax.random.PRNGKey(0), synthetic.CIFAR_LIKE, 512)
+    assert x.shape == (512, 32, 32, 3) and y.shape == (512,)
+    assert not bool(jnp.any(jnp.isnan(x)))
+    # class-conditional means must differ (signal present)
+    m0 = jnp.mean(x[y == 0], axis=0)
+    m1 = jnp.mean(x[y == 1], axis=0)
+    assert float(jnp.mean(jnp.abs(m0 - m1))) > 0.05
+
+
+def test_federated_split_disjoint_and_shaped():
+    x, y = synthetic.make_image_dataset(jax.random.PRNGKey(1), synthetic.CIFAR_LIKE, 1000)
+    s = federated.split_federated(jax.random.PRNGKey(2), x, y, num_clients=4)
+    assert s.num_clients == 4
+    assert s.client_x.shape[0] == 4
+    assert s.client_val_x.shape[:2][0] == 4
+    total = (s.client_x.shape[0] * s.client_x.shape[1]
+             + s.client_val_x.shape[0] * s.client_val_x.shape[1]
+             + s.test_x.shape[0])
+    assert total <= 1000
+
+
+def test_markov_lm_has_structure():
+    x, y = synthetic.make_markov_lm(jax.random.PRNGKey(3), vocab=64, num_seqs=32, seq_len=16)
+    assert x.shape == (32, 16) and y.shape == (32, 16)
+    # inputs shifted: y[:, :-1] == x[:, 1:]
+    np.testing.assert_array_equal(np.asarray(x[:, 1:]), np.asarray(y[:, :-1]))
+    # branching=4 -> successors of a given token take <= 4 distinct values
+    xs, ys = np.asarray(x).ravel(), np.asarray(y).ravel()
+    succ = {}
+    for a, b in zip(xs, ys):
+        succ.setdefault(int(a), set()).add(int(b))
+    assert max(len(v) for v in succ.values()) <= 4
+
+
+def test_epoch_batches_cover_without_replacement():
+    idx = federated.epoch_batches(jax.random.PRNGKey(4), 100, 10)
+    flat = np.asarray(idx).ravel()
+    assert idx.shape == (10, 10)
+    assert len(set(flat.tolist())) == 100
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layer": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones(3)},
+            "step": jnp.array(7, jnp.int32)}
+    p = os.path.join(tmp_path, "ckpt.msgpack.zst")
+    n = checkpoint.save(p, tree)
+    assert n > 0
+    out = checkpoint.restore(p)
+    np.testing.assert_allclose(out["layer"]["w"], np.arange(12.0).reshape(3, 4))
+    assert int(out["step"]) == 7
+
+
+def test_checkpoint_restore_into_target_structure(tmp_path):
+    from repro.optim import adam
+    params = {"w": jnp.ones((2, 2))}
+    opt = adam(1e-3)
+    state = opt.init(params)
+    p = os.path.join(tmp_path, "opt.ckpt")
+    checkpoint.save(p, state)
+    restored = checkpoint.restore(p, target=state)
+    assert type(restored).__name__ == "AdamState"
+    np.testing.assert_allclose(np.asarray(restored.mu["w"]), 0.0)

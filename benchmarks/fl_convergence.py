@@ -12,13 +12,17 @@ bytes than FedAvg by >=2 orders of magnitude; quant+CABAC alone ~50x.
 """
 from __future__ import annotations
 
+import argparse
 import os
+import sys
+import time
 
 import jax
 
 from repro.core.fsfl import run_federated
 from repro.core.protocol import baseline_configs
 from repro.data import federated, synthetic
+from repro.fl import list_scenarios, run_scenario
 from repro.models import cnn
 
 
@@ -48,7 +52,6 @@ def run(client_counts=(2, 4), rounds=None, verbose=False):
             total_rounds=rounds)
         results = {}
         for name, cfg in cfgs.items():
-            import sys, time
             t0 = time.time()
             res = run_federated(model, cfg, splits, rounds,
                                 jax.random.PRNGKey(42), verbose=verbose)
@@ -74,12 +77,51 @@ def run(client_counts=(2, 4), rounds=None, verbose=False):
     return rows
 
 
-def main():
-    rows = run()
+def run_scenarios(names=None, rounds=None, verbose=False):
+    """Engine-scenario comparison: sampling x server-opt x sync/async rows."""
+    scale = float(os.environ.get("REPRO_BENCH_SCALE", "1"))
+    rounds = rounds or max(3, int(4 * scale))
+    rows = []
+    for name in (names or list_scenarios()):
+        t0 = time.time()
+        res = run_scenario(name, rounds=rounds, verbose=verbose)
+        print(f"# scenario {name}: {time.time()-t0:.1f}s "
+              f"acc={res.final_acc:.3f}", file=sys.stderr, flush=True)
+        last = res.records[-1]
+        rows.append({
+            "scenario": name,
+            "final_acc": round(res.final_acc, 4),
+            "rounds": len(res.records),
+            "total_bytes": last.cum_bytes,
+            "mean_cohort": round(sum(len(r.participants)
+                                     for r in res.records) / len(res.records), 1),
+            "sim_time_s": round(last.sim_time_s, 2),
+            "final_sparsity": round(last.update_sparsity, 4),
+        })
+    return rows
+
+
+def _print_rows(rows):
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:
         print(",".join(str(r[c]) for c in cols))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenarios", nargs="*", metavar="NAME",
+                    help="run named engine scenarios instead of the Table-2 "
+                         "matrix (no names = all registered scenarios)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+    if args.scenarios is not None:
+        rows = run_scenarios(args.scenarios or None, rounds=args.rounds,
+                             verbose=args.verbose)
+    else:
+        rows = run(rounds=args.rounds, verbose=args.verbose)
+    _print_rows(rows)
 
 
 if __name__ == "__main__":

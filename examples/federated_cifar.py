@@ -9,8 +9,12 @@ the final server model.
 
     PYTHONPATH=src python examples/federated_cifar.py [--rounds N]
     [--clients C] [--full]   (--full = paper-size thinned VGG11)
+    [--scenario NAME]        (run a named engine scenario instead; see
+                              `repro.fl.list_scenarios()` — adds client
+                              sampling / server optimizers / async rounds)
 """
 import argparse
+import dataclasses
 
 import jax
 
@@ -18,17 +22,27 @@ from repro import checkpoint
 from repro.core.fsfl import run_federated
 from repro.core.protocol import ProtocolConfig
 from repro.data import federated, synthetic
+from repro.fl import get_scenario, list_scenarios, run_scenario
 from repro.models import cnn
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=10)
-    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="default: 10, or the scenario's registered rounds")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="default: 4, or the scenario's client count")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--bidirectional", action="store_true")
+    ap.add_argument("--scenario", choices=list_scenarios(), default=None)
     ap.add_argument("--out", default="/tmp/fsfl_server.ckpt")
     args = ap.parse_args()
+
+    scenario = get_scenario(args.scenario) if args.scenario else None
+    if args.clients is None:
+        args.clients = scenario.num_clients if scenario else 4
+    if args.rounds is None and scenario is None:
+        args.rounds = 10  # scenario path: None defers to the registered rounds
 
     x, y = synthetic.make_image_dataset(jax.random.PRNGKey(0),
                                         synthetic.CIFAR_LIKE,
@@ -38,21 +52,31 @@ def main():
              cnn.make_vgg("vgg_small", [8, 16, 32], 10, 3, dense_width=16,
                           pool_after=(0, 1, 2)))
 
-    cfg = ProtocolConfig(
-        name="fsfl", method="sparse", scaling=True, error_feedback=True,
-        fixed_sparsity=0.96, structured=False, scale_subepochs=2,
-        scale_lr=2e-2, scale_schedule="cawr", batch_size=32, local_lr=2e-3,
-        total_rounds=args.rounds)
-
-    res = run_federated(model, cfg, splits, args.rounds,
-                        jax.random.PRNGKey(42), verbose=True,
-                        bidirectional=args.bidirectional)
+    if scenario is not None:
+        if args.bidirectional:
+            scenario = dataclasses.replace(scenario, bidirectional=True)
+        res = run_scenario(scenario, rounds=args.rounds,
+                           model=model, splits=splits, verbose=True)
+    else:
+        cfg = ProtocolConfig(
+            name="fsfl", method="sparse", scaling=True, error_feedback=True,
+            fixed_sparsity=0.96, structured=False, scale_subepochs=2,
+            scale_lr=2e-2, scale_schedule="cawr", batch_size=32, local_lr=2e-3,
+            total_rounds=args.rounds)
+        res = run_federated(model, cfg, splits, args.rounds,
+                            jax.random.PRNGKey(42), verbose=True,
+                            bidirectional=args.bidirectional)
     final = res.records[-1]
     print(f"\nfinal acc={final.test_acc:.3f} "
           f"bytes={final.cum_bytes/1e6:.3f} MB "
           f"sparsity={final.update_sparsity:.3f}")
-    # checkpoint the server model (weights only; restore with repro.checkpoint)
-    n = checkpoint.save(args.out, {"acc": final.test_acc})
+    # checkpoint the final server model (restore with repro.checkpoint)
+    n = checkpoint.save(args.out, {
+        "acc": final.test_acc,
+        "params": res.server.params,
+        "scales": res.server.scales,
+        "bn_state": res.server.bn_state,
+    })
     print(f"checkpoint: {args.out} ({n} bytes)")
 
 

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + a fast engine smoke scenario.
+#
+#   scripts/ci.sh            # full run
+#   SKIP_SMOKE=1 scripts/ci.sh   # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
+  echo "== engine smoke: 2 rounds, K=4 of C=8, FedAdam, tiny CNN =="
+  python - <<'PY'
+import jax
+from repro.data import federated, synthetic
+from repro.fl import Scenario, run_scenario
+from repro.models import cnn
+
+task = synthetic.ImageTask("ci", num_classes=4, channels=3, size=32,
+                           prototypes_per_class=2, noise=0.25)
+x, y = synthetic.make_image_dataset(jax.random.PRNGKey(0), task, 480)
+splits = federated.split_federated(jax.random.PRNGKey(1), x, y, num_clients=8)
+model = cnn.make_vgg("vgg_ci", [8, 16], 4, 3, dense_width=16, pool_after=(0, 1))
+
+res = run_scenario(
+    Scenario("ci_smoke", cohort_size=4, server_opt="fedadam",
+             server_lr=1e-2, num_clients=8),
+    rounds=2, model=model, splits=splits, verbose=True)
+assert len(res.records) == 2 and res.records[-1].cum_bytes > 0
+assert all(len(r.participants) == 4 for r in res.records)
+print(f"smoke OK: acc={res.final_acc:.3f} bytes={res.records[-1].cum_bytes}")
+PY
+fi
+
+echo "CI OK"

@@ -7,12 +7,35 @@ treedef (NamedTuple optimizer states etc.).
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstandard is optional: fall back to stdlib zlib when absent
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes, level: int) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(payload)
+    return zlib.compress(payload, min(level, 9))  # zlib caps at 9, zstd at 22
+
+
+def _decompress(data: bytes) -> bytes:
+    if data[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but zstandard is not "
+                "installed; pip install zstandard (or .[dev])")
+        return zstandard.ZstdDecompressor().decompress(data)
+    return zlib.decompress(data)
 
 
 def _pack_leaf(x):
@@ -53,7 +76,7 @@ def save(path: str, tree: Any, level: int = 3) -> int:
     """Write a pytree checkpoint; returns compressed byte count."""
     host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
     payload = msgpack.packb(_encode(host_tree), use_bin_type=True)
-    data = zstandard.ZstdCompressor(level=level).compress(payload)
+    data = _compress(payload, level)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -64,7 +87,7 @@ def save(path: str, tree: Any, level: int = 3) -> int:
 
 def restore(path: str, target: Any | None = None) -> Any:
     with open(path, "rb") as f:
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        payload = _decompress(f.read())
     tree = _decode(msgpack.unpackb(payload, raw=False))
     if target is None:
         return tree

@@ -1,83 +1,31 @@
-"""FSFL host orchestration (Algorithm 1 outer loop) — simulation regime.
+"""FSFL host orchestration — compatibility wrapper over the FL engine.
 
-Drives the jittable per-client round (protocol.py) vmapped over the client
-axis, performs server-side FedAvg aggregation, measures *exact* transmitted
-bytes with the DeepCABAC-style codec, and (optionally) compresses the
-server->clients broadcast too (bidirectional setting, §5.2).
+The seed's hardcoded all-clients FedAvg loop now lives, generalised, in
+``repro.fl.engine`` (client sampling, pluggable server optimizers, buffered
+async aggregation).  ``run_federated`` keeps the original signature and
+byte-accounting semantics by configuring the engine for full participation
++ FedAvg(lr=1) + sync rounds, which consumes the identical PRNG-key
+sequence and performs bitwise the same server update as the seed loop.
+
+``RoundRecord`` / ``RunResult`` / ``measure_update_bytes`` are re-exported
+from the engine (the record schema gained ``participants`` and
+``sim_time_s`` fields, defaulted for old callers).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.coding import nnc
-from repro.core import delta as delta_lib
 from repro.core import quant as quant_lib
-from repro.core import sparsify as sparsify_lib
-from repro.core.protocol import ProtocolConfig, ServerState, make_protocol
-from repro.data.federated import FederatedSplits, client_epoch_batches
+from repro.core.protocol import ProtocolConfig
+from repro.data.federated import FederatedSplits
+from repro.fl.engine import (EngineConfig, RoundRecord, RunResult,  # noqa: F401
+                             measure_update_bytes, run_simulation)
+from repro.fl.sampling import SamplingConfig
+from repro.fl.server_opt import ServerOptConfig
 from repro.models.cnn import CNNModel
 
-
-@dataclasses.dataclass
-class RoundRecord:
-    round: int
-    test_acc: float
-    up_bytes: int
-    down_bytes: int
-    cum_bytes: int
-    mean_val_acc: float
-    update_sparsity: float
-    train_loss: float
-    wall_s: float
-
-
-@dataclasses.dataclass
-class RunResult:
-    config_name: str
-    records: list[RoundRecord]
-
-    @property
-    def final_acc(self) -> float:
-        return self.records[-1].test_acc
-
-    def rounds_to_acc(self, target: float) -> int | None:
-        for r in self.records:
-            if r.test_acc >= target:
-                return r.round
-        return None
-
-    def bytes_to_acc(self, target: float) -> int | None:
-        for r in self.records:
-            if r.test_acc >= target:
-                return r.cum_bytes
-        return None
-
-
-def _tree_mean0(tree: Any) -> Any:
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
-
-
-def _client_slice(tree: Any, i: int) -> Any:
-    return jax.tree.map(lambda x: np.asarray(x[i]), tree)
-
-
-def measure_update_bytes(levels_params: Any, levels_scales: Any,
-                         num_clients: int, ternary: bool) -> int:
-    """Exact DeepCABAC-coded bytes summed over all client uploads."""
-    total = 0
-    for i in range(num_clients):
-        msg = {"p": _client_slice(levels_params, i),
-               "s": _client_slice(levels_scales, i)}
-        total += len(nnc.encode_tree(msg))
-        if ternary:  # per-tensor float32 magnitude header
-            total += 4 * len(jax.tree.leaves(levels_params))
-    return total
+__all__ = ["RoundRecord", "RunResult", "measure_update_bytes",
+           "run_federated"]
 
 
 def run_federated(model: CNNModel, cfg: ProtocolConfig, splits: FederatedSplits,
@@ -85,89 +33,13 @@ def run_federated(model: CNNModel, cfg: ProtocolConfig, splits: FederatedSplits,
                   bidirectional: bool = False,
                   down_step_size: float = quant_lib.STEP_SIZE_BI,
                   verbose: bool = False) -> RunResult:
-    num_clients = splits.num_clients
-    n_train = splits.client_x.shape[1]
-    steps_per_round = max(1, n_train // cfg.batch_size)
-
-    init, client_round, evaluate = make_protocol(model, cfg, steps_per_round)
-    k_init, key = jax.random.split(key)
-    server, persistent0 = init(k_init)
-    # replicate persistent state across clients
-    persistent = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), persistent0)
-
-    vround = jax.jit(jax.vmap(client_round,
-                              in_axes=(None, 0, 0, 0, 0, 0, 0),
-                              out_axes=0))
-    jeval = jax.jit(evaluate)
-
-    # bidirectional downstream compression state
-    down_cfg = dataclasses.replace(
-        cfg, step_size=down_step_size,
-        fixed_sparsity=cfg.fixed_sparsity, method="sparse")
-    down_q = quant_lib.QuantConfig(step_size=down_step_size,
-                                   fine_step_size=cfg.fine_step_size)
-    down_spars = sparsify_lib.SparsifyConfig(
-        delta=cfg.delta, gamma=cfg.gamma, step_size=down_step_size,
-        unstructured=cfg.unstructured, structured=cfg.structured,
-        fixed_sparsity=cfg.fixed_sparsity)
-    server_residual = jax.tree.map(jnp.zeros_like, server.params)
-
-    records: list[RoundRecord] = []
-    cum = 0
-    for t in range(1, rounds + 1):
-        t0 = time.time()
-        key, kb = jax.random.split(key)
-        batch_idx = client_epoch_batches(kb, num_clients, n_train, cfg.batch_size)
-
-        out = vround(server, persistent,
-                     splits.client_x, splits.client_y,
-                     splits.client_val_x, splits.client_val_y, batch_idx)
-        persistent = out.persistent
-
-        mean_dp = _tree_mean0(out.recon_delta_params)
-        mean_ds = _tree_mean0(out.recon_delta_scales)
-        mean_bn = _tree_mean0(out.bn_state)
-
-        down_bytes = 0
-        if bidirectional and cfg.method != "none":
-            carried = delta_lib.tree_add(mean_dp, server_residual)
-            sparse = sparsify_lib.sparsify_tree(carried, down_spars)
-            lv = quant_lib.quantize_tree(sparse, down_q)
-            recon = quant_lib.dequantize_tree(lv, down_q)
-            server_residual = delta_lib.tree_sub(carried, recon)
-            mean_dp = recon
-            if measure_bytes:
-                down_bytes = num_clients * len(nnc.encode_tree(
-                    jax.tree.map(np.asarray, lv)))
-
-        server = ServerState(
-            params=delta_lib.tree_add(server.params, mean_dp),
-            scales=delta_lib.tree_add(server.scales, mean_ds),
-            bn_state=mean_bn)
-
-        up_bytes = 0
-        if measure_bytes:
-            if cfg.method == "none" and not cfg.quantize:
-                # raw FedAvg: full fp32 tensors on the wire
-                up_bytes = num_clients * 4 * sum(
-                    l.size for l in jax.tree.leaves(server.params))
-            else:
-                up_bytes = measure_update_bytes(
-                    out.levels_params, out.levels_scales, num_clients,
-                    ternary=(cfg.method == "ternary"))
-        cum += up_bytes + down_bytes
-
-        acc = float(jeval(server, splits.test_x, splits.test_y))
-        rec = RoundRecord(
-            round=t, test_acc=acc, up_bytes=up_bytes, down_bytes=down_bytes,
-            cum_bytes=cum,
-            mean_val_acc=float(jnp.mean(out.metrics["val_acc"])),
-            update_sparsity=float(jnp.mean(out.metrics["update_sparsity"])),
-            train_loss=float(jnp.mean(out.metrics["train_loss"])),
-            wall_s=time.time() - t0)
-        records.append(rec)
-        if verbose:
-            print(f"[{cfg.name}] round {t:3d} acc={acc:.3f} "
-                  f"up={up_bytes/1e6:.3f}MB sparsity={rec.update_sparsity:.3f}")
-    return RunResult(cfg.name, records)
+    """Seed-compatible entry point: all clients, FedAvg server, sync rounds."""
+    engine = EngineConfig(
+        sampling=SamplingConfig(cohort_size=None),
+        server_opt=ServerOptConfig(name="fedavg", lr=1.0),
+        mode="sync",
+        bidirectional=bidirectional,
+        down_step_size=down_step_size,
+        measure_bytes=measure_bytes)
+    return run_simulation(model, cfg, splits, rounds, key,
+                          engine=engine, verbose=verbose)

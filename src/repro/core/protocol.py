@@ -176,7 +176,9 @@ def make_protocol(model: CNNModel, cfg: ProtocolConfig, steps_per_round: int):
     smask_cache = {}
 
     def _smask(params):
-        key = id(jax.tree.structure(params))
+        # key on the treedef itself (hashable, structural equality) — id()
+        # of a transient treedef can be recycled after garbage collection
+        key = jax.tree.structure(params)
         if key not in smask_cache:
             smask_cache[key] = scaling_lib.scale_mask(params, scale_pred)
         return smask_cache[key]

@@ -1,0 +1,26 @@
+"""Federated simulation engine: sampling x server-opt x sync/async scenarios.
+
+See README.md in this directory for the subsystem layout and the scenario
+registry, and tests/test_fl_engine.py for the behavioural contract.
+"""
+from repro.fl.async_buffer import (AsyncConfig, BufferEntry, aggregate_buffer,
+                                   client_latencies, staleness_weight)
+from repro.fl.engine import (EngineConfig, RoundRecord, RunResult,
+                             encode_client_bytes, measure_update_bytes,
+                             run_simulation)
+from repro.fl.sampling import SamplingConfig, sample_cohort
+from repro.fl.scenarios import (SCENARIOS, Scenario, get_scenario,
+                                list_scenarios, register, run_scenario)
+from repro.fl.server_opt import (ServerOptConfig, make_server_opt,
+                                 server_step, server_update)
+
+__all__ = [
+    "AsyncConfig", "BufferEntry", "aggregate_buffer", "client_latencies",
+    "staleness_weight",
+    "EngineConfig", "RoundRecord", "RunResult", "encode_client_bytes",
+    "measure_update_bytes", "run_simulation",
+    "SamplingConfig", "sample_cohort",
+    "SCENARIOS", "Scenario", "get_scenario", "list_scenarios", "register",
+    "run_scenario",
+    "ServerOptConfig", "make_server_opt", "server_step", "server_update",
+]

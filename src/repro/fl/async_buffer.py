@@ -1,0 +1,78 @@
+"""FedBuff-style buffered asynchronous aggregation (Nguyen et al. 2022).
+
+The engine's async mode keeps M clients training concurrently against
+whatever server version each one started from.  Finished updates land in a
+buffer; once B updates accumulate the server takes one optimizer step on
+their *staleness-weighted* mean and bumps its version.  Staleness tau is the
+number of server versions that elapsed while the client trained; the FedBuff
+down-weighting is
+
+    w(tau) = 1 / (1 + tau) ** staleness_exponent        (0.5 = 1/sqrt(1+tau))
+
+normalised over the buffer.  Client round latencies are heterogeneous
+(lognormal per client) and drive a simulated wall-clock that is recorded in
+``RoundRecord.sim_time_s`` alongside the exact DeepCABAC byte accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    buffer_size: int = 4          # B: updates per server step
+    concurrency: int = 4          # M: clients training at any moment
+    staleness_exponent: float = 0.5
+    latency_mean: float = 1.0     # seconds, lognormal median scale
+    latency_sigma: float = 0.5    # lognormal shape; 0 = homogeneous clients
+
+
+class BufferEntry(NamedTuple):
+    client: int
+    staleness: int          # server versions elapsed since the client synced
+    finish_time: float      # simulated seconds
+    delta_params: Any       # reconstructed (dequantized) update
+    delta_scales: Any
+    bn_state: Any
+    up_bytes: int
+
+
+def client_latencies(key: jax.Array, num_clients: int,
+                     cfg: AsyncConfig) -> np.ndarray:
+    """Per-client simulated round latency (seconds), fixed for the run."""
+    if cfg.latency_sigma == 0.0:
+        return np.full(num_clients, cfg.latency_mean, np.float64)
+    z = np.asarray(jax.random.normal(key, (num_clients,)))
+    return cfg.latency_mean * np.exp(cfg.latency_sigma * z)
+
+
+def staleness_weight(staleness, exponent: float):
+    return 1.0 / (1.0 + np.asarray(staleness, np.float64)) ** exponent
+
+
+def aggregate_buffer(entries: list[BufferEntry], exponent: float):
+    """Staleness-weighted mean of the buffered updates.
+
+    Returns (mean_delta_params, mean_delta_scales, mean_bn, weights) with
+    weights normalised to sum to 1 (so a buffer of fresh updates reduces to
+    the plain mean the sync path uses).
+    """
+    raw = staleness_weight([e.staleness for e in entries], exponent)
+    w = raw / raw.sum()
+
+    def wmean(get):
+        trees = [get(e) for e in entries]
+        return jax.tree.map(
+            lambda *leaves: sum(jnp.asarray(wi, l.dtype) * l
+                                for wi, l in zip(w, leaves)),
+            *trees)
+
+    return (wmean(lambda e: e.delta_params),
+            wmean(lambda e: e.delta_scales),
+            wmean(lambda e: e.bn_state),
+            w)

@@ -1,0 +1,424 @@
+"""Federated simulation engine: the generalised Algorithm-1 outer loop.
+
+Subsumes the seed's hardcoded all-clients FedAvg loop (``core/fsfl.py``,
+now a thin compat wrapper) with three orthogonal axes:
+
+  * **client sampling** — per-round cohorts of K out of C clients
+    (``sampling.py``); the stacked client arrays are gathered down to the
+    cohort so the vmapped ``client_round`` runs only over participants,
+  * **server optimizers** — FedAvg / FedAvgM / FedAdam applied to the
+    aggregated reconstructed delta as a pseudo-gradient (``server_opt.py``),
+  * **sync vs. buffered-async rounds** — FedBuff-style staleness-weighted
+    buffer fed by clients with heterogeneous latencies, driving a simulated
+    wall-clock (``async_buffer.py``).
+
+All modes keep the seed's *exact* DeepCABAC byte accounting (per-client
+``nnc.encode_tree`` of the integer levels) and the optional bidirectional
+downstream compression of the server update with error feedback (§5.2).
+
+Compat guarantee: with full participation + FedAvg(lr=1) + sync mode the
+engine consumes the identical PRNG-key sequence and performs bitwise the
+same server update as the seed loop, so ``fsfl.run_federated`` reproduces
+the seed's byte accounting exactly (tested in tests/test_fl_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.coding import nnc
+from repro.core import delta as delta_lib
+from repro.core import quant as quant_lib
+from repro.core import sparsify as sparsify_lib
+from repro.core.protocol import ProtocolConfig, ServerState, make_protocol
+from repro.data.federated import (FederatedSplits, client_epoch_batches,
+                                  epoch_batches)
+from repro.fl.async_buffer import (AsyncConfig, BufferEntry, aggregate_buffer,
+                                   client_latencies)
+from repro.fl.sampling import (SamplingConfig, gather_clients, sample_available,
+                               sample_cohort, scatter_clients)
+from repro.fl.server_opt import ServerOptConfig, make_server_opt, server_update
+from repro.optim import apply_updates
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    test_acc: float
+    up_bytes: int
+    down_bytes: int
+    cum_bytes: int
+    mean_val_acc: float
+    update_sparsity: float
+    train_loss: float
+    wall_s: float
+    participants: tuple[int, ...] = ()
+    sim_time_s: float = 0.0   # simulated wall-clock (async mode; 0 in sync)
+
+
+@dataclasses.dataclass
+class RunResult:
+    config_name: str
+    records: list[RoundRecord]
+    server: Any = None   # final ServerState (params/scales/bn_state)
+
+    @property
+    def final_acc(self) -> float:
+        return self.records[-1].test_acc
+
+    def rounds_to_acc(self, target: float) -> int | None:
+        for r in self.records:
+            if r.test_acc >= target:
+                return r.round
+        return None
+
+    def bytes_to_acc(self, target: float) -> int | None:
+        for r in self.records:
+            if r.test_acc >= target:
+                return r.cum_bytes
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    sampling: SamplingConfig = SamplingConfig()
+    server_opt: ServerOptConfig = ServerOptConfig()
+    mode: str = "sync"                   # "sync" | "async"
+    async_cfg: AsyncConfig = AsyncConfig()
+    bidirectional: bool = False
+    down_step_size: float = quant_lib.STEP_SIZE_BI
+    measure_bytes: bool = True
+
+
+# ---------------------------------------------------------------- helpers
+
+def _tree_mean0(tree: Any) -> Any:
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def _client_slice(tree: Any, i: int) -> Any:
+    return jax.tree.map(lambda x: np.asarray(x[i]), tree)
+
+
+def encode_client_bytes(levels_params: Any, levels_scales: Any,
+                        ternary: bool) -> int:
+    """Exact DeepCABAC-coded bytes for ONE client's (unstacked) update."""
+    msg = {"p": jax.tree.map(np.asarray, levels_params),
+           "s": jax.tree.map(np.asarray, levels_scales)}
+    n = len(nnc.encode_tree(msg))
+    if ternary:  # per-tensor float32 magnitude header
+        n += 4 * len(jax.tree.leaves(levels_params))
+    return n
+
+
+def measure_update_bytes(levels_params: Any, levels_scales: Any,
+                         num_clients: int, ternary: bool) -> int:
+    """Exact DeepCABAC-coded bytes summed over stacked client uploads."""
+    return sum(
+        encode_client_bytes(_client_slice(levels_params, i),
+                            _client_slice(levels_scales, i), ternary)
+        for i in range(num_clients))
+
+
+def _raw_bytes_per_client(params: Any) -> int:
+    return 4 * sum(l.size for l in jax.tree.leaves(params))
+
+
+class _Downstream:
+    """Bidirectional server->clients compression with error feedback (§5.2).
+
+    Operates on the server *update* (the quantity actually broadcast).  For
+    FedAvg(lr=1) the update equals the aggregated delta bitwise, matching
+    the seed loop's pre-aggregation compression exactly.
+    """
+
+    def __init__(self, cfg: ProtocolConfig, step_size: float, params0: Any):
+        self.enabled_for = cfg.method != "none"
+        self.q = quant_lib.QuantConfig(step_size=step_size,
+                                       fine_step_size=cfg.fine_step_size)
+        self.spars = sparsify_lib.SparsifyConfig(
+            delta=cfg.delta, gamma=cfg.gamma, step_size=step_size,
+            unstructured=cfg.unstructured, structured=cfg.structured,
+            fixed_sparsity=cfg.fixed_sparsity)
+        self.residual = jax.tree.map(jnp.zeros_like, params0)
+
+    def compress(self, updates: Any, receivers: int,
+                 measure: bool) -> tuple[Any, int]:
+        carried = delta_lib.tree_add(updates, self.residual)
+        sparse = sparsify_lib.sparsify_tree(carried, self.spars)
+        lv = quant_lib.quantize_tree(sparse, self.q)
+        recon = quant_lib.dequantize_tree(lv, self.q)
+        self.residual = delta_lib.tree_sub(carried, recon)
+        down = 0
+        if measure:
+            down = receivers * len(nnc.encode_tree(jax.tree.map(np.asarray, lv)))
+        return recon, down
+
+
+# ---------------------------------------------------------------- setup
+
+class _Setup(NamedTuple):
+    """Shared sync/async prologue.  Kept in ONE place because the compat
+    guarantee depends on the exact k_init/key split order."""
+    num_clients: int
+    n_train: int
+    client_round: Any
+    jeval: Any
+    server: ServerState
+    persistent: Any
+    sopt: Any
+    sopt_state: Any
+    down: "_Downstream"
+    key: jax.Array
+
+
+def _setup(model, cfg: ProtocolConfig, splits: FederatedSplits,
+           key: jax.Array, engine: EngineConfig) -> _Setup:
+    num_clients = splits.num_clients
+    if engine.sampling.strategy == "weighted":
+        w = engine.sampling.weights
+        if w is None or len(w) != num_clients:
+            raise ValueError("weighted sampling needs one weight per client")
+    n_train = splits.client_x.shape[1]
+    steps_per_round = max(1, n_train // cfg.batch_size)
+
+    init, client_round, evaluate = make_protocol(model, cfg, steps_per_round)
+    k_init, key = jax.random.split(key)
+    server, persistent0 = init(k_init)
+    persistent = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), persistent0)
+
+    sopt = make_server_opt(engine.server_opt)
+    return _Setup(num_clients, n_train, client_round, jax.jit(evaluate),
+                  server, persistent, sopt, sopt.init(server.params),
+                  _Downstream(cfg, engine.down_step_size, server.params), key)
+
+
+# ---------------------------------------------------------------- sync
+
+def _run_sync(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
+              key: jax.Array, engine: EngineConfig, verbose: bool) -> RunResult:
+    s = _setup(model, cfg, splits, key, engine)
+    num_clients, n_train, key = s.num_clients, s.n_train, s.key
+    server, persistent = s.server, s.persistent
+    sopt, sopt_state, jeval, down = s.sopt, s.sopt_state, s.jeval, s.down
+
+    vround = jax.jit(jax.vmap(s.client_round,
+                              in_axes=(None, 0, 0, 0, 0, 0, 0),
+                              out_axes=0))
+    full = engine.sampling.is_full(num_clients)
+
+    records: list[RoundRecord] = []
+    cum = 0
+    for t in range(1, rounds + 1):
+        t0 = time.time()
+        key, kb = jax.random.split(key)
+        if full:
+            idx = np.arange(num_clients)
+        else:  # extra split only when sampling, so full-participation runs
+            # consume the seed loop's exact key sequence
+            key, ks = jax.random.split(key)
+            idx = sample_cohort(ks, num_clients, engine.sampling)
+        cohort = len(idx)
+        batch_idx = client_epoch_batches(kb, cohort, n_train, cfg.batch_size)
+
+        if full:
+            cx, cy = splits.client_x, splits.client_y
+            cvx, cvy = splits.client_val_x, splits.client_val_y
+            pers_c = persistent
+        else:
+            cx, cy = splits.client_x[idx], splits.client_y[idx]
+            cvx, cvy = splits.client_val_x[idx], splits.client_val_y[idx]
+            pers_c = gather_clients(persistent, idx)
+
+        out = vround(server, pers_c, cx, cy, cvx, cvy, batch_idx)
+        persistent = (out.persistent if full else
+                      scatter_clients(persistent, out.persistent, idx))
+
+        mean_dp = _tree_mean0(out.recon_delta_params)
+        mean_ds = _tree_mean0(out.recon_delta_scales)
+        mean_bn = _tree_mean0(out.bn_state)
+
+        updates, sopt_state = server_update(sopt, sopt_state, mean_dp,
+                                            server.params)
+        down_bytes = 0
+        if engine.bidirectional and down.enabled_for:
+            updates, down_bytes = down.compress(updates, cohort,
+                                                engine.measure_bytes)
+        server = ServerState(
+            params=apply_updates(server.params, updates),
+            scales=delta_lib.tree_add(server.scales, mean_ds),
+            bn_state=mean_bn)
+
+        up_bytes = 0
+        if engine.measure_bytes:
+            if cfg.method == "none" and not cfg.quantize:
+                up_bytes = cohort * _raw_bytes_per_client(server.params)
+            else:
+                up_bytes = measure_update_bytes(
+                    out.levels_params, out.levels_scales, cohort,
+                    ternary=(cfg.method == "ternary"))
+        cum += up_bytes + down_bytes
+
+        acc = float(jeval(server, splits.test_x, splits.test_y))
+        rec = RoundRecord(
+            round=t, test_acc=acc, up_bytes=up_bytes, down_bytes=down_bytes,
+            cum_bytes=cum,
+            mean_val_acc=float(jnp.mean(out.metrics["val_acc"])),
+            update_sparsity=float(jnp.mean(out.metrics["update_sparsity"])),
+            train_loss=float(jnp.mean(out.metrics["train_loss"])),
+            wall_s=time.time() - t0,
+            participants=tuple(int(i) for i in idx))
+        records.append(rec)
+        if verbose:
+            print(f"[{cfg.name}] round {t:3d} acc={acc:.3f} "
+                  f"cohort={cohort} up={up_bytes/1e6:.3f}MB "
+                  f"sparsity={rec.update_sparsity:.3f}")
+    return RunResult(cfg.name, records, server=server)
+
+
+# ---------------------------------------------------------------- async
+
+@dataclasses.dataclass
+class _InFlight:
+    client: int
+    start_version: int
+    server: ServerState
+    finish: float
+
+
+def _run_async(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
+               key: jax.Array, engine: EngineConfig, verbose: bool) -> RunResult:
+    acfg = engine.async_cfg
+    if engine.sampling.cohort_size is not None:
+        raise ValueError(
+            "async mode has no per-round cohort: participation is driven by "
+            "AsyncConfig.concurrency; leave SamplingConfig.cohort_size unset")
+    s = _setup(model, cfg, splits, key, engine)
+    num_clients, n_train, key = s.num_clients, s.n_train, s.key
+    server, persistent = s.server, s.persistent
+    sopt, sopt_state, jeval, down = s.sopt, s.sopt_state, s.jeval, s.down
+
+    jround = jax.jit(s.client_round)
+
+    key, kl = jax.random.split(key)
+    latency = client_latencies(kl, num_clients, acfg)
+
+    concurrency = min(acfg.concurrency, num_clients)
+    available = set(range(num_clients))
+    key, ks = jax.random.split(key)
+    first = sample_available(ks, np.array(sorted(available)), concurrency,
+                             engine.sampling)
+    in_flight: list[_InFlight] = []
+    for c in first:
+        available.discard(int(c))
+        in_flight.append(_InFlight(int(c), 0, server, float(latency[c])))
+
+    version = 0
+    now = 0.0
+    buffer: list[BufferEntry] = []
+    buf_metrics: list[Any] = []
+    records: list[RoundRecord] = []
+    cum = 0
+    t0 = time.time()
+    while len(records) < rounds:
+        # pop the earliest-finishing client (concurrency is small)
+        e = min(in_flight, key=lambda f: f.finish)
+        in_flight.remove(e)
+        now = e.finish
+        c = e.client
+
+        key, kb = jax.random.split(key)
+        bidx = epoch_batches(kb, n_train, cfg.batch_size)
+        pers_c = jax.tree.map(lambda x: x[c], persistent)
+        out = jround(e.server, pers_c,
+                     splits.client_x[c], splits.client_y[c],
+                     splits.client_val_x[c], splits.client_val_y[c], bidx)
+        persistent = jax.tree.map(lambda f, u: f.at[c].set(u),
+                                  persistent, out.persistent)
+
+        up = 0
+        if engine.measure_bytes:
+            if cfg.method == "none" and not cfg.quantize:
+                up = _raw_bytes_per_client(server.params)
+            else:
+                up = encode_client_bytes(out.levels_params, out.levels_scales,
+                                         ternary=(cfg.method == "ternary"))
+        buffer.append(BufferEntry(
+            client=c, staleness=version - e.start_version, finish_time=now,
+            delta_params=out.recon_delta_params,
+            delta_scales=out.recon_delta_scales,
+            bn_state=out.bn_state, up_bytes=up))
+        buf_metrics.append(out.metrics)
+
+        if len(buffer) >= acfg.buffer_size:
+            # ---- server step on the staleness-weighted buffer ------------
+            mean_dp, mean_ds, mean_bn, _w = aggregate_buffer(
+                buffer, acfg.staleness_exponent)
+            updates, sopt_state = server_update(sopt, sopt_state, mean_dp,
+                                                server.params)
+            down_bytes = 0
+            if engine.bidirectional and down.enabled_for:
+                updates, down_bytes = down.compress(updates, concurrency,
+                                                    engine.measure_bytes)
+            server = ServerState(
+                params=apply_updates(server.params, updates),
+                scales=delta_lib.tree_add(server.scales, mean_ds),
+                bn_state=mean_bn)
+            version += 1
+
+            up_bytes = sum(b.up_bytes for b in buffer)
+            cum += up_bytes + down_bytes
+            acc = float(jeval(server, splits.test_x, splits.test_y))
+            rec = RoundRecord(
+                round=version, test_acc=acc, up_bytes=up_bytes,
+                down_bytes=down_bytes, cum_bytes=cum,
+                mean_val_acc=float(np.mean(
+                    [float(m["val_acc"]) for m in buf_metrics])),
+                update_sparsity=float(np.mean(
+                    [float(m["update_sparsity"]) for m in buf_metrics])),
+                train_loss=float(np.mean(
+                    [float(m["train_loss"]) for m in buf_metrics])),
+                wall_s=time.time() - t0,
+                participants=tuple(b.client for b in buffer),
+                sim_time_s=now)
+            records.append(rec)
+            if verbose:
+                stale = [b.staleness for b in buffer]
+                print(f"[{cfg.name}] agg {version:3d} acc={acc:.3f} "
+                      f"t_sim={now:.2f}s staleness={stale} "
+                      f"up={up_bytes/1e6:.3f}MB")
+            buffer, buf_metrics = [], []
+            t0 = time.time()
+
+        # the client is free again; dispatch a replacement AFTER any
+        # aggregation its own update triggered, so the replacement trains
+        # from the newest server version available at this sim-instant
+        # (otherwise every B-th dispatch starts one version stale)
+        available.add(c)
+        key, ks = jax.random.split(key)
+        nxt = int(sample_available(ks, np.array(sorted(available)), 1,
+                                   engine.sampling)[0])
+        available.discard(nxt)
+        in_flight.append(_InFlight(nxt, version, server,
+                                   now + float(latency[nxt])))
+    return RunResult(cfg.name, records, server=server)
+
+
+# ---------------------------------------------------------------- entry
+
+def run_simulation(model, cfg: ProtocolConfig, splits: FederatedSplits,
+                   rounds: int, key: jax.Array, *,
+                   engine: EngineConfig = EngineConfig(),
+                   verbose: bool = False) -> RunResult:
+    """Run ``rounds`` aggregations of the federated simulation."""
+    if engine.mode == "sync":
+        return _run_sync(model, cfg, splits, rounds, key, engine, verbose)
+    if engine.mode == "async":
+        return _run_async(model, cfg, splits, rounds, key, engine, verbose)
+    raise ValueError(f"unknown engine mode: {engine.mode!r}")

@@ -1,0 +1,89 @@
+"""Client-sampling schedulers: which K of C clients participate in a round.
+
+Production FL never sees full participation — the server draws a cohort per
+round (uniformly, or weighted e.g. by client data size / availability).  The
+engine gathers the cohort's slices out of the stacked client arrays in
+``data/federated.py`` so the vmapped ``client_round`` only runs over the
+cohort, then scatters the per-client persistent state back.
+
+Sampling is driven by an explicit PRNG key so cohort sequences are exactly
+reproducible (tested in tests/test_fl_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """Cohort selection for one round.
+
+    cohort_size None (or >= num_clients) means full participation — the
+    engine then consumes no sampling randomness, which keeps the key
+    sequence identical to the seed's all-clients loop (compat guarantee).
+    """
+    cohort_size: int | None = None
+    strategy: str = "uniform"            # "uniform" | "weighted"
+    weights: tuple[float, ...] | None = None  # required for "weighted"
+
+    def effective_size(self, num_clients: int) -> int:
+        if self.cohort_size is None:
+            return num_clients
+        return min(self.cohort_size, num_clients)
+
+    def is_full(self, num_clients: int) -> bool:
+        return self.effective_size(num_clients) >= num_clients
+
+
+def sample_cohort(key: jax.Array, num_clients: int,
+                  cfg: SamplingConfig) -> np.ndarray:
+    """Sorted client indices for one round's cohort (without replacement)."""
+    k = cfg.effective_size(num_clients)
+    if k >= num_clients:
+        return np.arange(num_clients)
+    if cfg.strategy == "uniform":
+        idx = jax.random.choice(key, num_clients, (k,), replace=False)
+    elif cfg.strategy == "weighted":
+        if cfg.weights is None or len(cfg.weights) != num_clients:
+            raise ValueError("weighted sampling needs one weight per client")
+        p = jnp.asarray(cfg.weights, jnp.float32)
+        p = p / jnp.sum(p)
+        idx = jax.random.choice(key, num_clients, (k,), replace=False, p=p)
+    else:
+        raise ValueError(f"unknown sampling strategy: {cfg.strategy!r}")
+    return np.sort(np.asarray(idx))
+
+
+def sample_available(key: jax.Array, available: np.ndarray, k: int,
+                     cfg: SamplingConfig) -> np.ndarray:
+    """Draw k clients from an explicit availability set (async replacements).
+
+    Used by the buffered-async mode where in-flight clients cannot be
+    re-dispatched until their current update lands.
+    """
+    if len(available) <= k:
+        return np.sort(available)
+    if cfg.strategy == "weighted" and cfg.weights is not None:
+        w = np.asarray([cfg.weights[c] for c in available], np.float32)
+        p = jnp.asarray(w / w.sum())
+    else:
+        p = None
+    idx = jax.random.choice(key, len(available), (k,), replace=False, p=p)
+    return np.sort(available[np.asarray(idx)])
+
+
+# ---------------------------------------------------------------- gather
+
+def gather_clients(tree: Any, idx: np.ndarray) -> Any:
+    """Slice a client-stacked pytree down to the cohort rows."""
+    return jax.tree.map(lambda x: x[idx], tree)
+
+
+def scatter_clients(full: Any, cohort: Any, idx: np.ndarray) -> Any:
+    """Write cohort rows back into the full client-stacked pytree."""
+    return jax.tree.map(lambda f, c: f.at[idx].set(c), full, cohort)

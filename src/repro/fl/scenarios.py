@@ -1,0 +1,186 @@
+"""Scenario registry: named, reproducible federated experiment settings.
+
+A Scenario composes the orthogonal engine axes — client sampling x server
+optimizer x sync/async x uni/bidirectional x full/partial updates — on top
+of one of the Table-2 protocol rows.  Scenarios are frozen dataclasses keyed
+by name in ``SCENARIOS`` so benchmarks (`benchmarks/fl_convergence.py`),
+examples (`examples/federated_cifar.py`) and CI (`scripts/ci.sh`) all run
+the exact same settings.
+
+    from repro.fl import run_scenario
+    result = run_scenario("sync_k4_fedadam", rounds=3)
+
+Callers may pass their own (model, splits) to run a scenario on a bigger
+task; by default a tiny VGG on the synthetic CIFAR-like set is built, sized
+for the single-core container.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core.protocol import ProtocolConfig, baseline_configs
+from repro.data import federated, synthetic
+from repro.fl.async_buffer import AsyncConfig
+from repro.fl.engine import EngineConfig, RunResult, run_simulation
+from repro.fl.sampling import SamplingConfig
+from repro.fl.server_opt import ServerOptConfig
+from repro.models import cnn
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str = ""
+    # --- protocol (Table-2 row + overrides) ---
+    protocol: str = "fsfl"       # key into baseline_configs
+    protocol_overrides: tuple[tuple[str, Any], ...] = ()
+    partial_updates: bool = False   # classifier-only differential updates
+    # --- population / sampling ---
+    num_clients: int = 8
+    cohort_size: int | None = None  # None = full participation
+    sampling_strategy: str = "uniform"
+    sampling_weights: tuple[float, ...] | None = None
+    # --- server optimizer ---
+    server_opt: str = "fedavg"
+    server_lr: float = 1.0
+    server_momentum: float = 0.9
+    # --- round structure ---
+    mode: str = "sync"              # "sync" | "async"
+    buffer_size: int = 4
+    concurrency: int = 4
+    staleness_exponent: float = 0.5
+    bidirectional: bool = False
+    rounds: int = 3
+
+
+def _fc_only(path: str, leaf) -> bool:
+    return path.startswith("fc")
+
+
+def build_protocol(s: Scenario, rounds: int) -> ProtocolConfig:
+    cfgs = baseline_configs(
+        fixed_sparsity=0.9, batch_size=32, local_lr=2e-3,
+        scale_lr=2e-2, scale_subepochs=2, scale_schedule="linear",
+        total_rounds=rounds)
+    cfg = cfgs[s.protocol]
+    over = dict(s.protocol_overrides)
+    if s.partial_updates:
+        over.setdefault("trainable_predicate", _fc_only)
+    over.setdefault("name", s.name)
+    return dataclasses.replace(cfg, **over)
+
+
+def build_engine(s: Scenario) -> EngineConfig:
+    return EngineConfig(
+        sampling=SamplingConfig(cohort_size=s.cohort_size,
+                                strategy=s.sampling_strategy,
+                                weights=s.sampling_weights),
+        server_opt=ServerOptConfig(name=s.server_opt, lr=s.server_lr,
+                                   momentum=s.server_momentum),
+        mode=s.mode,
+        async_cfg=AsyncConfig(buffer_size=s.buffer_size,
+                              concurrency=s.concurrency,
+                              staleness_exponent=s.staleness_exponent),
+        bidirectional=s.bidirectional)
+
+
+def default_setting(num_clients: int, *, n_samples: int = 640,
+                    seed: int = 0):
+    """Tiny VGG + synthetic CIFAR-like federated split (container-sized)."""
+    task = synthetic.ImageTask("cifar_like", 10, 3, prototypes_per_class=2,
+                               noise=0.3)
+    x, y = synthetic.make_image_dataset(jax.random.PRNGKey(seed), task,
+                                        n_samples)
+    splits = federated.split_federated(jax.random.PRNGKey(seed + 1), x, y,
+                                       num_clients)
+    model = cnn.make_vgg("vgg_scenario", [8, 16, 32], 10, 3,
+                         dense_width=16, pool_after=(0, 1, 2))
+    return model, splits
+
+
+# ---------------------------------------------------------------- registry
+
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def register(s: Scenario) -> Scenario:
+    if s.name in SCENARIOS:
+        raise ValueError(f"scenario {s.name!r} already registered")
+    SCENARIOS[s.name] = s
+    return s
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        known = ", ".join(sorted(SCENARIOS))
+        raise KeyError(f"unknown scenario {name!r}; known: {known}") from None
+
+
+def list_scenarios() -> list[str]:
+    return sorted(SCENARIOS)
+
+
+for _s in [
+    Scenario("sync_full_fedavg_fsfl",
+             "seed-parity setting: all clients, FedAvg server, FSFL protocol"),
+    Scenario("sync_full_fedavg_raw",
+             "uncompressed FedAvg baseline (full fp32 on the wire)",
+             protocol="fedavg"),
+    Scenario("sync_k4_fedadam",
+             "cohorts of 4 of 8, FedAdam server optimizer",
+             cohort_size=4, server_opt="fedadam", server_lr=1e-2),
+    Scenario("sync_k4_fedavgm",
+             "cohorts of 4 of 8, server momentum 0.9",
+             cohort_size=4, server_opt="fedavgm"),
+    Scenario("sync_weighted_k4",
+             "size-weighted cohort sampling (availability-skewed clients)",
+             cohort_size=4,
+             sampling_strategy="weighted",
+             sampling_weights=(1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 4.0, 4.0)),
+    Scenario("async_b4_fsfl",
+             "FedBuff-style buffer of 4, 4 concurrent heterogeneous clients",
+             mode="async", buffer_size=4, concurrency=4),
+    Scenario("async_b2_m4_fedadam",
+             "aggressive async: aggregate every 2 updates, FedAdam server",
+             mode="async", buffer_size=2, concurrency=4,
+             server_opt="fedadam", server_lr=1e-2),
+    Scenario("bidi_sync_full",
+             "bidirectional compression of the server broadcast (§5.2)",
+             bidirectional=True),
+    Scenario("partial_fc_k4",
+             "classifier-only partial updates with cohort sampling",
+             cohort_size=4, partial_updates=True),
+]:
+    register(_s)
+del _s
+
+
+# ---------------------------------------------------------------- runner
+
+def run_scenario(scenario: str | Scenario, *, rounds: int | None = None,
+                 key: jax.Array | None = None, model=None, splits=None,
+                 verbose: bool = False) -> RunResult:
+    """Run a (named or ad-hoc) scenario end to end; returns a RunResult."""
+    s = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    rounds = rounds if rounds is not None else s.rounds
+    key = key if key is not None else jax.random.PRNGKey(42)
+    if (model is None) != (splits is None):
+        raise ValueError("pass both model and splits, or neither")
+    if model is None:
+        model, splits = default_setting(s.num_clients)
+    if splits.num_clients != s.num_clients:
+        if (s.sampling_weights is not None
+                and len(s.sampling_weights) != splits.num_clients):
+            raise ValueError(
+                f"scenario {s.name!r} defines {len(s.sampling_weights)} "
+                f"sampling weights but splits have {splits.num_clients} "
+                "clients")
+        s = dataclasses.replace(s, num_clients=splits.num_clients)
+    cfg = build_protocol(s, rounds)
+    return run_simulation(model, cfg, splits, rounds, key,
+                          engine=build_engine(s), verbose=verbose)

@@ -1,0 +1,64 @@
+"""Pluggable server optimizers over aggregated client deltas.
+
+Following Reddi et al., "Adaptive Federated Optimization" (FedOpt): the
+aggregated reconstructed delta acts as a *pseudo-gradient* for a server-side
+first-order optimizer.  We reuse the repo's own ``optim/`` transforms — the
+pseudo-gradient is ``-delta`` so that the optimizer's descent direction is
+the direction the clients moved:
+
+  fedavg    sgd(lr=1, momentum=0)   -> params + delta     (seed-exact)
+  fedavgm   sgd(lr, momentum=beta)  -> momentum-smoothed delta
+  fedadam   adam(lr, b1, b2, eps)   -> adaptive per-coordinate step
+
+FedAvg with lr=1.0 is bitwise identical to the seed's plain
+``tree_add(params, mean_delta)`` (multiply-by-1.0 is exact in float32),
+which the compat wrapper in ``core/fsfl.py`` relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, adam, apply_updates, sgd
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOptConfig:
+    name: str = "fedavg"     # "fedavg" | "fedavgm" | "fedadam"
+    lr: float = 1.0
+    momentum: float = 0.9    # fedavgm
+    b1: float = 0.9          # fedadam
+    b2: float = 0.99         # fedadam (FedOpt default, not 0.999)
+    eps: float = 1e-3        # fedadam "tau" — large eps per FedOpt
+
+
+def make_server_opt(cfg: ServerOptConfig) -> Optimizer:
+    if cfg.name == "fedavg":
+        return sgd(cfg.lr, momentum=0.0)
+    if cfg.name == "fedavgm":
+        return sgd(cfg.lr, momentum=cfg.momentum)
+    if cfg.name == "fedadam":
+        return adam(cfg.lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps)
+    raise ValueError(f"unknown server optimizer: {cfg.name!r}")
+
+
+def server_update(opt: Optimizer, opt_state: Any, mean_delta: Any,
+                  params: Any = None) -> tuple[Any, Any]:
+    """One server-optimizer step; returns (updates, new_opt_state).
+
+    ``updates`` are *added* to the server params (optim/ convention).  The
+    engine keeps the update separate so bidirectional mode can compress the
+    actual broadcast quantity before applying it.
+    """
+    pseudo_grad = jax.tree.map(jnp.negative, mean_delta)
+    return opt.update(pseudo_grad, opt_state, params)
+
+
+def server_step(opt: Optimizer, params: Any, opt_state: Any,
+                mean_delta: Any) -> tuple[Any, Any]:
+    """Apply one server-optimizer step; returns (new_params, new_opt_state)."""
+    updates, opt_state = server_update(opt, opt_state, mean_delta, params)
+    return apply_updates(params, updates), opt_state

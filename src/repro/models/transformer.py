@@ -177,7 +177,10 @@ class ParamSource:
         return name in self._p
 
     def top(self) -> dict:
-        from repro.dist.sharding import STACKED_KEYS  # no cycle at call time
+        try:
+            from repro.dist.sharding import STACKED_KEYS  # no cycle at call time
+        except ImportError:  # mesh runtime absent: direct-dict layout
+            STACKED_KEYS = ("layers", "superblocks")
         return {k: v for k, v in self._p.items() if k not in STACKED_KEYS}
 
     def stack(self, name: str):

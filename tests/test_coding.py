@@ -1,6 +1,8 @@
 """Exact round-trip tests for the NNC/DeepCABAC-style codec."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.coding import nnc

@@ -1,0 +1,234 @@
+"""Behavioural contract of the federated simulation engine (repro.fl):
+cohort sampling determinism, server-optimizer numerics, staleness-weighted
+async aggregation, byte-accounting regression, scenario acceptance, and the
+fsfl compat wrapper."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fsfl as fsfl_lib
+from repro.core.protocol import ProtocolConfig
+from repro.data import federated, synthetic
+from repro.fl import (AsyncConfig, BufferEntry, EngineConfig, SamplingConfig,
+                      Scenario, ServerOptConfig, aggregate_buffer,
+                      client_latencies, encode_client_bytes, make_server_opt,
+                      measure_update_bytes, run_scenario, run_simulation,
+                      sample_cohort, server_step, staleness_weight)
+from repro.models import cnn
+
+
+# ------------------------------------------------------------- sampling
+
+def test_cohort_sampling_deterministic_under_fixed_key():
+    cfg = SamplingConfig(cohort_size=4)
+    a = sample_cohort(jax.random.PRNGKey(3), 10, cfg)
+    b = sample_cohort(jax.random.PRNGKey(3), 10, cfg)
+    np.testing.assert_array_equal(a, b)
+    assert len(a) == 4 and len(set(a.tolist())) == 4
+    assert all(0 <= i < 10 for i in a)
+    # a different key draws a different cohort (fixed keys, checked once)
+    c = sample_cohort(jax.random.PRNGKey(4), 10, cfg)
+    assert a.tolist() != c.tolist()
+
+
+def test_full_participation_needs_no_randomness():
+    cfg = SamplingConfig(cohort_size=None)
+    assert cfg.is_full(8)
+    np.testing.assert_array_equal(
+        sample_cohort(jax.random.PRNGKey(0), 8, cfg), np.arange(8))
+
+
+def test_weighted_sampling_prefers_heavy_client():
+    weights = (1e-6,) * 7 + (1.0,)
+    cfg = SamplingConfig(cohort_size=1, strategy="weighted", weights=weights)
+    for seed in range(5):
+        idx = sample_cohort(jax.random.PRNGKey(seed), 8, cfg)
+        assert idx.tolist() == [7]
+
+
+# ------------------------------------------------------------- server opt
+
+def _delta_tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (4, 3)) * 1e-2,
+            "b": jax.random.normal(k2, (3,)) * 1e-2}
+
+
+def test_fedavg_server_step_is_bitwise_plain_add():
+    """lr=1 FedAvg must match the seed loop's tree_add exactly."""
+    params = _delta_tree(jax.random.PRNGKey(0))
+    delta = _delta_tree(jax.random.PRNGKey(1))
+    opt = make_server_opt(ServerOptConfig("fedavg", lr=1.0))
+    new_params, _ = server_step(opt, params, opt.init(params), delta)
+    for a, b in zip(jax.tree.leaves(new_params),
+                    jax.tree.leaves(jax.tree.map(lambda p, d: p + d,
+                                                 params, delta))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fedadam_first_step_matches_adaptive_formula():
+    scfg = ServerOptConfig("fedadam", lr=1e-2, b1=0.9, b2=0.99, eps=1e-3)
+    params = jax.tree.map(jnp.zeros_like, _delta_tree(jax.random.PRNGKey(0)))
+    delta = _delta_tree(jax.random.PRNGKey(1))
+    opt = make_server_opt(scfg)
+    new_params, _ = server_step(opt, params, opt.init(params), delta)
+    # first Adam step with pseudo-grad g=-delta: bias correction cancels,
+    # update = lr * delta / (|delta| + eps)
+    expected = jax.tree.map(
+        lambda d: scfg.lr * d / (jnp.abs(d) + scfg.eps), delta)
+    for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-8)
+
+
+def test_fedadam_differs_from_fedavg_and_respects_lr():
+    delta = _delta_tree(jax.random.PRNGKey(1))
+    params = jax.tree.map(jnp.zeros_like, delta)
+    avg = make_server_opt(ServerOptConfig("fedavg", lr=1.0))
+    ada = make_server_opt(ServerOptConfig("fedadam", lr=1e-2))
+    p_avg, _ = server_step(avg, params, avg.init(params), delta)
+    p_ada, _ = server_step(ada, params, ada.init(params), delta)
+    a = np.concatenate([np.ravel(l) for l in jax.tree.leaves(p_avg)])
+    b = np.concatenate([np.ravel(l) for l in jax.tree.leaves(p_ada)])
+    assert not np.allclose(a, b)
+    # adaptive step is bounded by lr per coordinate
+    assert np.max(np.abs(b)) <= 1e-2 + 1e-9
+    # both move in the delta's direction coordinate-wise
+    assert np.all(np.sign(b) == np.sign(a))
+
+
+def test_fedavgm_momentum_accumulates():
+    scfg = ServerOptConfig("fedavgm", lr=1.0, momentum=0.9)
+    delta = {"w": jnp.ones((2, 2)) * 0.1}
+    params = {"w": jnp.zeros((2, 2))}
+    opt = make_server_opt(scfg)
+    state = opt.init(params)
+    p1, state = server_step(opt, params, state, delta)
+    p2, state = server_step(opt, p1, state, delta)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 0.1, rtol=1e-6)
+    # second step applies (1 + 0.9) * delta on top
+    np.testing.assert_allclose(np.asarray(p2["w"]), 0.1 + 0.19, rtol=1e-6)
+
+
+# ------------------------------------------------------------- async buffer
+
+def _entry(staleness, value):
+    tree = {"w": jnp.full((2,), value)}
+    return BufferEntry(client=0, staleness=staleness, finish_time=0.0,
+                       delta_params=tree, delta_scales=tree,
+                       bn_state=tree, up_bytes=0)
+
+
+def test_staleness_weighting_downweights_stale_updates():
+    np.testing.assert_allclose(staleness_weight(0, 0.5), 1.0)
+    np.testing.assert_allclose(staleness_weight(3, 0.5), 0.5)
+    fresh, stale = _entry(0, 1.0), _entry(3, -1.0)
+    mean_dp, _, _, w = aggregate_buffer([fresh, stale], 0.5)
+    np.testing.assert_allclose(w, [2 / 3, 1 / 3], rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(mean_dp["w"]),
+                               2 / 3 * 1.0 + 1 / 3 * (-1.0), rtol=1e-6)
+
+
+def test_zero_exponent_recovers_plain_mean():
+    entries = [_entry(s, float(s)) for s in (0, 1, 5)]
+    mean_dp, _, _, w = aggregate_buffer(entries, 0.0)
+    np.testing.assert_allclose(w, [1 / 3] * 3)
+    np.testing.assert_allclose(np.asarray(mean_dp["w"]), 2.0, rtol=1e-6)
+
+
+def test_client_latencies_deterministic_and_positive():
+    acfg = AsyncConfig(latency_mean=2.0, latency_sigma=0.5)
+    a = client_latencies(jax.random.PRNGKey(0), 6, acfg)
+    b = client_latencies(jax.random.PRNGKey(0), 6, acfg)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(a > 0) and len(np.unique(a)) > 1
+    homog = client_latencies(jax.random.PRNGKey(0), 6,
+                             AsyncConfig(latency_mean=2.0, latency_sigma=0.0))
+    np.testing.assert_allclose(homog, 2.0)
+
+
+# ------------------------------------------------------------- byte pinning
+
+def test_measure_update_bytes_regression_pin():
+    """Byte accounting on a fixed tree is part of the paper's headline
+    numbers; pin it so codec or framing drift is caught."""
+    rng = np.random.default_rng(0)
+    lp = {"conv": ((rng.integers(-4, 5, (6, 8))).astype(np.int32)
+                   * (rng.random((6, 8)) < 0.3)).astype(np.int32),
+          "bias": np.array([3, 0, -2, 0], np.int32)}
+    ls = {"s": np.array([1, -1, 0], np.int32)}
+    stack = lambda t: jax.tree.map(lambda x: np.stack([x, np.zeros_like(x)]), t)
+    assert encode_client_bytes(lp, ls, ternary=False) == 48
+    assert measure_update_bytes(stack(lp), stack(ls), 2, ternary=False) == 81
+    # ternary adds a 4-byte magnitude header per tensor per client
+    assert measure_update_bytes(stack(lp), stack(ls), 2, ternary=True) == 97
+    # the fsfl re-export is the same function
+    assert fsfl_lib.measure_update_bytes is measure_update_bytes
+
+
+# ------------------------------------------------------------- end to end
+
+def _tiny_setting(num_clients):
+    task = synthetic.ImageTask("t", num_classes=4, channels=3, size=32,
+                               prototypes_per_class=2, noise=0.25)
+    x, y = synthetic.make_image_dataset(jax.random.PRNGKey(0), task, 480)
+    splits = federated.split_federated(jax.random.PRNGKey(1), x, y,
+                                       num_clients=num_clients)
+    model = cnn.make_vgg("vgg_tiny_engine", [8, 16], 4, 3,
+                         dense_width=16, pool_after=(0, 1))
+    return model, splits
+
+
+@pytest.fixture(scope="module")
+def tiny8():
+    return _tiny_setting(8)
+
+
+def test_scenario_k4_of_8_fedadam_three_rounds(tiny8):
+    """Acceptance: named scenario, client sampling K=4 of C=8, FedAdam."""
+    model, splits = tiny8
+    s = dataclasses.replace(Scenario("sync_k4_fedadam_test", cohort_size=4,
+                                     server_opt="fedadam", server_lr=1e-2),
+                            num_clients=8)
+    res = run_scenario(s, rounds=3, model=model, splits=splits)
+    assert len(res.records) == 3
+    for r in res.records:
+        assert len(r.participants) == 4
+        assert len(set(r.participants)) == 4
+        assert all(0 <= c < 8 for c in r.participants)
+        assert r.up_bytes > 0
+    # cohorts rotate across rounds under the split key stream
+    assert len({r.participants for r in res.records}) > 1
+    # byte accounting covers the cohort only: 4 clients' uploads, not 8
+    assert res.records[0].cum_bytes == res.records[0].up_bytes
+
+
+def test_compat_wrapper_equals_engine_full_participation(tiny8):
+    """fsfl.run_federated must reproduce the engine's all-clients FedAvg
+    run (identical key stream + bitwise-identical server update)."""
+    model, splits = tiny8
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    a = fsfl_lib.run_federated(model, cfg, splits, 2, jax.random.PRNGKey(7))
+    b = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                       engine=EngineConfig())
+    for ra, rb in zip(a.records, b.records):
+        assert ra.up_bytes == rb.up_bytes
+        assert ra.cum_bytes == rb.cum_bytes
+        assert ra.test_acc == rb.test_acc
+        assert ra.participants == tuple(range(8))
+        assert rb.sim_time_s == 0.0
+
+
+def test_async_buffered_run_advances_simulated_clock(tiny8):
+    model, splits = tiny8
+    s = Scenario("async_test", mode="async", buffer_size=2, concurrency=3,
+                 num_clients=8, protocol="eqs23")
+    res = run_scenario(s, rounds=2, model=model, splits=splits)
+    assert len(res.records) == 2
+    assert all(len(r.participants) == 2 for r in res.records)
+    assert 0.0 < res.records[0].sim_time_s < res.records[1].sim_time_s
+    assert res.records[1].cum_bytes > res.records[0].cum_bytes

@@ -3,6 +3,9 @@ behaviour, and FL protocol invariants (hypothesis)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.coding import nnc

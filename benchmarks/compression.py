@@ -2,21 +2,28 @@
 
 (a) Fig. 4 analogue: per-round update sparsity with vs. without filter
     scaling at the same threshold config (claim: scaling INCREASES sparsity).
-(b) Ratio ladder: bytes per update under raw fp32 -> quant+CABAC ->
-    +sparsity -> +scaling (Table 2's ~54x for quant+CABAC alone, hundreds
-    overall).
-(c) Codec sanity: coded bytes vs entropy estimate on synthetic deltas.
+(b) Codec ladder: bytes for one client update under EVERY registered wire
+    codec (`repro.comms`) — each row is the length of a payload that is
+    encoded AND decoded, with the reconstruction checked against the input
+    (bit-exact for lossless codecs, tolerance-pinned for fp16/int8).
+(c) Stage ladder: raw fp32 -> quant+CABAC -> +sparsity -> +structured rows
+    (Table 2's ~54x for quant+CABAC alone, hundreds overall).
+
+``--smoke`` runs (b) only, on a container-sized model — the CI regression
+that every registry codec produces decodable payloads with sane ratios.
 """
 from __future__ import annotations
 
-import os
+import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import comms
 from repro.coding import nnc
+from repro.comms import stages as stages_lib
 from repro.core import quant as quant_lib
+from repro.core import scaling as scaling_lib
 from repro.core import sparsify as sparsify_lib
 from repro.core.fsfl import run_federated
 from repro.core.protocol import ProtocolConfig
@@ -45,15 +52,85 @@ def sparsity_with_and_without_scaling(rounds=6):
     return rows
 
 
-def ratio_ladder():
-    """Bytes for ONE typical client update under the pipeline stages."""
-    model = cnn.vgg11_thinned(num_classes=10)
+def _synthetic_delta(model):
+    """One realistic-looking client delta: small, zero-centred."""
     params, _ = model.init(jax.random.PRNGKey(0))
-    # a realistic-looking delta: small, zero-centred
     delta = jax.tree.map(
         lambda p: 1e-3 * jax.random.normal(
             jax.random.fold_in(jax.random.PRNGKey(1), p.size), p.shape),
         params)
+    return params, delta
+
+
+def _synthetic_update(model, sparsity=0.96):
+    """One realistic client update: (levels, recon, spec) + raw byte count."""
+    params, delta = _synthetic_delta(model)
+    scales = scaling_lib.init_scales(params)
+    s_delta = jax.tree.map(
+        lambda s: 1e-5 * jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(2), s.size), s.shape),
+        scales)
+
+    q = quant_lib.QuantConfig()
+    sp = sparsify_lib.sparsify_tree(
+        delta, sparsify_lib.SparsifyConfig(fixed_sparsity=sparsity,
+                                           structured=False))
+    fine = comms.path_fine_mask(params)
+    levels = quant_lib.quantize_tree(sp, q, fine)
+    recon = quant_lib.dequantize_tree(levels, q, fine)
+    s_levels, s_recon = stages_lib.quantize_scales_delta(s_delta,
+                                                        q.fine_step_size)
+
+    spec = comms.WireSpec(params=comms.shape_template(params),
+                          scales=comms.shape_template(scales),
+                          fine_mask=fine,
+                          step_size=q.step_size,
+                          fine_step_size=q.fine_step_size)
+    upd = comms.ClientUpdate(
+        levels_params=jax.tree.map(np.asarray, levels),
+        levels_scales=jax.tree.map(np.asarray, s_levels),
+        recon_params=jax.tree.map(np.asarray, recon),
+        recon_scales=jax.tree.map(np.asarray, s_recon))
+    raw = 4 * sum(l.size for l in jax.tree.leaves(params))
+    raw += 4 * sum(l.size for l in jax.tree.leaves(scales))
+    return upd, spec, raw
+
+
+def codec_ladder(smoke=False):
+    """Bytes per update for every registered codec, round-trip verified."""
+    model = (cnn.make_vgg("vgg_ladder", [8, 16, 32], 10, 3, dense_width=16,
+                          pool_after=(0, 1, 2)) if smoke
+             else cnn.vgg11_thinned(num_classes=10))
+    upd, spec, raw = _synthetic_update(model)
+    rows = []
+    for name in comms.list_codecs():
+        codec = comms.get_codec(name)
+        payload = codec.encode(upd, spec)
+        dec = codec.decode(payload, spec)
+        err = max(float(np.max(np.abs(np.asarray(a) - b)))
+                  for a, b in zip(jax.tree.leaves(upd.recon_params),
+                                  jax.tree.leaves(dec.params)))
+        if codec.lossless:
+            assert err == 0.0, f"{name}: lossless codec round-trip drifted"
+        else:
+            assert err < 1e-4, f"{name}: lossy round-trip error {err}"
+        # scales section is float32-exact on the wire for EVERY codec
+        s_err = max(float(np.max(np.abs(np.asarray(a) - b)))
+                    for a, b in zip(jax.tree.leaves(upd.recon_scales),
+                                    jax.tree.leaves(dec.scales)))
+        assert s_err == 0.0, f"{name}: scales section drifted ({s_err})"
+        rows.append({"codec": name, "bytes": len(payload),
+                     "ratio": round(raw / len(payload), 1),
+                     "lossless": codec.lossless,
+                     "max_err": f"{err:.2e}"})
+    return rows
+
+
+def stage_ladder():
+    """Bytes for ONE typical client update under the pipeline stages
+    (same synthetic delta the codec ladder uses, so rows are comparable)."""
+    model = cnn.vgg11_thinned(num_classes=10)
+    _, delta = _synthetic_delta(model)
     raw = 4 * sum(l.size for l in jax.tree.leaves(delta))
     q = quant_lib.QuantConfig()
     lv_dense = quant_lib.quantize_tree(delta, q)
@@ -77,19 +154,30 @@ def ratio_ladder():
     ]
 
 
+def _print_rows(rows):
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="codec-registry ladder only, tiny model (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        print("# codec registry ladder (tiny VGG, one update, round-trip "
+              "verified)")
+        _print_rows(codec_ladder(smoke=True))
+        print("smoke OK")
+        return
     print("# Fig.4 analogue (sparsity with/without scaling)")
-    rows = sparsity_with_and_without_scaling()
-    cols = list(rows[0].keys())
-    print(",".join(cols))
-    for r in rows:
-        print(",".join(str(r[c]) for c in cols))
-    print("# compression ladder (thinned VGG11, one update)")
-    rows = ratio_ladder()
-    cols = list(rows[0].keys())
-    print(",".join(cols))
-    for r in rows:
-        print(",".join(str(r[c]) for c in cols))
+    _print_rows(sparsity_with_and_without_scaling())
+    print("# codec registry ladder (thinned VGG11, one update)")
+    _print_rows(codec_ladder())
+    print("# stage ladder (thinned VGG11, one update)")
+    _print_rows(stage_ladder())
 
 
 if __name__ == "__main__":

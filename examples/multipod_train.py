@@ -18,15 +18,17 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get
-from repro.data.synthetic import make_markov_lm
-from repro.dist.collectives import MeshCompression
-from repro.dist.sharding import MeshLayout, make_plan
-from repro.dist import train_step as train_lib
-from repro.launch.mesh import make_mesh
-
 
 def main():
+    from repro.launch import require_dist
+    require_dist()
+    from repro.configs import get
+    from repro.data.synthetic import make_markov_lm
+    from repro.dist.collectives import MeshCompression
+    from repro.dist.sharding import MeshLayout, make_plan
+    from repro.dist import train_step as train_lib
+    from repro.launch.mesh import make_mesh
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--arch", default="gemma2-2b")

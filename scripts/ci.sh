@@ -12,6 +12,9 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
+  echo "== codec smoke: registry ladder, round-trip verified =="
+  python benchmarks/compression.py --smoke
+
   echo "== engine smoke: 2 rounds, K=4 of C=8, FedAdam, tiny CNN =="
   python - <<'PY'
 import jax

@@ -33,13 +33,21 @@ CTX_GT2 = 2
 NUM_CTX = 3
 
 
-def _leaves_with_paths(tree: Any):
+def leaves_with_paths(tree: Any):
+    """(path, leaf) pairs in sorted-path order — THE canonical wire order.
+
+    Shared with ``repro.comms`` (codecs and WireSpec views import this), so
+    the nnc-cabac byte-parity guarantee cannot drift out of sync with the
+    engine's framing.  Uses the repo-wide path formatter."""
     import jax
 
+    from repro.core.scaling import path_str
+
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    items = [("/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp), v)
-             for kp, v in flat]
-    return sorted(items, key=lambda kv: kv[0])
+    return sorted(((path_str(kp), v) for kp, v in flat), key=lambda kv: kv[0])
+
+
+_leaves_with_paths = leaves_with_paths  # old private name
 
 
 def _as_rows(arr: np.ndarray) -> np.ndarray:
@@ -151,11 +159,10 @@ def decode_tree(data: bytes, shapes_tree: Any) -> Any:
                for path, spec in items}
 
     # rebuild the tree in original structure
+    from repro.core.scaling import path_str
+
     flat = jax.tree_util.tree_flatten_with_path(shapes_tree)
-    out_leaves = []
-    for kp, _ in flat[0]:
-        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
-        out_leaves.append(decoded[path])
+    out_leaves = [decoded[path_str(kp)] for kp, _ in flat[0]]
     return jax.tree_util.tree_unflatten(flat[1], out_leaves)
 
 

@@ -1,0 +1,22 @@
+"""Pluggable client<->server codec & transport subsystem.
+
+See README.md in this directory for the stage/registry layout.  The graph
+half (jittable lossy stages) is ``repro.comms.stages``; the wire half
+(named codecs producing decodable payloads) is ``repro.comms.codec`` +
+``repro.comms.codecs``; ``repro.comms.channel`` turns payload sizes into
+simulated transfer times.
+"""
+from repro.comms import codecs as _codecs  # noqa: F401  (fills the registry)
+from repro.comms.channel import ChannelConfig, ChannelModel
+from repro.comms.codec import (ClientUpdate, Codec, Decoded, WireSpec,
+                               get_codec, list_codecs, make_send_mask,
+                               register_codec, resolve_codec, shape_template)
+from repro.comms.stages import UpstreamStages, path_fine_mask
+
+__all__ = [
+    "ChannelConfig", "ChannelModel",
+    "ClientUpdate", "Codec", "Decoded", "WireSpec",
+    "get_codec", "list_codecs", "make_send_mask", "register_codec",
+    "resolve_codec", "shape_template",
+    "UpstreamStages", "path_fine_mask",
+]

@@ -1,0 +1,72 @@
+"""Channel model: payload bytes -> transfer seconds on the simulated clock.
+
+Compression ratio only matters when it buys wall-clock time, so the engine
+can attach a :class:`ChannelModel` that converts every real payload length
+into an up/down transfer time.  In sync mode the round's simulated duration
+is the slowest participant's ``down + up`` transfer (the server waits for
+the full cohort); in async mode the transfer times stretch each client's
+in-flight window on the existing FedBuff simulated clock.
+
+Per-client bandwidth heterogeneity is a lognormal factor around the
+configured rates (same shape the async latencies use), fixed for the run
+and derived deterministically from ``ChannelConfig.seed``.  ``drop_rate``
+models straggler loss in sync rounds: a dropped client's upload is charged
+to the byte totals (it was transmitted) but excluded from aggregation and
+from ``RoundRecord.participants``.  Under error feedback (Eq. 5) the engine
+re-injects the dropped client's decoded delta into its residual, so the
+lost mass is retransmitted in a later round rather than silently vanishing
+(scale deltas carry no residual and stay lost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Bandwidths in Mbit/s (inf = free transfers), latency in seconds."""
+    up_mbps: float = math.inf
+    down_mbps: float = math.inf
+    latency_s: float = 0.0
+    bandwidth_sigma: float = 0.0   # lognormal per-client spread; 0 = uniform
+    drop_rate: float = 0.0         # sync-mode upload loss probability
+    seed: int = 0
+
+
+class ChannelModel:
+    def __init__(self, cfg: ChannelConfig, num_clients: int):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        if cfg.bandwidth_sigma > 0.0:
+            factor = np.exp(rng.normal(0.0, cfg.bandwidth_sigma,
+                                       (2, num_clients)))
+        else:
+            factor = np.ones((2, num_clients))
+        self._up_bps = cfg.up_mbps * 1e6 / 8.0 * factor[0]     # bytes/s
+        self._down_bps = cfg.down_mbps * 1e6 / 8.0 * factor[1]
+
+    def up_time(self, client: int, nbytes: int) -> float:
+        """Seconds to upload ``nbytes`` from ``client`` (latency included)."""
+        rate = self._up_bps[client]
+        return self.cfg.latency_s + (0.0 if math.isinf(rate)
+                                     else nbytes / rate)
+
+    def down_time(self, client: int, nbytes: int) -> float:
+        rate = self._down_bps[client]
+        return self.cfg.latency_s + (0.0 if math.isinf(rate)
+                                     else nbytes / rate)
+
+    def round_time(self, clients, up_sizes, down_nbytes: int) -> float:
+        """Sync-round duration: the slowest participant's down + up leg."""
+        return max((self.down_time(c, down_nbytes) + self.up_time(c, n)
+                    for c, n in zip(clients, up_sizes)), default=0.0)
+
+    def dropped(self, round_idx: int, client: int) -> bool:
+        """Deterministic per-(round, client) upload-loss draw."""
+        if self.cfg.drop_rate <= 0.0:
+            return False
+        rng = np.random.default_rng((self.cfg.seed, round_idx, int(client)))
+        return bool(rng.random() < self.cfg.drop_rate)

@@ -1,0 +1,227 @@
+"""Wire codecs: the host-side half of the client<->server pipeline.
+
+A :class:`Codec` turns one endpoint's update into a *decodable bytes
+payload* and back.  Both endpoints share a :class:`WireSpec` — the static
+schema (tensor shapes, fine-quantization mask, step sizes, ternary flag,
+optional leaf-selection mask) that in a real deployment is fixed by the
+model architecture and the negotiated codec.  Given its spec, a payload is
+self-describing: ``decode(encode(update))`` needs no out-of-band per-message
+information, and the engine's ``up_bytes``/``down_bytes`` are simply
+``len(payload)`` of bitstreams that actually decode.
+
+Codecs are looked up by name in a registry (see ``repro.comms.codecs`` for
+the implementations)::
+
+    from repro.comms import get_codec, list_codecs
+    codec = get_codec("nnc-cabac")
+    payload = codec.encode(update, spec)
+    decoded = codec.decode(payload, spec)     # Decoded(params=..., scales=...)
+
+``lossless=True`` codecs reproduce the encoder-side reconstruction
+bit-exactly; lossy wire codecs (fp16, int8-blockscale) are tolerance-pinned
+in tests.  Layer-selective (partial) updates use ``WireSpec.send_mask``: a
+boolean pytree over the params leaves; leaves marked False never cross the
+wire and decode to zeros.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core import quant as quant_lib
+from repro.core import scaling as scaling_lib
+
+# ---------------------------------------------------------------- pytree utils
+
+# One path formatter repo-wide: protocol's trainable mask, the scale masks,
+# and the wire's send_mask must agree on leaf naming.
+_path_of = scaling_lib.path_str
+
+# THE canonical wire order, shared with the nnc coder so the byte-parity
+# guarantee is enforced structurally rather than by parallel maintenance.
+from repro.coding.nnc import leaves_with_paths as sorted_items  # noqa: E402
+
+
+def rebuild_tree(template: Any, by_path: dict[str, np.ndarray]) -> Any:
+    """Reassemble a pytree in ``template``'s structure from decoded leaves.
+
+    Paths missing from ``by_path`` (unsent leaves under a send_mask) become
+    float32 zeros of the template shape.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, spec in flat:
+        path = _path_of(kp)
+        if path in by_path:
+            leaves.append(by_path[path])
+        else:
+            leaves.append(np.zeros(tuple(spec.shape), np.float32))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def shape_template(tree: Any) -> Any:
+    """Pytree of ShapeDtypeStructs describing the logical float32 tensors."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), np.float32), tree)
+
+
+# ---------------------------------------------------------------- wire schema
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Static schema shared by encoder and decoder.
+
+    ``params``/``scales`` are pytrees of ``jax.ShapeDtypeStruct`` (the
+    logical float32 update tensors; ``scales=None`` for params-only messages
+    such as the downstream broadcast).  ``fine_mask`` marks params leaves
+    quantized with ``fine_step_size`` (None = all coarse).  ``ternary``
+    messages carry one float32 magnitude per params leaf after the level
+    stream.  ``send_mask`` (bool pytree over params) drops leaves from the
+    wire entirely — the layer-selective/partial-update axis.
+    """
+    params: Any
+    scales: Any | None = None
+    fine_mask: Any | None = None
+    step_size: float = quant_lib.STEP_SIZE_UNI
+    fine_step_size: float = quant_lib.STEP_SIZE_FINE
+    ternary: bool = False
+    send_mask: Any | None = None
+
+    # -- derived views (sorted-path order, send_mask applied) ---------------
+    # Cached: the wire loop calls these per client per round, and the codecs
+    # call param_step per leaf (cached_property writes to __dict__ directly,
+    # which frozen dataclasses permit).
+
+    @functools.cached_property
+    def _param_items(self) -> list[tuple[str, Any]]:
+        items = sorted_items(self.params)
+        if self.send_mask is None:
+            return items
+        sent = {p for p, m in sorted_items(self.send_mask) if bool(m)}
+        return [(p, s) for p, s in items if p in sent]
+
+    @functools.cached_property
+    def _scale_items(self) -> list[tuple[str, Any]]:
+        return [] if self.scales is None else sorted_items(self.scales)
+
+    @functools.cached_property
+    def _fine_by_path(self) -> dict[str, bool]:
+        if self.fine_mask is None:
+            return {}
+        return {p: bool(m) for p, m in sorted_items(self.fine_mask)}
+
+    @functools.cached_property
+    def sent_paths(self) -> frozenset[str]:
+        return frozenset(p for p, _ in self._param_items)
+
+    def param_items(self) -> list[tuple[str, Any]]:
+        return self._param_items
+
+    def scale_items(self) -> list[tuple[str, Any]]:
+        return self._scale_items
+
+    def param_step(self, path: str) -> float:
+        if self._fine_by_path.get(path, False):
+            return self.fine_step_size
+        return self.step_size
+
+
+class ClientUpdate(NamedTuple):
+    """Encoder-side view of one endpoint's update.
+
+    Level codecs consume the integer levels; float codecs consume the
+    reconstructions.  ``levels_scales``/``recon_scales`` are None for
+    params-only messages (downstream broadcast).
+    """
+    levels_params: Any
+    levels_scales: Any | None
+    recon_params: Any
+    recon_scales: Any | None
+
+
+class Decoded(NamedTuple):
+    """Decoder output: reconstructed float32 pytrees in template structure."""
+    params: Any
+    scales: Any | None
+
+
+# ---------------------------------------------------------------- codec base
+
+class Codec:
+    """One wire codec: ``encode`` to a payload, ``decode`` back to pytrees.
+
+    Subclasses set ``name`` and ``lossless`` (True when
+    ``decode(encode(u)).params`` is bit-exactly ``u.recon_params`` for every
+    update whose recon is consistent with its levels under the spec).
+    """
+
+    name: str = "?"
+    lossless: bool = True
+    # which ClientUpdate trees encode() reads: "levels" and/or "recon"
+    # (level codecs also read recon when spec.ternary, for the magnitudes);
+    # lets the engine skip device->host transfers of unused trees
+    needs: tuple[str, ...] = ("recon",)
+
+    def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+        raise NotImplementedError
+
+    def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<Codec {self.name}>"
+
+
+# ---------------------------------------------------------------- registry
+
+_REGISTRY: dict[str, Callable[[], Codec]] = {}
+_INSTANCES: dict[str, Codec] = {}
+
+
+def register_codec(name: str, factory: Callable[[], Codec]) -> None:
+    if name in _REGISTRY:
+        raise ValueError(f"codec {name!r} already registered")
+    _REGISTRY[name] = factory
+
+
+def get_codec(name: str) -> Codec:
+    if name not in _INSTANCES:
+        try:
+            _INSTANCES[name] = _REGISTRY[name]()
+        except KeyError:
+            known = ", ".join(sorted(_REGISTRY))
+            raise KeyError(f"unknown codec {name!r}; known: {known}") from None
+    return _INSTANCES[name]
+
+
+def list_codecs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve_codec(codec: Any, quantize: bool = True) -> Codec:
+    """Resolve an EngineConfig codec field to an instance.
+
+    ``"auto"`` keeps the seed's semantics: quantizing protocols put integer
+    levels on the wire through the paper's full DeepCABAC stack
+    (``nnc-cabac``); non-quantizing protocols (the uncompressed FedAvg
+    baseline, or sparse runs with ``quantize=False`` whose error-feedback
+    residual assumes a full-precision reconstruction) transmit raw float32.
+    """
+    if isinstance(codec, Codec):
+        return codec
+    if codec == "auto":
+        if not quantize:
+            return get_codec("raw-fp32")
+        return get_codec("nnc-cabac")
+    return get_codec(codec)
+
+
+def make_send_mask(params_template: Any,
+                   predicate: Callable[[str, Any], bool]) -> Any:
+    """Bool pytree over params leaves from a (path, leaf)->bool predicate."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: bool(predicate(_path_of(kp), leaf)), params_template)

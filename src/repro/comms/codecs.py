@@ -1,0 +1,303 @@
+"""The registered wire codecs.
+
+Registry (ordered roughly by fidelity; ratios are typical for a 96%-sparse
+quantized VGG update, see ``benchmarks/compression.py --smoke``):
+
+  raw-fp32         little-endian float32 of the reconstruction; lossless.
+                   The uncompressed-FedAvg baseline wire format.
+  fp16             float16 params section (scales stay float32); ~2x.
+  int8-blockscale  per-block symmetric int8 via the fused Pallas kernel
+                   ``kernels/delta_compress.py`` (one pass: threshold +
+                   quantize); ~4x, tolerance-bounded by amax/254 per block.
+  golomb           order-k exp-Golomb over zigzagged quantization levels
+                   (k per tensor, 4-bit header); lossless on levels.
+  nnc-cabac        the paper's full stack: DeepCABAC context-coded row-skip
+                   flags + zero-runs + gt1/gt2 magnitudes (coding/nnc.py);
+                   lossless on levels and byte-identical to the seed's
+                   ``measure_update_bytes`` accounting.
+
+Level codecs (golomb, nnc-cabac) put integer quantization levels on the wire
+and dequantize on decode; ternary messages append one float32 magnitude per
+params tensor after the level stream (STC's per-tensor mu).  Float codecs
+(raw-fp32, fp16, int8-blockscale) transmit the reconstruction itself, so
+they compose with ANY upstream lossy stage chain.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.coding import nnc
+from repro.coding import golomb as golomb_lib
+from repro.coding.bitstream import BitReader, BitWriter
+from repro.comms.codec import (ClientUpdate, Codec, Decoded, WireSpec,
+                               rebuild_tree, register_codec, sorted_items)
+
+
+def _np32(x) -> np.ndarray:
+    return np.asarray(x, np.float32)
+
+
+def _sent_recon_items(upd: ClientUpdate, spec: WireSpec):
+    """Encoder-side (path, recon_leaf) pairs in wire order (mask applied)."""
+    return [(p, l) for p, l in sorted_items(upd.recon_params)
+            if p in spec.sent_paths]
+
+
+def _encode_scales_fp32(upd: ClientUpdate, spec: WireSpec) -> list[bytes]:
+    """Shared float-codec scales framing: raw little-endian float32."""
+    if spec.scales is None:
+        return []
+    return [np.ascontiguousarray(_np32(leaf).astype("<f4")).tobytes()
+            for _, leaf in sorted_items(upd.recon_scales)]
+
+
+def _decode_scales_fp32(payload: bytes, off: int, spec: WireSpec):
+    """Inverse of :func:`_encode_scales_fp32`; returns (scales_tree, off)."""
+    if spec.scales is None:
+        return None, off
+    by_s: dict[str, np.ndarray] = {}
+    for path, s in spec.scale_items():
+        n = int(np.prod(s.shape)) if s.shape else 1
+        by_s[path] = (np.frombuffer(payload, "<f4", n, off)
+                      .astype(np.float32).reshape(s.shape))
+        off += n * 4
+    return rebuild_tree(spec.scales, by_s), off
+
+
+# ===========================================================================
+# float codecs: transmit the reconstruction
+# ===========================================================================
+
+class RawFloatCodec(Codec):
+    """Raw little-endian floats, params in ``param_dtype``, scales float32."""
+
+    def __init__(self, name: str, param_dtype: str, lossless: bool):
+        self.name = name
+        self.param_dtype = param_dtype   # numpy dtype str, e.g. "<f4"
+        self.lossless = lossless
+
+    def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+        chunks = [np.ascontiguousarray(_np32(leaf).astype(self.param_dtype))
+                  .tobytes() for _, leaf in _sent_recon_items(upd, spec)]
+        chunks += _encode_scales_fp32(upd, spec)
+        return b"".join(chunks)
+
+    def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+        off = 0
+        itemsize = np.dtype(self.param_dtype).itemsize
+        by_path: dict[str, np.ndarray] = {}
+        for path, s in spec.param_items():
+            n = int(np.prod(s.shape)) if s.shape else 1
+            arr = np.frombuffer(payload, self.param_dtype, n, off)
+            by_path[path] = arr.astype(np.float32).reshape(s.shape)
+            off += n * itemsize
+        params = rebuild_tree(spec.params, by_path)
+        scales, off = _decode_scales_fp32(payload, off, spec)
+        return Decoded(params, scales)
+
+
+class Int8BlockScaleCodec(Codec):
+    """Per-block symmetric int8 with one float32 scale per block.
+
+    Reuses the fused Pallas sparsify+quantize kernel from
+    ``kernels/delta_compress.py`` (threshold 0: sparsification already
+    happened in the graph stages); on non-TPU backends the kernel runs in
+    interpret mode.  The scales section stays raw float32 — scale deltas are
+    ~1e-6 magnitude and precision-critical.  Worst-case reconstruction error
+    per block is ``amax/254`` (half a quantization step).
+    """
+
+    name = "int8-blockscale"
+    lossless = False
+    block = 128
+
+    def _kernel(self):
+        import jax
+
+        from repro.kernels.delta_compress import delta_compress
+        interpret = jax.default_backend() != "tpu"
+        return lambda flat: delta_compress(flat, 0.0, block=self.block,
+                                           interpret=interpret)
+
+    def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+        kernel = self._kernel()
+        chunks = []
+        for _, leaf in _sent_recon_items(upd, spec):
+            flat = _np32(leaf).reshape(-1)
+            pad = (-flat.size) % self.block
+            flat = np.pad(flat, (0, pad))
+            q, s = kernel(flat)
+            chunks.append(np.asarray(q, np.int8).tobytes())
+            chunks.append(np.asarray(s).astype("<f4").tobytes())
+        chunks += _encode_scales_fp32(upd, spec)
+        return b"".join(chunks)
+
+    def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+        off = 0
+        by_path: dict[str, np.ndarray] = {}
+        for path, s in spec.param_items():
+            n = int(np.prod(s.shape)) if s.shape else 1
+            padded = n + (-n) % self.block
+            nblk = padded // self.block
+            q = np.frombuffer(payload, np.int8, padded, off)
+            off += padded
+            sc = np.frombuffer(payload, "<f4", nblk, off)
+            off += nblk * 4
+            deq = (q.reshape(nblk, self.block).astype(np.float32)
+                   * sc[:, None].astype(np.float32))
+            by_path[path] = deq.reshape(-1)[:n].reshape(s.shape)
+        params = rebuild_tree(spec.params, by_path)
+        scales, off = _decode_scales_fp32(payload, off, spec)
+        return Decoded(params, scales)
+
+
+# ===========================================================================
+# level codecs: transmit integer quantization levels, dequantize on decode
+# ===========================================================================
+
+class LevelCodec(Codec):
+    """Base for codecs that serialise the int32 level pytrees.
+
+    Subclasses implement ``_encode_levels``/``_decode_levels`` over the
+    ordered ``(path, int32 array)`` sections.  This base handles the ternary
+    magnitude tail (one float32 per sent params tensor, appended after the
+    level stream) and the dequantization back to float32 reconstructions —
+    bit-identical to the in-graph dequantize (a single float32 multiply).
+    """
+
+    lossless = True
+    needs = ("levels",)
+
+    def _encode_levels(self, p_items, s_items) -> bytes:
+        raise NotImplementedError
+
+    def _decode_levels(self, body: bytes, p_shapes, s_shapes):
+        """-> ({path: int32 array}, {path: int32 array})"""
+        raise NotImplementedError
+
+    def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+        p_items = [(p, np.asarray(l, np.int32))
+                   for p, l in sorted_items(upd.levels_params)
+                   if p in spec.sent_paths]
+        s_items = ([] if spec.scales is None else
+                   [(p, np.asarray(l, np.int32))
+                    for p, l in sorted_items(upd.levels_scales)])
+        body = self._encode_levels(p_items, s_items)
+        if spec.ternary:
+            mags = np.array([np.max(np.abs(_np32(l)))
+                             for _, l in _sent_recon_items(upd, spec)],
+                            "<f4")
+            body += mags.tobytes()
+        return body
+
+    def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+        p_shapes = [(p, tuple(s.shape)) for p, s in spec.param_items()]
+        s_shapes = [(p, tuple(s.shape)) for p, s in spec.scale_items()]
+        body = payload
+        mags = None
+        if spec.ternary and p_shapes:
+            tail = 4 * len(p_shapes)
+            body, mag_bytes = payload[:-tail], payload[-tail:]
+            mags = np.frombuffer(mag_bytes, "<f4")
+        p_levels, s_levels = self._decode_levels(body, p_shapes, s_shapes)
+        by_path: dict[str, np.ndarray] = {}
+        for i, (path, _) in enumerate(p_shapes):
+            lv = p_levels[path].astype(np.float32)
+            if spec.ternary:
+                by_path[path] = np.float32(mags[i]) * np.sign(lv)
+            else:
+                by_path[path] = lv * np.float32(spec.param_step(path))
+        params = rebuild_tree(spec.params, by_path)
+        scales = None
+        if spec.scales is not None:
+            by_s = {path: s_levels[path].astype(np.float32)
+                    * np.float32(spec.fine_step_size)
+                    for path, _ in s_shapes}
+            scales = rebuild_tree(spec.scales, by_s)
+        return Decoded(params, scales)
+
+
+class NncCabacCodec(LevelCodec):
+    """The paper's DeepCABAC/NNC stack (``repro.coding.nnc``).
+
+    The wire message is ``{"p": <param levels>, "s": <scale levels>}`` —
+    exactly the message the seed's ``measure_update_bytes`` accounted, so
+    payload lengths reproduce the seed byte totals bit-for-bit (nnc sorts
+    leaves by path and never serialises the path strings, so the flattened
+    sections code to the identical stream).
+    """
+
+    name = "nnc-cabac"
+
+    def _encode_levels(self, p_items, s_items) -> bytes:
+        msg: dict = {"p": dict(p_items)}
+        if s_items:
+            msg["s"] = dict(s_items)
+        return nnc.encode_tree(msg)
+
+    def _decode_levels(self, body, p_shapes, s_shapes):
+        shapes: dict = {"p": {p: jax_sds(shape) for p, shape in p_shapes}}
+        if s_shapes:
+            shapes["s"] = {p: jax_sds(shape) for p, shape in s_shapes}
+        decoded = nnc.decode_tree(body, shapes)
+        return decoded["p"], decoded.get("s", {})
+
+
+def jax_sds(shape):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, np.int32)
+
+
+class GolombCodec(LevelCodec):
+    """Order-k exp-Golomb over zigzag-mapped levels, one k per tensor.
+
+    Lighter than CABAC (no context modelling, no row-skip flags) and fully
+    vectorised on encode; zeros cost one bit at k=0, so heavily sparse level
+    tensors still compress well.  Lossless on levels.
+    """
+
+    name = "golomb"
+
+    @staticmethod
+    def _zigzag(x: np.ndarray) -> np.ndarray:
+        x = x.astype(np.int64)
+        return (x << 1) ^ (x >> 63)
+
+    @staticmethod
+    def _unzigzag(v: np.ndarray) -> np.ndarray:
+        return (v >> 1) ^ -(v & 1)
+
+    def _encode_levels(self, p_items, s_items) -> bytes:
+        w = BitWriter()
+        for _, leaf in list(p_items) + list(s_items):
+            zig = self._zigzag(leaf.reshape(-1))
+            k = golomb_lib.choose_k(zig)
+            w.put_uint(k, 4)
+            golomb_lib.encode_egk(w, zig, k)
+        return w.to_bytes()
+
+    def _decode_levels(self, body, p_shapes, s_shapes):
+        r = BitReader(body)
+
+        def section(shapes):
+            out = {}
+            for path, shape in shapes:
+                n = int(np.prod(shape)) if shape else 1
+                k = r.get_uint(4)
+                vals = golomb_lib.decode_egk(r, n, k)
+                out[path] = (self._unzigzag(vals).astype(np.int32)
+                             .reshape(shape))
+            return out
+
+        return section(p_shapes), section(s_shapes)
+
+
+# ---------------------------------------------------------------- registry
+
+register_codec("raw-fp32", lambda: RawFloatCodec("raw-fp32", "<f4",
+                                                 lossless=True))
+register_codec("fp16", lambda: RawFloatCodec("fp16", "<f2", lossless=False))
+register_codec("int8-blockscale", Int8BlockScaleCodec)
+register_codec("golomb", GolombCodec)
+register_codec("nnc-cabac", NncCabacCodec)

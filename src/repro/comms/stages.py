@@ -1,0 +1,105 @@
+"""Graph-side codec stages: the jittable half of the client->server pipeline.
+
+A codec is a composition of stages.  The *lossy* stages — delta extraction,
+error feedback, sparsification (Eqs. 2/3 / fixed-rate / ternary), uniform
+quantization — run inside the jitted ``client_round`` because they interact
+with training state (the error-feedback residual persists across rounds and
+the filter-scaling sub-epochs train on the sparsely-updated model).  This
+module owns those stages; ``repro.core.protocol`` composes them.
+
+The *wire* stages (entropy coding, payload framing) run on the host and live
+in ``repro.comms.codec`` / ``repro.comms.codecs``.  The boundary between the
+two halves is the pytree of integer quantization levels plus its dequantized
+reconstruction — exactly what ``UpstreamStages.compress`` returns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delta as delta_lib
+from repro.core import quant as quant_lib
+from repro.core import scaling as scaling_lib
+from repro.core import sparsify as sparsify_lib
+
+
+def path_fine_mask(params: Any) -> Any:
+    """Fine-quantized leaves: biases / norm params (1-D) per paper §5.1."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: ("bn" in scaling_lib.path_str(kp)) or leaf.ndim < 2,
+        params)
+
+
+def extract_delta(params_after: Any, params_before: Any) -> Any:
+    """Stage 1: differential update dW = W_after - W_before."""
+    return delta_lib.tree_sub(params_after, params_before)
+
+
+def carry_residual(raw_delta: Any, residual: Any, enabled: bool) -> Any:
+    """Stage 2: error feedback (Eq. 5) — re-inject last round's residual."""
+    return delta_lib.tree_add(raw_delta, residual) if enabled else raw_delta
+
+
+def new_residual(carried: Any, recon: Any, enabled: bool,
+                 prev_residual: Any) -> Any:
+    """Residual for the next round: what the lossy stages discarded."""
+    return (delta_lib.tree_sub(carried, recon) if enabled else prev_residual)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpstreamStages:
+    """Lossy stage chain for the upstream (client->server) direction.
+
+    ``method`` selects the sparsifier family exactly as ProtocolConfig does:
+    "none" (identity), "sparse" (Eqs. 2/3 or fixed-rate top-k), "ternary"
+    (STC).  ``compress`` returns ``(levels, recon, sparse)``:
+
+      * ``levels`` — int32 quantization levels, the wire-codec input,
+      * ``recon`` — the dequantized reconstruction the server applies (for
+        "none" without quantization and "sparse" without quantization this
+        is the full-precision tensor; the wire codecs then transmit floats),
+      * ``sparse`` — the post-sparsification tensor (metrics only).
+    """
+    method: str = "sparse"            # "none" | "sparse" | "ternary"
+    quantize: bool = True
+    sparsify: sparsify_lib.SparsifyConfig = dataclasses.field(
+        default_factory=sparsify_lib.SparsifyConfig)
+    quant: quant_lib.QuantConfig = dataclasses.field(
+        default_factory=quant_lib.QuantConfig)
+    ternary_sparsity: float = 0.96
+
+    def compress(self, carried: Any, fine_mask: Any):
+        if self.method == "none":
+            recon = carried
+            # levels are reporting/wire input only; recon stays full precision
+            levels = quant_lib.quantize_tree(carried, self.quant, fine_mask)
+            sparse = carried
+        elif self.method == "ternary":
+            recon = delta_lib.ternary_compress(carried, self.ternary_sparsity)
+            # ternary levels are the signs; magnitude scalar rides the payload
+            levels = jax.tree.map(
+                lambda r: jnp.sign(r).astype(jnp.int32), recon)
+            sparse = recon
+        elif self.method == "sparse":
+            sparse = sparsify_lib.sparsify_tree(carried, self.sparsify)
+            levels = quant_lib.quantize_tree(sparse, self.quant, fine_mask)
+            recon = (quant_lib.dequantize_tree(levels, self.quant, fine_mask)
+                     if self.quantize else sparse)
+        else:
+            raise ValueError(f"unknown compression method: {self.method!r}")
+        return levels, recon, sparse
+
+
+def quantize_scales_delta(s_delta: Any, fine_step_size: float):
+    """Scale-delta stage: fine uniform quantization of the S update.
+
+    Returns (levels, recon) for the scaling-factor section of the payload.
+    """
+    levels = jax.tree.map(
+        lambda d: quant_lib.quantize(d, fine_step_size), s_delta)
+    recon = jax.tree.map(
+        lambda q: quant_lib.dequantize(q, fine_step_size), levels)
+    return levels, recon

@@ -29,6 +29,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.comms import stages as stages_lib
 from repro.core import delta as delta_lib
 from repro.core import quant as quant_lib
 from repro.core import scaling as scaling_lib
@@ -93,10 +94,9 @@ class RoundOutput(NamedTuple):
     metrics: Any
 
 
-def _path_fine_mask(params: Any) -> Any:
-    """Fine-quantized leaves: biases / norm params (1-D) per paper §5.1."""
-    return jax.tree_util.tree_map_with_path(
-        lambda kp, leaf: ("bn" in scaling_lib.path_str(kp)) or leaf.ndim < 2, params)
+# Fine-quantized leaves: biases / norm params (1-D) per paper §5.1.
+# (Lives with the other codec stages; kept as an alias for old importers.)
+_path_fine_mask = stages_lib.path_fine_mask
 
 
 def _trainable_mask(params: Any, predicate) -> Any:
@@ -131,12 +131,15 @@ def make_protocol(model: CNNModel, cfg: ProtocolConfig, steps_per_round: int):
     s_opt = (adam(s_sched) if cfg.scale_optimizer == "adam"
              else sgd(s_sched, momentum=0.9))
 
-    spars_cfg = sparsify_lib.SparsifyConfig(
-        delta=cfg.delta, gamma=cfg.gamma, step_size=cfg.step_size,
-        unstructured=cfg.unstructured, structured=cfg.structured,
-        fixed_sparsity=cfg.fixed_sparsity)
-    q_cfg = quant_lib.QuantConfig(step_size=cfg.step_size,
-                                  fine_step_size=cfg.fine_step_size)
+    up_stages = stages_lib.UpstreamStages(
+        method=cfg.method, quantize=cfg.quantize,
+        sparsify=sparsify_lib.SparsifyConfig(
+            delta=cfg.delta, gamma=cfg.gamma, step_size=cfg.step_size,
+            unstructured=cfg.unstructured, structured=cfg.structured,
+            fixed_sparsity=cfg.fixed_sparsity),
+        quant=quant_lib.QuantConfig(step_size=cfg.step_size,
+                                    fine_step_size=cfg.fine_step_size),
+        ternary_sparsity=cfg.fixed_sparsity or 0.96)
 
     scale_pred = cfg.scale_predicate or scaling_lib.default_predicate
 
@@ -206,31 +209,15 @@ def make_protocol(model: CNNModel, cfg: ProtocolConfig, steps_per_round: int):
         (params1, bn1, opt_state1), losses = jax.lax.scan(
             w_step, (params0, bn0, persistent.opt_state), batch_idx)
 
-        # ---- 3. differential update + error feedback + sparsify ---------
-        raw_delta = delta_lib.tree_sub(params1, params0)
-        carried = (delta_lib.tree_add(raw_delta, persistent.residual)
-                   if cfg.error_feedback else raw_delta)
-
-        if cfg.method == "none":
-            recon_delta = carried
-            levels = quant_lib.quantize_tree(carried, q_cfg, fine_mask)  # reporting only
-            sparse_delta = carried
-        elif cfg.method == "ternary":
-            recon_delta = delta_lib.ternary_compress(carried, cfg.fixed_sparsity or 0.96)
-            # ternary levels are the signs; magnitude scalar rides the header
-            levels = jax.tree.map(lambda r: jnp.sign(r).astype(jnp.int32), recon_delta)
-            sparse_delta = recon_delta
-        else:  # "sparse": Eqs. (2)+(3) or fixed-rate
-            sparse_delta = sparsify_lib.sparsify_tree(carried, spars_cfg)
-            if cfg.quantize:
-                levels = quant_lib.quantize_tree(sparse_delta, q_cfg, fine_mask)
-                recon_delta = quant_lib.dequantize_tree(levels, q_cfg, fine_mask)
-            else:
-                levels = quant_lib.quantize_tree(sparse_delta, q_cfg, fine_mask)
-                recon_delta = sparse_delta
-
-        new_residual = (delta_lib.tree_sub(carried, recon_delta)
-                        if cfg.error_feedback else persistent.residual)
+        # ---- 3. codec stages: delta + error feedback + sparsify + quant --
+        raw_delta = stages_lib.extract_delta(params1, params0)
+        carried = stages_lib.carry_residual(raw_delta, persistent.residual,
+                                            cfg.error_feedback)
+        levels, recon_delta, sparse_delta = up_stages.compress(carried,
+                                                               fine_mask)
+        new_residual = stages_lib.new_residual(carried, recon_delta,
+                                               cfg.error_feedback,
+                                               persistent.residual)
 
         # the sparsely updated model that S-training sees (Alg. 1 line 11)
         params_hat = delta_lib.tree_add(params0, recon_delta)
@@ -276,10 +263,8 @@ def make_protocol(model: CNNModel, cfg: ProtocolConfig, steps_per_round: int):
 
         # ---- 5. quantize the S delta (fine step size) --------------------
         s_delta = delta_lib.tree_sub(scales1, scales0)
-        s_levels = jax.tree.map(
-            lambda d: quant_lib.quantize(d, cfg.fine_step_size), s_delta)
-        s_recon = jax.tree.map(
-            lambda q: quant_lib.dequantize(q, cfg.fine_step_size), s_levels)
+        s_levels, s_recon = stages_lib.quantize_scales_delta(
+            s_delta, cfg.fine_step_size)
 
         metrics = {
             "train_loss": jnp.mean(losses),

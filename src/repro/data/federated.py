@@ -42,7 +42,7 @@ def split_federated(key: jax.Array, x: jax.Array, y: jax.Array, num_clients: int
     rest_x, rest_y = x[n_test:], y[n_test:]
 
     if dirichlet_alpha is not None:
-        # beyond-paper non-IID partition: sort by label-biased assignment
+        # beyond-paper non-IID partition: per-class dirichlet assignment
         rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
         labels = np.asarray(rest_y)
         classes = int(labels.max()) + 1
@@ -51,11 +51,27 @@ def split_federated(key: jax.Array, x: jax.Array, y: jax.Array, num_clients: int
             idx = np.nonzero(labels == c)[0]
             probs = rng.dirichlet([dirichlet_alpha] * num_clients)
             client_of[idx] = rng.choice(num_clients, len(idx), p=probs)
-        # equalise counts by round-robin reassignment of overflow
+        # equalise counts (stacked-array layout needs equal splits): each
+        # client keeps up to `per` of ITS dirichlet draw; shortfalls are
+        # filled from a shuffled pool of the over-quota leftovers, so the
+        # kept core of every client still follows its dirichlet(alpha) draw
         per = len(labels) // num_clients
-        order = np.argsort(client_of, kind="stable")
-        rest_x = rest_x[order][: per * num_clients]
-        rest_y = rest_y[order][: per * num_clients]
+        # shuffle each client's draw before truncating so the kept core is
+        # an unbiased subsample even on index/label-ordered datasets
+        by_client = [rng.permutation(np.nonzero(client_of == c)[0])
+                     for c in range(num_clients)]
+        kept = [ids[:per] for ids in by_client]
+        leftover = np.concatenate([ids[per:] for ids in by_client])
+        leftover = rng.permutation(leftover)
+        filled, used = [], 0
+        for t in kept:
+            need = per - len(t)
+            if need > 0:
+                t = np.concatenate([t, leftover[used:used + need]])
+                used += need
+            filled.append(t)
+        sel = np.concatenate(filled)
+        rest_x, rest_y = rest_x[sel], rest_y[sel]
     else:
         per = rest_x.shape[0] // num_clients
         rest_x = rest_x[: per * num_clients]

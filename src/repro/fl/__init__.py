@@ -3,6 +3,7 @@
 See README.md in this directory for the subsystem layout and the scenario
 registry, and tests/test_fl_engine.py for the behavioural contract.
 """
+from repro.comms import ChannelConfig
 from repro.fl.async_buffer import (AsyncConfig, BufferEntry, aggregate_buffer,
                                    client_latencies, staleness_weight)
 from repro.fl.engine import (EngineConfig, RoundRecord, RunResult,
@@ -15,6 +16,7 @@ from repro.fl.server_opt import (ServerOptConfig, make_server_opt,
                                  server_step, server_update)
 
 __all__ = [
+    "ChannelConfig",
     "AsyncConfig", "BufferEntry", "aggregate_buffer", "client_latencies",
     "staleness_weight",
     "EngineConfig", "RoundRecord", "RunResult", "encode_client_bytes",

@@ -1,37 +1,54 @@
 """Federated simulation engine: the generalised Algorithm-1 outer loop.
 
 Subsumes the seed's hardcoded all-clients FedAvg loop (``core/fsfl.py``,
-now a thin compat wrapper) with three orthogonal axes:
+now a thin compat wrapper) with orthogonal axes:
 
   * **client sampling** — per-round cohorts of K out of C clients
     (``sampling.py``); the stacked client arrays are gathered down to the
     cohort so the vmapped ``client_round`` runs only over participants,
-  * **server optimizers** — FedAvg / FedAvgM / FedAdam applied to the
-    aggregated reconstructed delta as a pseudo-gradient (``server_opt.py``),
+  * **server optimizers** — FedAvg / FedAvgM / FedAdam / FedYogi /
+    FedAdagrad applied to the aggregated reconstructed delta as a
+    pseudo-gradient (``server_opt.py``),
   * **sync vs. buffered-async rounds** — FedBuff-style staleness-weighted
     buffer fed by clients with heterogeneous latencies, driving a simulated
-    wall-clock (``async_buffer.py``).
+    wall-clock (``async_buffer.py``),
+  * **wire codec** — every round transmits *real bitstreams* in both
+    directions through a ``repro.comms`` codec: per-client upstream payloads
+    are encoded, decoded, and the DECODED reconstruction is what the server
+    aggregates; ``RoundRecord.up_bytes``/``down_bytes`` are payload lengths,
+  * **channel** — an optional ``repro.comms.ChannelModel`` converts payload
+    sizes into transfer times on the simulated clock (and can drop sync
+    uploads), so compression ratio trades against round time.
 
-All modes keep the seed's *exact* DeepCABAC byte accounting (per-client
-``nnc.encode_tree`` of the integer levels) and the optional bidirectional
-downstream compression of the server update with error feedback (§5.2).
+Compat guarantee: with full participation + FedAvg(lr=1) + sync mode + the
+default ``codec="auto"`` (the paper's ``nnc-cabac`` stack) the engine
+consumes the identical PRNG-key sequence, the payload lengths equal the
+seed's ``measure_update_bytes`` accounting, and the decoded reconstruction
+is bit-identical to the in-graph dequantization — so ``fsfl.run_federated``
+reproduces the seed's byte totals and accuracies exactly (tested in
+tests/test_fl_engine.py and tests/test_comms.py).  The one semantic change
+from the seed: protocols whose levels are measurement-only (``fedavg_nnc``)
+now have the server apply the decoded/dequantized update rather than the
+full-precision delta, and the raw-FedAvg baseline's payload includes the
+scale-delta section (the seed counted params only).
 
-Compat guarantee: with full participation + FedAvg(lr=1) + sync mode the
-engine consumes the identical PRNG-key sequence and performs bitwise the
-same server update as the seed loop, so ``fsfl.run_federated`` reproduces
-the seed's byte accounting exactly (tested in tests/test_fl_engine.py).
+``measure_bytes=False`` skips the wire entirely (no payloads, zero byte
+accounting, server applies the device-side reconstruction) — the fast path
+for pure convergence studies.  A channel requires the wire.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comms
 from repro.coding import nnc
+from repro.comms.channel import ChannelConfig, ChannelModel
 from repro.core import delta as delta_lib
 from repro.core import quant as quant_lib
 from repro.core import sparsify as sparsify_lib
@@ -58,7 +75,7 @@ class RoundRecord:
     train_loss: float
     wall_s: float
     participants: tuple[int, ...] = ()
-    sim_time_s: float = 0.0   # simulated wall-clock (async mode; 0 in sync)
+    sim_time_s: float = 0.0   # simulated wall-clock (async / channel; else 0)
 
 
 @dataclasses.dataclass
@@ -92,7 +109,10 @@ class EngineConfig:
     async_cfg: AsyncConfig = AsyncConfig()
     bidirectional: bool = False
     down_step_size: float = quant_lib.STEP_SIZE_BI
-    measure_bytes: bool = True
+    measure_bytes: bool = True           # real wire round-trips (False = off)
+    codec: Any = "auto"                  # registry name | comms.Codec
+    channel: ChannelConfig | None = None
+    up_predicate: Callable | None = None  # wire leaf-predicate (partial ups)
 
 
 # ---------------------------------------------------------------- helpers
@@ -101,13 +121,27 @@ def _tree_mean0(tree: Any) -> Any:
     return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
 
 
+def _tree_mean_rows(tree: Any, rows: list[int]) -> Any:
+    """Mean over a subset of leading-axis rows (channel-drop survivors)."""
+    sel = np.asarray(rows)
+    return jax.tree.map(lambda x: jnp.mean(x[sel], axis=0), tree)
+
+
+def _stack_trees(trees: list[Any]) -> Any:
+    return jax.tree.map(lambda *ls: np.stack(ls), *trees)
+
+
 def _client_slice(tree: Any, i: int) -> Any:
     return jax.tree.map(lambda x: np.asarray(x[i]), tree)
 
 
 def encode_client_bytes(levels_params: Any, levels_scales: Any,
                         ternary: bool) -> int:
-    """Exact DeepCABAC-coded bytes for ONE client's (unstacked) update."""
+    """Reference DeepCABAC byte accounting for ONE client's update.
+
+    Kept as the seed's measurement-path implementation; the ``nnc-cabac``
+    codec's real payloads are pinned byte-for-byte against it in tests.
+    """
     msg = {"p": jax.tree.map(np.asarray, levels_params),
            "s": jax.tree.map(np.asarray, levels_scales)}
     n = len(nnc.encode_tree(msg))
@@ -118,7 +152,7 @@ def encode_client_bytes(levels_params: Any, levels_scales: Any,
 
 def measure_update_bytes(levels_params: Any, levels_scales: Any,
                          num_clients: int, ternary: bool) -> int:
-    """Exact DeepCABAC-coded bytes summed over stacked client uploads."""
+    """Reference DeepCABAC bytes summed over stacked client uploads."""
     return sum(
         encode_client_bytes(_client_slice(levels_params, i),
                             _client_slice(levels_scales, i), ternary)
@@ -129,34 +163,122 @@ def _raw_bytes_per_client(params: Any) -> int:
     return 4 * sum(l.size for l in jax.tree.leaves(params))
 
 
+# ---------------------------------------------------------------- wire
+
+class _Wire:
+    """Upstream transmission: encode each client's update, decode it back.
+
+    The engine aggregates the DECODED reconstructions, so ``up_bytes`` is
+    the length of payloads that provably decode.  For level-lossless codecs
+    the decode is bit-identical to the in-graph dequantization (parity with
+    the seed); lossy wire codecs (fp16/int8) make the server honestly see
+    the wire loss.
+    """
+
+    def __init__(self, cfg: ProtocolConfig, engine: EngineConfig,
+                 server: ServerState):
+        self.codec = comms.resolve_codec(engine.codec, cfg.quantize)
+        if ("levels" in self.codec.needs and not cfg.quantize
+                and cfg.method != "ternary"):
+            # a level codec would put quantized levels on the wire while the
+            # client's residual (Eq. 5) assumes the full-precision recon was
+            # delivered — the same hazard resolve_codec's "auto" avoids
+            raise ValueError(
+                f"codec {self.codec.name!r} transmits integer levels but the "
+                "protocol has quantize=False; use a float codec "
+                "(raw-fp32/fp16/int8-blockscale) or enable quantization")
+        send_mask = None
+        if engine.up_predicate is not None:
+            send_mask = comms.make_send_mask(server.params,
+                                             engine.up_predicate)
+        self.spec = comms.WireSpec(
+            params=comms.shape_template(server.params),
+            scales=comms.shape_template(server.scales),
+            fine_mask=comms.path_fine_mask(server.params),
+            step_size=cfg.step_size,
+            fine_step_size=cfg.fine_step_size,
+            ternary=(cfg.method == "ternary"),
+            send_mask=send_mask)
+
+    def fetch(self, out) -> comms.ClientUpdate:
+        """Pull the wire-relevant RoundOutput trees to host in ONE transfer
+        (per-leaf np.asarray slicing would sync the device once per leaf
+        per client).  Only the trees the codec reads are fetched: level
+        codecs skip the float reconstructions (except ternary, which needs
+        them for the magnitude tail) and float codecs skip the levels."""
+        need_levels = "levels" in self.codec.needs
+        need_recon = "recon" in self.codec.needs or self.spec.ternary
+        return comms.ClientUpdate(*jax.device_get((
+            out.levels_params if need_levels else None,
+            out.levels_scales if need_levels else None,
+            out.recon_delta_params if need_recon else None,
+            out.recon_delta_scales if need_recon else None)))
+
+    def transmit(self, host: comms.ClientUpdate,
+                 i: int) -> tuple[bytes, comms.Decoded]:
+        """One client's upstream round-trip from the host-fetched stack."""
+        upd = comms.ClientUpdate(
+            levels_params=_client_slice(host.levels_params, i),
+            levels_scales=_client_slice(host.levels_scales, i),
+            recon_params=_client_slice(host.recon_params, i),
+            recon_scales=_client_slice(host.recon_scales, i))
+        payload = self.codec.encode(upd, self.spec)
+        return payload, self.codec.decode(payload, self.spec)
+
+    def transmit_single(self, out) -> tuple[bytes, comms.Decoded]:
+        """Round-trip for an unstacked (single-client) RoundOutput."""
+        upd = self.fetch(out)
+        payload = self.codec.encode(upd, self.spec)
+        return payload, self.codec.decode(payload, self.spec)
+
+
 class _Downstream:
     """Bidirectional server->clients compression with error feedback (§5.2).
 
-    Operates on the server *update* (the quantity actually broadcast).  For
-    FedAvg(lr=1) the update equals the aggregated delta bitwise, matching
-    the seed loop's pre-aggregation compression exactly.
+    Operates on the server *update* (the quantity actually broadcast) and
+    runs it through the wire codec as a params-only message: the engine
+    applies the DECODED broadcast and ``down_bytes`` is
+    ``receivers * len(payload)``.  For FedAvg(lr=1) the update equals the
+    aggregated delta bitwise, matching the seed loop's pre-aggregation
+    compression exactly.
     """
 
-    def __init__(self, cfg: ProtocolConfig, step_size: float, params0: Any):
+    def __init__(self, cfg: ProtocolConfig, step_size: float, params0: Any,
+                 codec: comms.Codec):
         self.enabled_for = cfg.method != "none"
+        self.codec = codec
         self.q = quant_lib.QuantConfig(step_size=step_size,
                                        fine_step_size=cfg.fine_step_size)
         self.spars = sparsify_lib.SparsifyConfig(
             delta=cfg.delta, gamma=cfg.gamma, step_size=step_size,
             unstructured=cfg.unstructured, structured=cfg.structured,
             fixed_sparsity=cfg.fixed_sparsity)
+        self.spec = comms.WireSpec(
+            params=comms.shape_template(params0), scales=None,
+            fine_mask=None, step_size=step_size,
+            fine_step_size=cfg.fine_step_size)
         self.residual = jax.tree.map(jnp.zeros_like, params0)
+        self.last_payload_bytes = 0
 
     def compress(self, updates: Any, receivers: int,
-                 measure: bool) -> tuple[Any, int]:
+                 transmit: bool) -> tuple[Any, int]:
         carried = delta_lib.tree_add(updates, self.residual)
         sparse = sparsify_lib.sparsify_tree(carried, self.spars)
         lv = quant_lib.quantize_tree(sparse, self.q)
-        recon = quant_lib.dequantize_tree(lv, self.q)
+        if transmit:
+            upd = comms.ClientUpdate(
+                levels_params=jax.tree.map(np.asarray, lv),
+                levels_scales=None,
+                recon_params=quant_lib.dequantize_tree(lv, self.q),
+                recon_scales=None)
+            payload = self.codec.encode(upd, self.spec)
+            recon = self.codec.decode(payload, self.spec).params
+            self.last_payload_bytes = len(payload)
+            down = receivers * len(payload)
+        else:
+            recon = quant_lib.dequantize_tree(lv, self.q)
+            down = 0
         self.residual = delta_lib.tree_sub(carried, recon)
-        down = 0
-        if measure:
-            down = receivers * len(nnc.encode_tree(jax.tree.map(np.asarray, lv)))
         return recon, down
 
 
@@ -173,7 +295,9 @@ class _Setup(NamedTuple):
     persistent: Any
     sopt: Any
     sopt_state: Any
+    wire: "_Wire"
     down: "_Downstream"
+    chan: ChannelModel | None
     key: jax.Array
 
 
@@ -184,6 +308,13 @@ def _setup(model, cfg: ProtocolConfig, splits: FederatedSplits,
         w = engine.sampling.weights
         if w is None or len(w) != num_clients:
             raise ValueError("weighted sampling needs one weight per client")
+    if engine.channel is not None and not engine.measure_bytes:
+        raise ValueError("a channel model needs real payloads: "
+                         "set measure_bytes=True")
+    if (engine.channel is not None and engine.channel.drop_rate > 0.0
+            and engine.mode == "async"):
+        raise ValueError("ChannelConfig.drop_rate models sync-round upload "
+                         "loss only; async mode does not implement drops")
     n_train = splits.client_x.shape[1]
     steps_per_round = max(1, n_train // cfg.batch_size)
 
@@ -193,10 +324,16 @@ def _setup(model, cfg: ProtocolConfig, splits: FederatedSplits,
     persistent = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), persistent0)
 
+    wire = _Wire(cfg, engine, server)
     sopt = make_server_opt(engine.server_opt)
+    chan = (ChannelModel(engine.channel, num_clients)
+            if engine.channel is not None else None)
     return _Setup(num_clients, n_train, client_round, jax.jit(evaluate),
                   server, persistent, sopt, sopt.init(server.params),
-                  _Downstream(cfg, engine.down_step_size, server.params), key)
+                  wire,
+                  _Downstream(cfg, engine.down_step_size, server.params,
+                              wire.codec),
+                  chan, key)
 
 
 # ---------------------------------------------------------------- sync
@@ -206,15 +343,19 @@ def _run_sync(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
     s = _setup(model, cfg, splits, key, engine)
     num_clients, n_train, key = s.num_clients, s.n_train, s.key
     server, persistent = s.server, s.persistent
-    sopt, sopt_state, jeval, down = s.sopt, s.sopt_state, s.jeval, s.down
+    sopt, sopt_state, jeval = s.sopt, s.sopt_state, s.jeval
+    wire, down, chan = s.wire, s.down, s.chan
 
     vround = jax.jit(jax.vmap(s.client_round,
                               in_axes=(None, 0, 0, 0, 0, 0, 0),
                               out_axes=0))
     full = engine.sampling.is_full(num_clients)
+    transmit = engine.measure_bytes
+    raw_model_bytes = _raw_bytes_per_client(server.params)
 
     records: list[RoundRecord] = []
     cum = 0
+    sim_clock = 0.0
     for t in range(1, rounds + 1):
         t0 = time.time()
         key, kb = jax.random.split(key)
@@ -240,29 +381,61 @@ def _run_sync(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
         persistent = (out.persistent if full else
                       scatter_clients(persistent, out.persistent, idx))
 
-        mean_dp = _tree_mean0(out.recon_delta_params)
-        mean_ds = _tree_mean0(out.recon_delta_scales)
-        mean_bn = _tree_mean0(out.bn_state)
-
-        updates, sopt_state = server_update(sopt, sopt_state, mean_dp,
-                                            server.params)
-        down_bytes = 0
-        if engine.bidirectional and down.enabled_for:
-            updates, down_bytes = down.compress(updates, cohort,
-                                                engine.measure_bytes)
-        server = ServerState(
-            params=apply_updates(server.params, updates),
-            scales=delta_lib.tree_add(server.scales, mean_ds),
-            bn_state=mean_bn)
-
+        # ---- upstream wire: encode + decode every participant ----------
         up_bytes = 0
-        if engine.measure_bytes:
-            if cfg.method == "none" and not cfg.quantize:
-                up_bytes = cohort * _raw_bytes_per_client(server.params)
-            else:
-                up_bytes = measure_update_bytes(
-                    out.levels_params, out.levels_scales, cohort,
-                    ternary=(cfg.method == "ternary"))
+        survivors = list(range(cohort))
+        if transmit:
+            host = wire.fetch(out)
+            payloads, dec_p, dec_s = [], [], []
+            for i in range(cohort):
+                payload, dec = wire.transmit(host, i)
+                payloads.append(payload)
+                dec_p.append(dec.params)
+                dec_s.append(dec.scales)
+            up_bytes = sum(len(p) for p in payloads)
+            if chan is not None:
+                down_ref = (down.last_payload_bytes if engine.bidirectional
+                            and down.last_payload_bytes else raw_model_bytes)
+                sim_clock += chan.round_time(
+                    [int(c) for c in idx], [len(p) for p in payloads],
+                    down_ref)
+                survivors = [i for i in range(cohort)
+                             if not chan.dropped(t, int(idx[i]))]
+                if cfg.error_feedback and len(survivors) != cohort:
+                    # a dropped upload must not break Eq. 5: re-inject the
+                    # lost (decoded) delta into that client's residual so
+                    # its mass is retransmitted next round (the scale-delta
+                    # section has no residual and stays lost)
+                    for i in range(cohort):
+                        if i in survivors:
+                            continue
+                        c = int(idx[i])
+                        persistent = persistent._replace(
+                            residual=jax.tree.map(
+                                lambda r, d: r.at[c].add(jnp.asarray(d)),
+                                persistent.residual, dec_p[i]))
+        aggregate = bool(survivors)
+        if transmit and aggregate:
+            mean_dp = _tree_mean0(_stack_trees([dec_p[i] for i in survivors]))
+            mean_ds = _tree_mean0(_stack_trees([dec_s[i] for i in survivors]))
+            mean_bn = (_tree_mean0(out.bn_state)
+                       if len(survivors) == cohort
+                       else _tree_mean_rows(out.bn_state, survivors))
+        elif aggregate:
+            mean_dp = _tree_mean0(out.recon_delta_params)
+            mean_ds = _tree_mean0(out.recon_delta_scales)
+            mean_bn = _tree_mean0(out.bn_state)
+
+        down_bytes = 0
+        if aggregate:
+            updates, sopt_state = server_update(sopt, sopt_state, mean_dp,
+                                                server.params)
+            if engine.bidirectional and down.enabled_for:
+                updates, down_bytes = down.compress(updates, cohort, transmit)
+            server = ServerState(
+                params=apply_updates(server.params, updates),
+                scales=delta_lib.tree_add(server.scales, mean_ds),
+                bn_state=mean_bn)
         cum += up_bytes + down_bytes
 
         acc = float(jeval(server, splits.test_x, splits.test_y))
@@ -273,12 +446,15 @@ def _run_sync(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
             update_sparsity=float(jnp.mean(out.metrics["update_sparsity"])),
             train_loss=float(jnp.mean(out.metrics["train_loss"])),
             wall_s=time.time() - t0,
-            participants=tuple(int(i) for i in idx))
+            participants=tuple(int(idx[i]) for i in survivors),
+            sim_time_s=sim_clock)
         records.append(rec)
         if verbose:
             print(f"[{cfg.name}] round {t:3d} acc={acc:.3f} "
-                  f"cohort={cohort} up={up_bytes/1e6:.3f}MB "
-                  f"sparsity={rec.update_sparsity:.3f}")
+                  f"cohort={len(survivors)}/{cohort} "
+                  f"up={up_bytes/1e6:.3f}MB "
+                  f"sparsity={rec.update_sparsity:.3f}"
+                  + (f" t_sim={sim_clock:.2f}s" if chan else ""))
     return RunResult(cfg.name, records, server=server)
 
 
@@ -302,12 +478,23 @@ def _run_async(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
     s = _setup(model, cfg, splits, key, engine)
     num_clients, n_train, key = s.num_clients, s.n_train, s.key
     server, persistent = s.server, s.persistent
-    sopt, sopt_state, jeval, down = s.sopt, s.sopt_state, s.jeval, s.down
+    sopt, sopt_state, jeval = s.sopt, s.sopt_state, s.jeval
+    wire, down, chan = s.wire, s.down, s.chan
+    transmit = engine.measure_bytes
+    raw_model_bytes = _raw_bytes_per_client(server.params)
 
     jround = jax.jit(s.client_round)
 
     key, kl = jax.random.split(key)
     latency = client_latencies(kl, num_clients, acfg)
+
+    def dispatch_delay(c: int) -> float:
+        """Model-download leg of a dispatch (channel mode only)."""
+        if chan is None:
+            return 0.0
+        down_ref = (down.last_payload_bytes if engine.bidirectional
+                    and down.last_payload_bytes else raw_model_bytes)
+        return chan.down_time(c, down_ref)
 
     concurrency = min(acfg.concurrency, num_clients)
     available = set(range(num_clients))
@@ -317,7 +504,8 @@ def _run_async(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
     in_flight: list[_InFlight] = []
     for c in first:
         available.discard(int(c))
-        in_flight.append(_InFlight(int(c), 0, server, float(latency[c])))
+        in_flight.append(_InFlight(int(c), 0, server,
+                                   dispatch_delay(int(c)) + float(latency[c])))
 
     version = 0
     now = 0.0
@@ -327,10 +515,11 @@ def _run_async(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
     cum = 0
     t0 = time.time()
     while len(records) < rounds:
-        # pop the earliest-finishing client (concurrency is small)
+        # pop the earliest-finishing client (concurrency is small); with a
+        # channel the upload leg is appended at pop time, so arrival order
+        # approximates compute-finish order (documented simplification)
         e = min(in_flight, key=lambda f: f.finish)
         in_flight.remove(e)
-        now = e.finish
         c = e.client
 
         key, kb = jax.random.split(key)
@@ -343,16 +532,23 @@ def _run_async(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
                                   persistent, out.persistent)
 
         up = 0
-        if engine.measure_bytes:
-            if cfg.method == "none" and not cfg.quantize:
-                up = _raw_bytes_per_client(server.params)
-            else:
-                up = encode_client_bytes(out.levels_params, out.levels_scales,
-                                         ternary=(cfg.method == "ternary"))
+        if transmit:
+            payload, dec = wire.transmit_single(out)
+            up = len(payload)
+            delta_params, delta_scales = dec.params, dec.scales
+        else:
+            delta_params = out.recon_delta_params
+            delta_scales = out.recon_delta_scales
+        # arrival = compute finish + upload leg; clients pop in compute-finish
+        # order, so with heterogeneous uploads a later pop can carry an
+        # earlier arrival — clamp to keep the simulated clock monotone
+        arrival = e.finish + (chan.up_time(c, up) if chan is not None else 0.0)
+        now = max(now, arrival)
+
         buffer.append(BufferEntry(
             client=c, staleness=version - e.start_version, finish_time=now,
-            delta_params=out.recon_delta_params,
-            delta_scales=out.recon_delta_scales,
+            delta_params=delta_params,
+            delta_scales=delta_scales,
             bn_state=out.bn_state, up_bytes=up))
         buf_metrics.append(out.metrics)
 
@@ -365,7 +561,7 @@ def _run_async(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
             down_bytes = 0
             if engine.bidirectional and down.enabled_for:
                 updates, down_bytes = down.compress(updates, concurrency,
-                                                    engine.measure_bytes)
+                                                    transmit)
             server = ServerState(
                 params=apply_updates(server.params, updates),
                 scales=delta_lib.tree_add(server.scales, mean_ds),
@@ -406,7 +602,8 @@ def _run_async(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
                                    engine.sampling)[0])
         available.discard(nxt)
         in_flight.append(_InFlight(nxt, version, server,
-                                   now + float(latency[nxt])))
+                                   now + dispatch_delay(nxt)
+                                   + float(latency[nxt])))
     return RunResult(cfg.name, records, server=server)
 
 

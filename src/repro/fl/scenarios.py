@@ -1,11 +1,12 @@
 """Scenario registry: named, reproducible federated experiment settings.
 
 A Scenario composes the orthogonal engine axes — client sampling x server
-optimizer x sync/async x uni/bidirectional x full/partial updates — on top
-of one of the Table-2 protocol rows.  Scenarios are frozen dataclasses keyed
-by name in ``SCENARIOS`` so benchmarks (`benchmarks/fl_convergence.py`),
-examples (`examples/federated_cifar.py`) and CI (`scripts/ci.sh`) all run
-the exact same settings.
+optimizer x sync/async x uni/bidirectional x full/partial updates x wire
+codec x channel x data heterogeneity (dirichlet) — on top of one of the
+Table-2 protocol rows.  Scenarios are frozen dataclasses keyed by name in
+``SCENARIOS`` so benchmarks (`benchmarks/fl_convergence.py`), examples
+(`examples/federated_cifar.py`) and CI (`scripts/ci.sh`) all run the exact
+same settings.
 
     from repro.fl import run_scenario
     result = run_scenario("sync_k4_fedadam", rounds=3)
@@ -21,6 +22,7 @@ from typing import Any
 
 import jax
 
+from repro.comms import ChannelConfig
 from repro.core.protocol import ProtocolConfig, baseline_configs
 from repro.data import federated, synthetic
 from repro.fl.async_buffer import AsyncConfig
@@ -54,6 +56,11 @@ class Scenario:
     staleness_exponent: float = 0.5
     bidirectional: bool = False
     rounds: int = 3
+    # --- wire: codec x channel (repro.comms) ---
+    codec: str = "auto"             # registry name; "auto" = seed semantics
+    channel: ChannelConfig | None = None
+    # --- data heterogeneity (default task only) ---
+    dirichlet_alpha: float | None = None   # None = IID random partition
 
 
 def _fc_only(path: str, leaf) -> bool:
@@ -84,18 +91,24 @@ def build_engine(s: Scenario) -> EngineConfig:
         async_cfg=AsyncConfig(buffer_size=s.buffer_size,
                               concurrency=s.concurrency,
                               staleness_exponent=s.staleness_exponent),
-        bidirectional=s.bidirectional)
+        bidirectional=s.bidirectional,
+        codec=s.codec,
+        channel=s.channel,
+        # partial updates never have non-classifier deltas, so the wire
+        # drops those leaves entirely (layer-selective payloads)
+        up_predicate=_fc_only if s.partial_updates else None)
 
 
 def default_setting(num_clients: int, *, n_samples: int = 640,
-                    seed: int = 0):
+                    seed: int = 0, dirichlet_alpha: float | None = None):
     """Tiny VGG + synthetic CIFAR-like federated split (container-sized)."""
     task = synthetic.ImageTask("cifar_like", 10, 3, prototypes_per_class=2,
                                noise=0.3)
     x, y = synthetic.make_image_dataset(jax.random.PRNGKey(seed), task,
                                         n_samples)
     splits = federated.split_federated(jax.random.PRNGKey(seed + 1), x, y,
-                                       num_clients)
+                                       num_clients,
+                                       dirichlet_alpha=dirichlet_alpha)
     model = cnn.make_vgg("vgg_scenario", [8, 16, 32], 10, 3,
                          dense_width=16, pool_after=(0, 1, 2))
     return model, splits
@@ -153,8 +166,47 @@ for _s in [
              "bidirectional compression of the server broadcast (§5.2)",
              bidirectional=True),
     Scenario("partial_fc_k4",
-             "classifier-only partial updates with cohort sampling",
+             "classifier-only partial updates with cohort sampling "
+             "(layer-selective wire payloads)",
              cohort_size=4, partial_updates=True),
+    # ---- non-IID (dirichlet) x codec cross (ROADMAP open item) ----
+    Scenario("noniid_dir01_fsfl",
+             "pathological heterogeneity: dirichlet(0.1) label partition",
+             dirichlet_alpha=0.1),
+    Scenario("noniid_dir1_k4_fedyogi",
+             "mild heterogeneity dirichlet(1.0), cohorts of 4, FedYogi",
+             dirichlet_alpha=1.0, cohort_size=4,
+             server_opt="fedyogi", server_lr=1e-2),
+    Scenario("noniid_dir01_golomb",
+             "dirichlet(0.1) with the exp-Golomb wire codec",
+             dirichlet_alpha=0.1, codec="golomb"),
+    Scenario("noniid_dir01_fp16",
+             "dirichlet(0.1) with lossy fp16 wire payloads",
+             dirichlet_alpha=0.1, codec="fp16"),
+    # ---- server-opt extensions ----
+    Scenario("sync_k4_fedadagrad",
+             "cohorts of 4 of 8, FedAdagrad server optimizer",
+             cohort_size=4, server_opt="fedadagrad", server_lr=1e-2),
+    # ---- codec / channel axes ----
+    Scenario("codec_int8_k4",
+             "int8-blockscale wire payloads (fused Pallas quantizer)",
+             cohort_size=4, codec="int8-blockscale"),
+    Scenario("chan_slow_cabac",
+             "1 Mbps uplink, 50 ms latency: DeepCABAC payloads",
+             channel=ChannelConfig(up_mbps=1.0, down_mbps=8.0,
+                                   latency_s=0.05)),
+    Scenario("chan_slow_raw",
+             "same constrained channel, uncompressed fp32 payloads — "
+             "compression ratio becomes round time",
+             codec="raw-fp32",
+             channel=ChannelConfig(up_mbps=1.0, down_mbps=8.0,
+                                   latency_s=0.05)),
+    Scenario("chan_lossy_k4",
+             "10% upload drop rate, heterogeneous bandwidths, cohorts of 4",
+             cohort_size=4,
+             channel=ChannelConfig(up_mbps=4.0, down_mbps=16.0,
+                                   latency_s=0.02, bandwidth_sigma=0.5,
+                                   drop_rate=0.1)),
 ]:
     register(_s)
 del _s
@@ -172,7 +224,8 @@ def run_scenario(scenario: str | Scenario, *, rounds: int | None = None,
     if (model is None) != (splits is None):
         raise ValueError("pass both model and splits, or neither")
     if model is None:
-        model, splits = default_setting(s.num_clients)
+        model, splits = default_setting(s.num_clients,
+                                        dirichlet_alpha=s.dirichlet_alpha)
     if splits.num_clients != s.num_clients:
         if (s.sampling_weights is not None
                 and len(s.sampling_weights) != splits.num_clients):

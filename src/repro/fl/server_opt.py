@@ -6,13 +6,18 @@ first-order optimizer.  We reuse the repo's own ``optim/`` transforms — the
 pseudo-gradient is ``-delta`` so that the optimizer's descent direction is
 the direction the clients moved:
 
-  fedavg    sgd(lr=1, momentum=0)   -> params + delta     (seed-exact)
-  fedavgm   sgd(lr, momentum=beta)  -> momentum-smoothed delta
-  fedadam   adam(lr, b1, b2, eps)   -> adaptive per-coordinate step
+  fedavg      sgd(lr=1, momentum=0)    -> params + delta     (seed-exact)
+  fedavgm     sgd(lr, momentum=beta)   -> momentum-smoothed delta
+  fedadam     adam(lr, b1, b2, eps)    -> adaptive per-coordinate step
+  fedyogi     yogi(lr, b1, b2, eps)    -> Yogi's additive v-control
+  fedadagrad  adagrad(lr, eps)         -> accumulated-g^2 decay
 
 FedAvg with lr=1.0 is bitwise identical to the seed's plain
 ``tree_add(params, mean_delta)`` (multiply-by-1.0 is exact in float32),
-which the compat wrapper in ``core/fsfl.py`` relies on.
+which the compat wrapper in ``core/fsfl.py`` relies on.  The adaptive
+variants share FedOpt's large-tau convention (eps=1e-3, b2=0.99); fedadam
+and fedyogi are bias-corrected like this repo's ``adam`` (identical first
+step, diverging once v shrinks).
 """
 from __future__ import annotations
 
@@ -22,17 +27,17 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.optim import Optimizer, adam, apply_updates, sgd
+from repro.optim import Optimizer, adagrad, adam, apply_updates, sgd, yogi
 
 
 @dataclasses.dataclass(frozen=True)
 class ServerOptConfig:
-    name: str = "fedavg"     # "fedavg" | "fedavgm" | "fedadam"
+    name: str = "fedavg"     # fedavg | fedavgm | fedadam | fedyogi | fedadagrad
     lr: float = 1.0
     momentum: float = 0.9    # fedavgm
-    b1: float = 0.9          # fedadam
-    b2: float = 0.99         # fedadam (FedOpt default, not 0.999)
-    eps: float = 1e-3        # fedadam "tau" — large eps per FedOpt
+    b1: float = 0.9          # fedadam / fedyogi
+    b2: float = 0.99         # fedadam / fedyogi (FedOpt default, not 0.999)
+    eps: float = 1e-3        # "tau" — large eps per FedOpt
 
 
 def make_server_opt(cfg: ServerOptConfig) -> Optimizer:
@@ -42,6 +47,10 @@ def make_server_opt(cfg: ServerOptConfig) -> Optimizer:
         return sgd(cfg.lr, momentum=cfg.momentum)
     if cfg.name == "fedadam":
         return adam(cfg.lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps)
+    if cfg.name == "fedyogi":
+        return yogi(cfg.lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps)
+    if cfg.name == "fedadagrad":
+        return adagrad(cfg.lr, eps=cfg.eps)
     raise ValueError(f"unknown server optimizer: {cfg.name!r}")
 
 

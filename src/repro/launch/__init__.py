@@ -1,0 +1,23 @@
+"""Launchers for the (optional) multi-host mesh runtime.
+
+The ``repro.dist`` mesh runtime is not part of this checkout; everything
+that needs it imports lazily and fails with a clear message instead of a
+bare ImportError.  ``repro.launch.serve`` and the FL engine run without it.
+"""
+from __future__ import annotations
+
+DIST_MISSING_MSG = (
+    "the `repro.dist` mesh runtime is not present in this checkout; "
+    "this entry point needs it (see ROADMAP.md — restore repro.dist to "
+    "run mesh training/dry-runs).  The federated engine "
+    "(examples/federated_cifar.py, benchmarks/fl_convergence.py) runs "
+    "without it."
+)
+
+
+def require_dist() -> None:
+    """Raise SystemExit with a friendly message if repro.dist is absent."""
+    try:
+        import repro.dist  # noqa: F401
+    except ImportError:
+        raise SystemExit(DIST_MISSING_MSG) from None

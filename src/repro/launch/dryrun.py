@@ -206,6 +206,8 @@ def default_microbatches(cfg) -> int:
 
 
 def main():
+    from repro.launch import require_dist
+    require_dist()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")

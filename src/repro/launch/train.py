@@ -38,6 +38,8 @@ def main():
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
 
+    from repro.launch import require_dist
+    require_dist()
     from repro import checkpoint
     from repro.configs import get, make_inputs
     from repro.data.synthetic import make_markov_lm

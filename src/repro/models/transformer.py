@@ -160,6 +160,10 @@ class ShardPlan:
 
 SINGLE = ShardPlan()
 
+# Param-dict keys whose leaves are stacked along a scanned layer axis.
+# (The mesh runtime's sharding layer, when present, uses the same set.)
+STACKED_KEYS = ("layers", "superblocks")
+
 
 class ParamSource:
     """Indirection for parameter access: the mesh runtime stores params as
@@ -177,10 +181,6 @@ class ParamSource:
         return name in self._p
 
     def top(self) -> dict:
-        try:
-            from repro.dist.sharding import STACKED_KEYS  # no cycle at call time
-        except ImportError:  # mesh runtime absent: direct-dict layout
-            STACKED_KEYS = ("layers", "superblocks")
         return {k: v for k, v in self._p.items() if k not in STACKED_KEYS}
 
     def stack(self, name: str):

@@ -1,6 +1,6 @@
-from repro.optim.optim import (Optimizer, adam, apply_updates,
-                               clip_by_global_norm, global_norm, sgd)
+from repro.optim.optim import (Optimizer, adagrad, adam, apply_updates,
+                               clip_by_global_norm, global_norm, sgd, yogi)
 from repro.optim import schedule
 
-__all__ = ["Optimizer", "adam", "sgd", "apply_updates", "global_norm",
-           "clip_by_global_norm", "schedule"]
+__all__ = ["Optimizer", "adagrad", "adam", "sgd", "yogi", "apply_updates",
+           "global_norm", "clip_by_global_norm", "schedule"]

@@ -86,6 +86,63 @@ def adam(lr: LR, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optim
     return Optimizer(init, update)
 
 
+def yogi(lr: LR, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    """Yogi (Zaheer et al. 2018): Adam with additive second-moment control.
+
+    ``v`` moves toward ``g^2`` by a bounded step instead of an exponential
+    average, so the effective lr can INCREASE again after large gradients:
+    ``v <- v - (1-b2) * sign(v - g^2) * g^2``.  Bias correction mirrors this
+    repo's ``adam`` (first step identical to Adam since v0 = 0).
+    """
+
+    def init(params):
+        return AdamState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(jnp.zeros_like, params),
+            jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        step = state.step + 1
+        lr_t = _lr_at(lr, state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: v - (1 - b2) * jnp.sign(v - g * g) * g * g,
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v: -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+class AdagradState(NamedTuple):
+    step: jax.Array
+    nu: Any
+
+
+def adagrad(lr: LR, eps: float = 1e-8) -> Optimizer:
+    """Adagrad: per-coordinate lr decayed by the running sum of g^2."""
+
+    def init(params):
+        return AdagradState(jnp.zeros((), jnp.int32),
+                            jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        del params
+        lr_t = _lr_at(lr, state.step)
+        nu = jax.tree.map(lambda v, g: v + g * g, state.nu, grads)
+        updates = jax.tree.map(
+            lambda g, v: -lr_t * g / (jnp.sqrt(v) + eps), grads, nu)
+        return updates, AdagradState(state.step + 1, nu)
+
+    return Optimizer(init, update)
+
+
 def apply_updates(params: Any, updates: Any) -> Any:
     return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
 

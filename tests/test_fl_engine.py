@@ -100,6 +100,51 @@ def test_fedadam_differs_from_fedavg_and_respects_lr():
     assert np.all(np.sign(b) == np.sign(a))
 
 
+def test_fedyogi_first_step_matches_adam_then_diverges():
+    """Yogi's v0=0 makes step 1 identical to FedAdam; the additive
+    v-control makes step 2 differ (Zaheer et al. 2018, FedOpt Alg. 2)."""
+    scfg = ServerOptConfig("fedyogi", lr=1e-2, b1=0.9, b2=0.99, eps=1e-3)
+    params = jax.tree.map(jnp.zeros_like, _delta_tree(jax.random.PRNGKey(0)))
+    delta = _delta_tree(jax.random.PRNGKey(1))
+    yogi = make_server_opt(scfg)
+    p1, st = server_step(yogi, params, yogi.init(params), delta)
+    expected = jax.tree.map(
+        lambda d: scfg.lr * d / (jnp.abs(d) + scfg.eps), delta)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-8)
+    # second step on a much smaller delta: yogi's v DEcreases additively
+    # (sign-controlled), adam's v decays geometrically -> different params
+    small = jax.tree.map(lambda d: d * 1e-3, delta)
+    adam = make_server_opt(dataclasses.replace(scfg, name="fedadam"))
+    pa, sta = server_step(adam, params, adam.init(params), delta)
+    pa2, _ = server_step(adam, pa, sta, small)
+    py2, _ = server_step(yogi, p1, st, small)
+    a = np.concatenate([np.ravel(l) for l in jax.tree.leaves(pa2)])
+    b = np.concatenate([np.ravel(l) for l in jax.tree.leaves(py2)])
+    assert not np.allclose(a, b)
+
+
+def test_fedadagrad_accumulates_and_decays_steps():
+    """v is the running SUM of g^2: the first step is lr*d/(|d|+eps) and
+    repeated identical deltas take ever-smaller steps (1/sqrt(t))."""
+    scfg = ServerOptConfig("fedadagrad", lr=1e-2, eps=1e-3)
+    delta = {"w": jnp.full((3,), 0.5)}
+    params = {"w": jnp.zeros((3,))}
+    opt = make_server_opt(scfg)
+    state = opt.init(params)
+    p1, state = server_step(opt, params, state, delta)
+    np.testing.assert_allclose(
+        np.asarray(p1["w"]), 1e-2 * 0.5 / (0.5 + 1e-3), rtol=1e-6)
+    p2, state = server_step(opt, p1, state, delta)
+    p3, _ = server_step(opt, p2, state, delta)
+    s1 = float(p1["w"][0])
+    s2 = float(p2["w"][0] - p1["w"][0])
+    s3 = float(p3["w"][0] - p2["w"][0])
+    assert s1 > s2 > s3 > 0
+    np.testing.assert_allclose(s2, s1 / np.sqrt(2), rtol=1e-3)
+
+
 def test_fedavgm_momentum_accumulates():
     scfg = ServerOptConfig("fedavgm", lr=1.0, momentum=0.9)
     delta = {"w": jnp.ones((2, 2)) * 0.1}

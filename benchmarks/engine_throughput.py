@@ -1,0 +1,204 @@
+"""Engine throughput: per-round wall-clock + parallel-uplink speedups.
+
+Two measurements, emitted together as ``BENCH_engine.json``:
+
+(a) **Uplink encode+decode throughput** — the host wire hot path.  A
+    synthetic cohort of N clients (default 8) is pushed through the REAL
+    ``repro.fl.rounds.Uplink`` stage (codec registry payloads, both
+    directions, order-preserving) serially and through thread/process
+    pools.  Per-message codec state makes the round-trips embarrassingly
+    parallel; what limits the win is the GIL: numpy-dominated codecs
+    (fp16 casts, int8 kernel) release it and profit from threads, the
+    pure-Python entropy coders (nnc-cabac bit loop) need the fork pool.
+
+(b) **Per-round wall-clock** — a few rounds of representative scenarios
+    (sync barrier, buffered async, schema v2) with mean seconds/round.
+
+``--smoke`` shrinks the tensors and rounds for CI; the default sizes are
+chosen so the headline number (``best_thread_speedup``) reflects a
+realistic few-MB model update.  Scale knob: REPRO_BENCH_SCALE.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core.protocol import ProtocolConfig, ServerState
+from repro.core import quant as quant_lib
+from repro.fl import EngineConfig, Uplink, run_scenario
+from repro.comms import ClientUpdate
+
+
+# ------------------------------------------------------------- uplink bench
+
+def _bench_shapes(smoke: bool):
+    if smoke:
+        return {"conv1": (16, 3, 3, 3), "conv2": (32, 16, 3, 3),
+                "fc": (64, 512)}
+    return {"conv1": (64, 3, 3, 3), "conv2": (128, 64, 3, 3),
+            "fc": (256, 4096)}
+
+
+def _synthetic_cohort(num_clients: int, smoke: bool, density: float = 0.05):
+    """Stacked (levels, recon) updates consistent under the default step."""
+    shapes = _bench_shapes(smoke)
+    q = quant_lib.QuantConfig()
+    rng = np.random.default_rng(0)
+    lv = {k: (rng.integers(-40, 41, (num_clients,) + s)
+              * (rng.random((num_clients,) + s) < density)).astype(np.int32)
+          for k, s in shapes.items()}
+    recon = {k: lv[k].astype(np.float32) * np.float32(q.step_size)
+             for k in lv}
+    s_lv = {"s0": rng.integers(-3, 4, (num_clients, 16)).astype(np.int32)}
+    s_recon = {k: v.astype(np.float32) * np.float32(q.fine_step_size)
+               for k, v in s_lv.items()}
+    bn = {"bn": {"mean": rng.normal(size=(num_clients, 32))
+                 .astype(np.float32),
+                 "var": rng.random((num_clients, 32)).astype(np.float32)}}
+    params0 = {k: np.zeros(s, np.float32) for k, s in shapes.items()}
+    scales0 = {"s0": np.zeros((16,), np.float32)}
+    bn0 = {"bn": {"mean": np.zeros((32,), np.float32),
+                  "var": np.ones((32,), np.float32)}}
+    server = ServerState(params=params0, scales=scales0, bn_state=bn0)
+    return server, (lv, s_lv, recon, s_recon, bn)
+
+
+def _client_updates(stacks, num_clients: int, with_bn: bool, needs):
+    """Per-client updates carrying only the trees the codec reads — the
+    same thinning Uplink.fetch applies, so pickle costs on the process
+    path match the engine's."""
+    lv, s_lv, recon, s_recon, bn = stacks
+    want_lv = "levels" in needs
+    want_rc = "recon" in needs
+
+    def row(tree, i):
+        import jax
+        return jax.tree.map(lambda x: x[i], tree)
+
+    return [ClientUpdate(row(lv, i) if want_lv else None,
+                         row(s_lv, i) if want_lv else None,
+                         row(recon, i) if want_rc else None,
+                         row(s_recon, i) if want_rc else None,
+                         bn=row(bn, i) if with_bn else None)
+            for i in range(num_clients)]
+
+
+def _make_uplink(server, codec: str, workers: int, executor: str,
+                 wire_schema: int) -> Uplink:
+    cfg = ProtocolConfig(name="bench", method="sparse", batch_size=32)
+    ecfg = EngineConfig(codec=codec, uplink_workers=workers,
+                        uplink_executor=executor, wire_schema=wire_schema)
+    return Uplink(cfg, ecfg, server)
+
+
+def _time_roundtrips(uplink: Uplink, upds, repeats: int):
+    best, results = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        results = uplink.roundtrip_all(upds)
+        best = min(best, time.perf_counter() - t0)
+    assert all(n > 0 for n, _ in results)
+    return best, results
+
+
+def bench_uplink(num_clients: int, smoke: bool, workers: int,
+                 codecs=("fp16", "int8-blockscale", "golomb", "nnc-cabac"),
+                 wire_schema: int = 1, repeats: int = 2):
+    server, stacks = _synthetic_cohort(num_clients, smoke)
+    rows = []
+    for codec in codecs:
+        serial = _make_uplink(server, codec, 0, "thread", wire_schema)
+        upds = _client_updates(stacks, num_clients,
+                               with_bn=(wire_schema == 2),
+                               needs=serial.codec.needs)
+        t_serial, results = _time_roundtrips(serial, upds, repeats)
+        row = {"codec": codec, "clients": num_clients,
+               "payload_bytes": sum(n for n, _ in results),
+               "serial_s": round(t_serial, 4)}
+        kinds = ["thread"]
+        if serial.codec.fork_safe:   # jax-dispatching codecs refuse fork
+            kinds.append("process")
+        for kind in kinds:
+            pooled = _make_uplink(server, codec, workers, kind, wire_schema)
+            try:
+                t, _ = _time_roundtrips(pooled, upds, repeats)
+            finally:
+                pooled.close()
+            row[f"{kind}_s"] = round(t, 4)
+            row[f"{kind}_speedup"] = round(t_serial / t, 2)
+        rows.append(row)
+        print(f"# uplink {codec}: " + " ".join(
+            f"{k}={row[f'{k}_s']}s"
+            + (f" ({row[f'{k}_speedup']}x)" if k != "serial" else "")
+            for k in ["serial"] + kinds), file=sys.stderr, flush=True)
+    return rows
+
+
+# ------------------------------------------------------------- round bench
+
+def bench_rounds(rounds: int, scenarios=("sync_full_fedavg_fsfl",
+                                         "async_b4_fsfl", "bnwire_v2_full")):
+    rows = []
+    for name in scenarios:
+        res = run_scenario(name, rounds=rounds)
+        walls = [r.wall_s for r in res.records]
+        rows.append({
+            "scenario": name, "rounds": len(res.records),
+            "mean_round_s": round(float(np.mean(walls)), 3),
+            "first_round_s": round(walls[0], 3),  # includes jit compile
+            "steady_round_s": round(float(np.mean(walls[1:])), 3)
+            if len(walls) > 1 else round(walls[0], 3),
+            "total_up_bytes": res.records[-1].cum_bytes,
+        })
+        print(f"# rounds {name}: mean={rows[-1]['mean_round_s']}s "
+              f"steady={rows[-1]['steady_round_s']}s",
+              file=sys.stderr, flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small tensors + 1 round per scenario (CI)")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="pool size (default: min(4, cpu count))")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+
+    workers = args.workers or min(4, os.cpu_count() or 1)
+    scale = float(os.environ.get("REPRO_BENCH_SCALE", "1"))
+    rounds = 1 if args.smoke else max(2, int(3 * scale))
+
+    uplink_rows = bench_uplink(args.clients, smoke=args.smoke,
+                               workers=workers)
+    best = max(uplink_rows, key=lambda r: r["thread_speedup"])
+    best_proc = max((r for r in uplink_rows if "process_speedup" in r),
+                    key=lambda r: r["process_speedup"])
+    report = {
+        "mode": "smoke" if args.smoke else "full",
+        "clients": args.clients,
+        "workers": workers,
+        "uplink": uplink_rows,
+        "best_thread_speedup": {"codec": best["codec"],
+                                "speedup": best["thread_speedup"]},
+        "best_process_speedup": {"codec": best_proc["codec"],
+                                 "speedup": best_proc["process_speedup"]},
+        "rounds": bench_rounds(rounds),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(json.dumps(report, indent=2))
+    if not args.smoke and report["best_thread_speedup"]["speedup"] < 1.5:
+        print("WARNING: thread-pooled uplink under 1.5x serial",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,10 +35,19 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--bidirectional", action="store_true")
     ap.add_argument("--scenario", choices=list_scenarios(), default=None)
+    ap.add_argument("--wire-schema", type=int, choices=(1, 2), default=None,
+                    help="2 = BN statistics travel inside every codec "
+                         "payload (scenario runs only)")
+    ap.add_argument("--uplink-workers", type=int, default=None,
+                    help="parallel per-client wire encode+decode "
+                         "(scenario runs only)")
     ap.add_argument("--out", default="/tmp/fsfl_server.ckpt")
     args = ap.parse_args()
 
     scenario = get_scenario(args.scenario) if args.scenario else None
+    if scenario is None and (args.wire_schema is not None
+                             or args.uplink_workers is not None):
+        ap.error("--wire-schema/--uplink-workers need --scenario")
     if args.clients is None:
         args.clients = scenario.num_clients if scenario else 4
     if args.rounds is None and scenario is None:
@@ -55,6 +64,12 @@ def main():
     if scenario is not None:
         if args.bidirectional:
             scenario = dataclasses.replace(scenario, bidirectional=True)
+        if args.wire_schema is not None:
+            scenario = dataclasses.replace(scenario,
+                                           wire_schema=args.wire_schema)
+        if args.uplink_workers is not None:
+            scenario = dataclasses.replace(scenario,
+                                           uplink_workers=args.uplink_workers)
         res = run_scenario(scenario, rounds=args.rounds,
                            model=model, splits=splits, verbose=True)
     else:

@@ -8,12 +8,22 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+echo "== lint: ruff =="
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src tests
+else
+  echo "ruff not installed; skipping lint (pip install ruff to enable)"
+fi
+
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
   echo "== codec smoke: registry ladder, round-trip verified =="
   python benchmarks/compression.py --smoke
+
+  echo "== engine throughput smoke: parallel uplink + round wall-clock =="
+  python benchmarks/engine_throughput.py --smoke --out /tmp/BENCH_engine_smoke.json >/dev/null
 
   echo "== engine smoke: 2 rounds, K=4 of C=8, FedAdam, tiny CNN =="
   python - <<'PY'

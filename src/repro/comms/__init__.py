@@ -1,7 +1,9 @@
 """Pluggable client<->server codec & transport subsystem.
 
-See README.md in this directory for the stage/registry layout.  The graph
-half (jittable lossy stages) is ``repro.comms.stages``; the wire half
+See README.md in this directory for the stage/registry layout and the
+versioned wire schemas (v1 = the byte-pinned PR-2 frame; v2 adds a header
+byte and folds the client's BN statistics into every codec payload).  The
+graph half (jittable lossy stages) is ``repro.comms.stages``; the wire half
 (named codecs producing decodable payloads) is ``repro.comms.codec`` +
 ``repro.comms.codecs``; ``repro.comms.channel`` turns payload sizes into
 simulated transfer times.

@@ -82,6 +82,14 @@ class WireSpec:
     messages carry one float32 magnitude per params leaf after the level
     stream.  ``send_mask`` (bool pytree over params) drops leaves from the
     wire entirely — the layer-selective/partial-update axis.
+
+    ``version`` selects the wire schema: v1 is the PR-2 frame (payload is
+    the codec body alone, no header — byte-compatible with the seed's
+    accounting), v2 prepends a one-byte version header and appends a
+    ``bn`` section (raw little-endian float32 of the client's post-training
+    BN statistics, template in ``bn``) so nothing rides out-of-band next to
+    the payload.  BN means/variances are dense, non-differential and
+    precision-critical, so the section is uncompressed for every codec.
     """
     params: Any
     scales: Any | None = None
@@ -90,6 +98,15 @@ class WireSpec:
     fine_step_size: float = quant_lib.STEP_SIZE_FINE
     ternary: bool = False
     send_mask: Any | None = None
+    bn: Any | None = None          # schema-v2 BN section template (or None)
+    version: int = 1               # wire schema: 1 = PR-2 frame, 2 = +header+bn
+
+    def __post_init__(self):
+        if self.version not in (1, 2):
+            raise ValueError(f"unknown wire schema version {self.version!r}")
+        if self.version == 1 and self.bn is not None:
+            raise ValueError("the bn section requires wire schema version=2 "
+                             "(v1 payloads are pinned byte-for-byte)")
 
     # -- derived views (sorted-path order, send_mask applied) ---------------
     # Cached: the wire loop calls these per client per round, and the codecs
@@ -118,11 +135,24 @@ class WireSpec:
     def sent_paths(self) -> frozenset[str]:
         return frozenset(p for p, _ in self._param_items)
 
+    @functools.cached_property
+    def _bn_items(self) -> list[tuple[str, Any]]:
+        return [] if self.bn is None else sorted_items(self.bn)
+
+    @functools.cached_property
+    def bn_nbytes(self) -> int:
+        """Length of the (fixed-size) raw-float32 BN tail."""
+        return 4 * sum(int(np.prod(s.shape)) if s.shape else 1
+                       for _, s in self._bn_items)
+
     def param_items(self) -> list[tuple[str, Any]]:
         return self._param_items
 
     def scale_items(self) -> list[tuple[str, Any]]:
         return self._scale_items
+
+    def bn_items(self) -> list[tuple[str, Any]]:
+        return self._bn_items
 
     def param_step(self, path: str) -> float:
         if self._fine_by_path.get(path, False):
@@ -135,18 +165,52 @@ class ClientUpdate(NamedTuple):
 
     Level codecs consume the integer levels; float codecs consume the
     reconstructions.  ``levels_scales``/``recon_scales`` are None for
-    params-only messages (downstream broadcast).
+    params-only messages (downstream broadcast).  ``bn`` is the client's
+    post-training BN statistics — only read under wire schema v2.
     """
     levels_params: Any
     levels_scales: Any | None
     recon_params: Any
     recon_scales: Any | None
+    bn: Any | None = None
 
 
 class Decoded(NamedTuple):
-    """Decoder output: reconstructed float32 pytrees in template structure."""
+    """Decoder output: reconstructed float32 pytrees in template structure.
+
+    ``bn`` is populated only for schema-v2 payloads (None under v1)."""
     params: Any
     scales: Any | None
+    bn: Any | None = None
+
+
+# ---------------------------------------------------------------- bn section
+
+def _encode_bn(bn: Any, spec: WireSpec) -> bytes:
+    """Raw little-endian float32 BN tail in sorted-path order (schema v2)."""
+    if spec.bn is None:
+        return b""
+    if bn is None:
+        raise ValueError("spec declares a bn section but ClientUpdate.bn "
+                         "is None")
+    by_path = {p: leaf for p, leaf in sorted_items(bn)}
+    return b"".join(
+        np.ascontiguousarray(np.asarray(by_path[p], np.float32)
+                             .astype("<f4")).tobytes()
+        for p, _ in spec.bn_items())
+
+
+def _decode_bn(tail: bytes, spec: WireSpec) -> Any:
+    if spec.bn is None:
+        return None
+    off = 0
+    by_path: dict[str, np.ndarray] = {}
+    for path, s in spec.bn_items():
+        n = int(np.prod(s.shape)) if s.shape else 1
+        by_path[path] = (np.frombuffer(tail, "<f4", n, off)
+                         .astype(np.float32).reshape(s.shape))
+        off += n * 4
+    return rebuild_tree(spec.bn, by_path)
 
 
 # ---------------------------------------------------------------- codec base
@@ -156,20 +220,47 @@ class Codec:
 
     Subclasses set ``name`` and ``lossless`` (True when
     ``decode(encode(u)).params`` is bit-exactly ``u.recon_params`` for every
-    update whose recon is consistent with its levels under the spec).
+    update whose recon is consistent with its levels under the spec) and
+    implement ``_encode_body``/``_decode_body`` over the params/scales
+    sections.  The base class owns the versioned framing: under schema v1
+    the payload IS the body (byte-compatible with the PR-2 pins); under
+    schema v2 the payload is ``[1-byte version][body][raw-f32 bn tail]`` —
+    so every registered codec carries the BN section without per-codec code.
     """
 
     name: str = "?"
     lossless: bool = True
-    # which ClientUpdate trees encode() reads: "levels" and/or "recon"
+    # which ClientUpdate trees _encode_body() reads: "levels" and/or "recon"
     # (level codecs also read recon when spec.ternary, for the magnitudes);
     # lets the engine skip device->host transfers of unused trees
     needs: tuple[str, ...] = ("recon",)
+    # False for codecs whose encode/decode dispatches through jax/XLA (the
+    # runtime's thread pools are not fork-safe): the parallel uplink then
+    # refuses the fork-based process executor for this codec
+    fork_safe: bool = True
 
     def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
-        raise NotImplementedError
+        body = self._encode_body(upd, spec)
+        if spec.version == 1:
+            return body
+        return bytes([spec.version]) + body + _encode_bn(upd.bn, spec)
 
     def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+        if spec.version == 1:
+            return self._decode_body(payload, spec)
+        if not payload or payload[0] != spec.version:
+            got = payload[0] if payload else None
+            raise ValueError(f"wire schema mismatch: payload header {got!r}, "
+                             f"spec expects version {spec.version}")
+        tail = spec.bn_nbytes
+        body = payload[1:len(payload) - tail]
+        dec = self._decode_body(body, spec)
+        return dec._replace(bn=_decode_bn(payload[len(payload) - tail:], spec))
+
+    def _encode_body(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+        raise NotImplementedError
+
+    def _decode_body(self, payload: bytes, spec: WireSpec) -> Decoded:
         raise NotImplementedError
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety

@@ -76,13 +76,13 @@ class RawFloatCodec(Codec):
         self.param_dtype = param_dtype   # numpy dtype str, e.g. "<f4"
         self.lossless = lossless
 
-    def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+    def _encode_body(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
         chunks = [np.ascontiguousarray(_np32(leaf).astype(self.param_dtype))
                   .tobytes() for _, leaf in _sent_recon_items(upd, spec)]
         chunks += _encode_scales_fp32(upd, spec)
         return b"".join(chunks)
 
-    def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+    def _decode_body(self, payload: bytes, spec: WireSpec) -> Decoded:
         off = 0
         itemsize = np.dtype(self.param_dtype).itemsize
         by_path: dict[str, np.ndarray] = {}
@@ -109,6 +109,7 @@ class Int8BlockScaleCodec(Codec):
 
     name = "int8-blockscale"
     lossless = False
+    fork_safe = False   # encode dispatches the Pallas kernel through jax
     block = 128
 
     def _kernel(self):
@@ -119,7 +120,7 @@ class Int8BlockScaleCodec(Codec):
         return lambda flat: delta_compress(flat, 0.0, block=self.block,
                                            interpret=interpret)
 
-    def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+    def _encode_body(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
         kernel = self._kernel()
         chunks = []
         for _, leaf in _sent_recon_items(upd, spec):
@@ -132,7 +133,7 @@ class Int8BlockScaleCodec(Codec):
         chunks += _encode_scales_fp32(upd, spec)
         return b"".join(chunks)
 
-    def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+    def _decode_body(self, payload: bytes, spec: WireSpec) -> Decoded:
         off = 0
         by_path: dict[str, np.ndarray] = {}
         for path, s in spec.param_items():
@@ -175,7 +176,7 @@ class LevelCodec(Codec):
         """-> ({path: int32 array}, {path: int32 array})"""
         raise NotImplementedError
 
-    def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+    def _encode_body(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
         p_items = [(p, np.asarray(l, np.int32))
                    for p, l in sorted_items(upd.levels_params)
                    if p in spec.sent_paths]
@@ -190,7 +191,7 @@ class LevelCodec(Codec):
             body += mags.tobytes()
         return body
 
-    def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+    def _decode_body(self, payload: bytes, spec: WireSpec) -> Decoded:
         p_shapes = [(p, tuple(s.shape)) for p, s in spec.param_items()]
         s_shapes = [(p, tuple(s.shape)) for p, s in spec.scale_items()]
         body = payload

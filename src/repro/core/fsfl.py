@@ -1,11 +1,13 @@
 """FSFL host orchestration — compatibility wrapper over the FL engine.
 
 The seed's hardcoded all-clients FedAvg loop now lives, generalised, in
-``repro.fl.engine`` (client sampling, pluggable server optimizers, buffered
-async aggregation).  ``run_federated`` keeps the original signature and
+``repro.fl.engine`` — a :class:`~repro.fl.engine.FederatedEngine` that runs
+the round lifecycle as composable ``repro.fl.rounds`` stages under a
+scheduling policy.  ``run_federated`` keeps the original signature and
 byte-accounting semantics by configuring the engine for full participation
-+ FedAvg(lr=1) + sync rounds, which consumes the identical PRNG-key
-sequence and performs bitwise the same server update as the seed loop.
++ FedAvg(lr=1) + the sync scheduler + wire schema v1, which consumes the
+identical PRNG-key sequence and performs bitwise the same server update as
+the seed loop.
 
 ``RoundRecord`` / ``RunResult`` / ``measure_update_bytes`` are re-exported
 from the engine (the record schema gained ``participants`` and

@@ -1,28 +1,40 @@
 """Federated simulation engine: sampling x server-opt x sync/async scenarios.
 
-See README.md in this directory for the subsystem layout and the scenario
-registry, and tests/test_fl_engine.py for the behavioural contract.
+See README.md in this directory for the round-lifecycle stage/scheduler
+layout and the scenario registry, and tests/test_fl_engine.py for the
+behavioural contract.
 """
 from repro.comms import ChannelConfig
 from repro.fl.async_buffer import (AsyncConfig, BufferEntry, aggregate_buffer,
-                                   client_latencies, staleness_weight)
-from repro.fl.engine import (EngineConfig, RoundRecord, RunResult,
-                             encode_client_bytes, measure_update_bytes,
-                             run_simulation)
+                                   client_latencies,
+                                   normalized_staleness_weights,
+                                   staleness_weight, weighted_mean_trees)
+from repro.fl.engine import (EngineConfig, FederatedEngine, RoundRecord,
+                             RunResult, encode_client_bytes,
+                             measure_update_bytes, run_simulation)
+from repro.fl.rounds import (SCHEDULERS, Aggregate, AggregatedRound,
+                             BufferedAsyncScheduler, CohortPlan, Contribution,
+                             Downlink, Evaluate, LocalTrain, RoundIntake,
+                             RoundScheduler, ServerStep, SyncScheduler,
+                             Uplink)
 from repro.fl.sampling import SamplingConfig, sample_cohort
 from repro.fl.scenarios import (SCENARIOS, Scenario, get_scenario,
-                                list_scenarios, register, run_scenario)
+                                list_scenarios, register, run_scenario,
+                                validate_scenario)
 from repro.fl.server_opt import (ServerOptConfig, make_server_opt,
                                  server_step, server_update)
 
 __all__ = [
     "ChannelConfig",
     "AsyncConfig", "BufferEntry", "aggregate_buffer", "client_latencies",
-    "staleness_weight",
-    "EngineConfig", "RoundRecord", "RunResult", "encode_client_bytes",
-    "measure_update_bytes", "run_simulation",
+    "normalized_staleness_weights", "staleness_weight", "weighted_mean_trees",
+    "EngineConfig", "FederatedEngine", "RoundRecord", "RunResult",
+    "encode_client_bytes", "measure_update_bytes", "run_simulation",
+    "SCHEDULERS", "Aggregate", "AggregatedRound", "BufferedAsyncScheduler",
+    "CohortPlan", "Contribution", "Downlink", "Evaluate", "LocalTrain",
+    "RoundIntake", "RoundScheduler", "ServerStep", "SyncScheduler", "Uplink",
     "SamplingConfig", "sample_cohort",
     "SCENARIOS", "Scenario", "get_scenario", "list_scenarios", "register",
-    "run_scenario",
+    "run_scenario", "validate_scenario",
     "ServerOptConfig", "make_server_opt", "server_step", "server_update",
 ]

@@ -55,6 +55,30 @@ def staleness_weight(staleness, exponent: float):
     return 1.0 / (1.0 + np.asarray(staleness, np.float64)) ** exponent
 
 
+def normalized_staleness_weights(staleness, exponent: float) -> np.ndarray:
+    """FedBuff weights over one buffer, normalised to sum to 1."""
+    raw = staleness_weight(staleness, exponent)
+    return raw / raw.sum()
+
+
+def weighted_mean_trees(trees: list[Any], w: np.ndarray) -> Any:
+    """Convex combination of pytrees with per-tree weights ``w``.
+
+    THE weighted-aggregation kernel: ``repro.fl.rounds.Aggregate`` (the
+    engine's single aggregation stage) and :func:`aggregate_buffer` both
+    reduce to this, so sync and async cannot drift numerically.
+    """
+    if len(trees) != len(w):
+        # a silent zip-truncation here would scale the aggregate by
+        # sum(w[:M]) < 1 instead of renormalising — e.g. weights computed
+        # over a full buffer paired with a survivor subset
+        raise ValueError(f"{len(trees)} trees but {len(w)} weights")
+    return jax.tree.map(
+        lambda *leaves: sum(jnp.asarray(wi, l.dtype) * l
+                            for wi, l in zip(w, leaves)),
+        *trees)
+
+
 def aggregate_buffer(entries: list[BufferEntry], exponent: float):
     """Staleness-weighted mean of the buffered updates.
 
@@ -62,17 +86,8 @@ def aggregate_buffer(entries: list[BufferEntry], exponent: float):
     weights normalised to sum to 1 (so a buffer of fresh updates reduces to
     the plain mean the sync path uses).
     """
-    raw = staleness_weight([e.staleness for e in entries], exponent)
-    w = raw / raw.sum()
-
-    def wmean(get):
-        trees = [get(e) for e in entries]
-        return jax.tree.map(
-            lambda *leaves: sum(jnp.asarray(wi, l.dtype) * l
-                                for wi, l in zip(w, leaves)),
-            *trees)
-
-    return (wmean(lambda e: e.delta_params),
-            wmean(lambda e: e.delta_scales),
-            wmean(lambda e: e.bn_state),
+    w = normalized_staleness_weights([e.staleness for e in entries], exponent)
+    return (weighted_mean_trees([e.delta_params for e in entries], w),
+            weighted_mean_trees([e.delta_scales for e in entries], w),
+            weighted_mean_trees([e.bn_state for e in entries], w),
             w)

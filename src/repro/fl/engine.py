@@ -1,36 +1,46 @@
-"""Federated simulation engine: the generalised Algorithm-1 outer loop.
+"""Federated simulation engine: one orchestrator, scheduling as policy.
 
-Subsumes the seed's hardcoded all-clients FedAvg loop (``core/fsfl.py``,
-now a thin compat wrapper) with orthogonal axes:
+The paper's Algorithm 1 is ONE round lifecycle — local train → differential
+compress → transmit → aggregate → (optionally) compress the broadcast — and
+the engine implements it exactly once: :class:`FederatedEngine` builds one
+instance of each ``repro.fl.rounds`` stage
 
-  * **client sampling** — per-round cohorts of K out of C clients
-    (``sampling.py``); the stacked client arrays are gathered down to the
-    cohort so the vmapped ``client_round`` runs only over participants,
+    CohortPlan → LocalTrain (vmapped client_round) → Uplink → Aggregate
+              → ServerStep → Downlink → Evaluate
+
+and consumes a ``RoundScheduler`` policy that decides who trains when:
+``SyncScheduler`` (cohort barrier with channel drops) or
+``BufferedAsyncScheduler`` (FedBuff buffer with staleness weights).  Sync
+vs. async is a scheduling policy, not a forked code path — both policies
+drive the identical stage instances, so new round structures (FedBuff
+variants, sparse-adaptive schedules) are new policies, not new loops.
+
+Orthogonal axes (all composable through :class:`EngineConfig`):
+
+  * **client sampling** — per-round cohorts of K out of C clients,
   * **server optimizers** — FedAvg / FedAvgM / FedAdam / FedYogi /
-    FedAdagrad applied to the aggregated reconstructed delta as a
-    pseudo-gradient (``server_opt.py``),
-  * **sync vs. buffered-async rounds** — FedBuff-style staleness-weighted
-    buffer fed by clients with heterogeneous latencies, driving a simulated
-    wall-clock (``async_buffer.py``),
-  * **wire codec** — every round transmits *real bitstreams* in both
-    directions through a ``repro.comms`` codec: per-client upstream payloads
-    are encoded, decoded, and the DECODED reconstruction is what the server
-    aggregates; ``RoundRecord.up_bytes``/``down_bytes`` are payload lengths,
+    FedAdagrad over the aggregated delta as a pseudo-gradient,
+  * **sync vs. buffered-async scheduling** (above),
+  * **wire codec** — every round transmits *real bitstreams* both ways
+    through a ``repro.comms`` codec; the server aggregates the DECODED
+    reconstruction and ``up_bytes``/``down_bytes`` are payload lengths,
+  * **wire schema** — v1 (PR-2 frame, BN state rides out-of-band from the
+    device fetch) or v2 (versioned header, BN statistics inside the codec
+    payload, so ``Aggregate`` consumes only decoded wire messages),
+  * **parallel uplink** — ``uplink_workers > 1`` fans the per-client
+    encode+decode round-trips across a thread or process pool
+    (``benchmarks/engine_throughput.py`` measures the speedup),
   * **channel** — an optional ``repro.comms.ChannelModel`` converts payload
     sizes into transfer times on the simulated clock (and can drop sync
     uploads), so compression ratio trades against round time.
 
 Compat guarantee: with full participation + FedAvg(lr=1) + sync mode + the
-default ``codec="auto"`` (the paper's ``nnc-cabac`` stack) the engine
-consumes the identical PRNG-key sequence, the payload lengths equal the
-seed's ``measure_update_bytes`` accounting, and the decoded reconstruction
-is bit-identical to the in-graph dequantization — so ``fsfl.run_federated``
-reproduces the seed's byte totals and accuracies exactly (tested in
-tests/test_fl_engine.py and tests/test_comms.py).  The one semantic change
-from the seed: protocols whose levels are measurement-only (``fedavg_nnc``)
-now have the server apply the decoded/dequantized update rather than the
-full-precision delta, and the raw-FedAvg baseline's payload includes the
-scale-delta section (the seed counted params only).
+default ``codec="auto"`` (the paper's ``nnc-cabac`` stack) + wire schema v1
+the engine consumes the identical PRNG-key sequence, the payload lengths
+equal the seed's ``measure_update_bytes`` accounting, and the decoded
+reconstruction is bit-identical to the in-graph dequantization — so
+``fsfl.run_federated`` reproduces the seed's byte totals and accuracies
+exactly (tested in tests/test_fl_engine.py and tests/test_comms.py).
 
 ``measure_bytes=False`` skips the wire entirely (no payloads, zero byte
 accounting, server applies the device-side reconstruction) — the fast path
@@ -40,27 +50,23 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import comms
 from repro.coding import nnc
 from repro.comms.channel import ChannelConfig, ChannelModel
-from repro.core import delta as delta_lib
 from repro.core import quant as quant_lib
-from repro.core import sparsify as sparsify_lib
-from repro.core.protocol import ProtocolConfig, ServerState, make_protocol
-from repro.data.federated import (FederatedSplits, client_epoch_batches,
-                                  epoch_batches)
-from repro.fl.async_buffer import (AsyncConfig, BufferEntry, aggregate_buffer,
-                                   client_latencies)
-from repro.fl.sampling import (SamplingConfig, gather_clients, sample_available,
-                               sample_cohort, scatter_clients)
-from repro.fl.server_opt import ServerOptConfig, make_server_opt, server_update
-from repro.optim import apply_updates
+from repro.core.protocol import ProtocolConfig, make_protocol
+from repro.data.federated import FederatedSplits
+from repro.fl.async_buffer import AsyncConfig
+from repro.fl.rounds import (SCHEDULERS, Aggregate, CohortPlan, Downlink,
+                             Evaluate, LocalTrain, RoundIntake, ServerStep,
+                             Uplink, client_slice, raw_bytes_per_client)
+from repro.fl.sampling import SamplingConfig
+from repro.fl.server_opt import ServerOptConfig, make_server_opt
 
 
 @dataclasses.dataclass
@@ -86,6 +92,9 @@ class RunResult:
 
     @property
     def final_acc(self) -> float:
+        """Last round's test accuracy; NaN when no rounds ran."""
+        if not self.records:
+            return float("nan")
         return self.records[-1].test_acc
 
     def rounds_to_acc(self, target: float) -> int | None:
@@ -103,37 +112,65 @@ class RunResult:
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    sampling: SamplingConfig = SamplingConfig()
-    server_opt: ServerOptConfig = ServerOptConfig()
-    mode: str = "sync"                   # "sync" | "async"
-    async_cfg: AsyncConfig = AsyncConfig()
+    sampling: SamplingConfig = dataclasses.field(
+        default_factory=SamplingConfig)
+    server_opt: ServerOptConfig = dataclasses.field(
+        default_factory=ServerOptConfig)
+    mode: str = "sync"                   # "sync" | "async" (rounds.SCHEDULERS)
+    async_cfg: AsyncConfig = dataclasses.field(default_factory=AsyncConfig)
     bidirectional: bool = False
     down_step_size: float = quant_lib.STEP_SIZE_BI
     measure_bytes: bool = True           # real wire round-trips (False = off)
     codec: Any = "auto"                  # registry name | comms.Codec
     channel: ChannelConfig | None = None
     up_predicate: Callable | None = None  # wire leaf-predicate (partial ups)
+    wire_schema: int = 1                 # 1 = PR-2 frame | 2 = BN on the wire
+    uplink_workers: int = 0              # >1: parallel encode+decode
+    uplink_executor: str = "thread"      # "thread" | "process"
+
+    def validate(self, num_clients: int | None = None) -> None:
+        """Reject conflicting axes up front (also run at Scenario
+        registration, so bad combinations fail before any model exists)."""
+        if self.mode not in SCHEDULERS:
+            known = ", ".join(sorted(SCHEDULERS))
+            raise ValueError(f"unknown engine mode: {self.mode!r} "
+                             f"(known: {known})")
+        if self.sampling.strategy == "weighted":
+            w = self.sampling.weights
+            if w is None or (num_clients is not None
+                             and len(w) != num_clients):
+                raise ValueError(
+                    "weighted sampling needs one weight per client")
+        if self.channel is not None and not self.measure_bytes:
+            raise ValueError("a channel model needs real payloads: "
+                             "set measure_bytes=True")
+        if (self.channel is not None and self.channel.drop_rate > 0.0
+                and self.mode == "async"):
+            raise ValueError("ChannelConfig.drop_rate models sync-round "
+                             "upload loss only; async mode does not "
+                             "implement drops")
+        if self.mode == "async" and self.sampling.cohort_size is not None:
+            raise ValueError(
+                "async mode has no per-round cohort: participation is driven "
+                "by AsyncConfig.concurrency; leave SamplingConfig.cohort_size "
+                "unset")
+        if self.mode == "async" and self.uplink_workers > 1:
+            raise ValueError(
+                "uplink_workers parallelises the sync cohort's wire "
+                "round-trips; async mode transmits one completion at a time, "
+                "so a pool would be a silent no-op — leave uplink_workers "
+                "unset (batching async completions is a ROADMAP item)")
+        if self.wire_schema not in (1, 2):
+            raise ValueError(
+                f"unknown wire schema {self.wire_schema!r} (known: 1, 2)")
+        if self.uplink_executor not in ("thread", "process"):
+            raise ValueError("uplink_executor must be 'thread' or 'process', "
+                             f"got {self.uplink_executor!r}")
+        if self.uplink_workers < 0:
+            raise ValueError("uplink_workers must be >= 0")
 
 
-# ---------------------------------------------------------------- helpers
-
-def _tree_mean0(tree: Any) -> Any:
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
-
-
-def _tree_mean_rows(tree: Any, rows: list[int]) -> Any:
-    """Mean over a subset of leading-axis rows (channel-drop survivors)."""
-    sel = np.asarray(rows)
-    return jax.tree.map(lambda x: jnp.mean(x[sel], axis=0), tree)
-
-
-def _stack_trees(trees: list[Any]) -> Any:
-    return jax.tree.map(lambda *ls: np.stack(ls), *trees)
-
-
-def _client_slice(tree: Any, i: int) -> Any:
-    return jax.tree.map(lambda x: np.asarray(x[i]), tree)
-
+# ------------------------------------------------------------- byte helpers
 
 def encode_client_bytes(levels_params: Any, levels_scales: Any,
                         ternary: bool) -> int:
@@ -154,468 +191,127 @@ def measure_update_bytes(levels_params: Any, levels_scales: Any,
                          num_clients: int, ternary: bool) -> int:
     """Reference DeepCABAC bytes summed over stacked client uploads."""
     return sum(
-        encode_client_bytes(_client_slice(levels_params, i),
-                            _client_slice(levels_scales, i), ternary)
+        encode_client_bytes(client_slice(levels_params, i),
+                            client_slice(levels_scales, i), ternary)
         for i in range(num_clients))
 
 
-def _raw_bytes_per_client(params: Any) -> int:
-    return 4 * sum(l.size for l in jax.tree.leaves(params))
+# ------------------------------------------------------------- orchestrator
 
+class FederatedEngine:
+    """One engine = one stage pipeline + one scheduling policy.
 
-# ---------------------------------------------------------------- wire
-
-class _Wire:
-    """Upstream transmission: encode each client's update, decode it back.
-
-    The engine aggregates the DECODED reconstructions, so ``up_bytes`` is
-    the length of payloads that provably decode.  For level-lossless codecs
-    the decode is bit-identical to the in-graph dequantization (parity with
-    the seed); lossy wire codecs (fp16/int8) make the server honestly see
-    the wire loss.
+    The constructor performs the PR-1 ``_setup`` prologue (validation,
+    protocol build, ``k_init`` split, stage construction) in the exact
+    order the compat guarantee depends on, then binds the scheduler to the
+    remaining key.  ``run(rounds)`` is the only loop: it asks the scheduler
+    for one :class:`~repro.fl.rounds.RoundIntake` per aggregation and folds
+    it through ``Aggregate → ServerStep → Evaluate``.
     """
 
-    def __init__(self, cfg: ProtocolConfig, engine: EngineConfig,
-                 server: ServerState):
-        self.codec = comms.resolve_codec(engine.codec, cfg.quantize)
-        if ("levels" in self.codec.needs and not cfg.quantize
-                and cfg.method != "ternary"):
-            # a level codec would put quantized levels on the wire while the
-            # client's residual (Eq. 5) assumes the full-precision recon was
-            # delivered — the same hazard resolve_codec's "auto" avoids
-            raise ValueError(
-                f"codec {self.codec.name!r} transmits integer levels but the "
-                "protocol has quantize=False; use a float codec "
-                "(raw-fp32/fp16/int8-blockscale) or enable quantization")
-        send_mask = None
-        if engine.up_predicate is not None:
-            send_mask = comms.make_send_mask(server.params,
-                                             engine.up_predicate)
-        self.spec = comms.WireSpec(
-            params=comms.shape_template(server.params),
-            scales=comms.shape_template(server.scales),
-            fine_mask=comms.path_fine_mask(server.params),
-            step_size=cfg.step_size,
-            fine_step_size=cfg.fine_step_size,
-            ternary=(cfg.method == "ternary"),
-            send_mask=send_mask)
+    def __init__(self, model, cfg: ProtocolConfig, splits: FederatedSplits,
+                 key: jax.Array, engine_cfg: EngineConfig | None = None):
+        engine_cfg = engine_cfg if engine_cfg is not None else EngineConfig()
+        engine_cfg.validate(splits.num_clients)
+        self.engine_cfg = engine_cfg
+        self.protocol_cfg = cfg
+        self.config_name = cfg.name
+        self.num_clients = splits.num_clients
+        self.transmit = engine_cfg.measure_bytes
 
-    def fetch(self, out) -> comms.ClientUpdate:
-        """Pull the wire-relevant RoundOutput trees to host in ONE transfer
-        (per-leaf np.asarray slicing would sync the device once per leaf
-        per client).  Only the trees the codec reads are fetched: level
-        codecs skip the float reconstructions (except ternary, which needs
-        them for the magnitude tail) and float codecs skip the levels."""
-        need_levels = "levels" in self.codec.needs
-        need_recon = "recon" in self.codec.needs or self.spec.ternary
-        return comms.ClientUpdate(*jax.device_get((
-            out.levels_params if need_levels else None,
-            out.levels_scales if need_levels else None,
-            out.recon_delta_params if need_recon else None,
-            out.recon_delta_scales if need_recon else None)))
+        n_train = splits.client_x.shape[1]
+        steps_per_round = max(1, n_train // cfg.batch_size)
+        init, client_round, evaluate = make_protocol(model, cfg,
+                                                     steps_per_round)
+        k_init, key = jax.random.split(key)
+        server, persistent0 = init(k_init)
+        persistent = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.num_clients,) + x.shape),
+            persistent0)
 
-    def transmit(self, host: comms.ClientUpdate,
-                 i: int) -> tuple[bytes, comms.Decoded]:
-        """One client's upstream round-trip from the host-fetched stack."""
-        upd = comms.ClientUpdate(
-            levels_params=_client_slice(host.levels_params, i),
-            levels_scales=_client_slice(host.levels_scales, i),
-            recon_params=_client_slice(host.recon_params, i),
-            recon_scales=_client_slice(host.recon_scales, i))
-        payload = self.codec.encode(upd, self.spec)
-        return payload, self.codec.decode(payload, self.spec)
+        self.server = server
+        self.version = 0   # aggregation counter (async staleness reference)
 
-    def transmit_single(self, out) -> tuple[bytes, comms.Decoded]:
-        """Round-trip for an unstacked (single-client) RoundOutput."""
-        upd = self.fetch(out)
-        payload = self.codec.encode(upd, self.spec)
-        return payload, self.codec.decode(payload, self.spec)
+        # ---- the stage pipeline (ONE instance each; schedulers share) ----
+        self.cohort = CohortPlan(engine_cfg.sampling, self.num_clients)
+        self.local_train = LocalTrain(client_round, splits, persistent,
+                                      cfg.batch_size)
+        self.uplink = Uplink(cfg, engine_cfg, server)
+        self.aggregate = Aggregate()
+        self.server_step = ServerStep(make_server_opt(engine_cfg.server_opt))
+        self.server_step.init(server.params)
+        self.downlink = Downlink(cfg, engine_cfg.down_step_size,
+                                 server.params, self.uplink.codec,
+                                 engine_cfg.bidirectional)
+        self.evaluate = Evaluate(evaluate, splits.test_x, splits.test_y)
+        self.channel = (ChannelModel(engine_cfg.channel, self.num_clients)
+                        if engine_cfg.channel is not None else None)
+        self._raw_model_bytes = raw_bytes_per_client(server.params)
 
+        self.scheduler = SCHEDULERS[engine_cfg.mode]()
+        self.scheduler.bind(self, key)
 
-class _Downstream:
-    """Bidirectional server->clients compression with error feedback (§5.2).
+    # -- context the schedulers read ---------------------------------------
 
-    Operates on the server *update* (the quantity actually broadcast) and
-    runs it through the wire codec as a params-only message: the engine
-    applies the DECODED broadcast and ``down_bytes`` is
-    ``receivers * len(payload)``.  For FedAvg(lr=1) the update equals the
-    aggregated delta bitwise, matching the seed loop's pre-aggregation
-    compression exactly.
-    """
+    def broadcast_ref_bytes(self) -> int:
+        """Bytes of the model/update broadcast a dispatch must download."""
+        if (self.engine_cfg.bidirectional
+                and self.downlink.last_payload_bytes):
+            return self.downlink.last_payload_bytes
+        return self._raw_model_bytes
 
-    def __init__(self, cfg: ProtocolConfig, step_size: float, params0: Any,
-                 codec: comms.Codec):
-        self.enabled_for = cfg.method != "none"
-        self.codec = codec
-        self.q = quant_lib.QuantConfig(step_size=step_size,
-                                       fine_step_size=cfg.fine_step_size)
-        self.spars = sparsify_lib.SparsifyConfig(
-            delta=cfg.delta, gamma=cfg.gamma, step_size=step_size,
-            unstructured=cfg.unstructured, structured=cfg.structured,
-            fixed_sparsity=cfg.fixed_sparsity)
-        self.spec = comms.WireSpec(
-            params=comms.shape_template(params0), scales=None,
-            fine_mask=None, step_size=step_size,
-            fine_step_size=cfg.fine_step_size)
-        self.residual = jax.tree.map(jnp.zeros_like, params0)
-        self.last_payload_bytes = 0
+    # -- the one loop ------------------------------------------------------
 
-    def compress(self, updates: Any, receivers: int,
-                 transmit: bool) -> tuple[Any, int]:
-        carried = delta_lib.tree_add(updates, self.residual)
-        sparse = sparsify_lib.sparsify_tree(carried, self.spars)
-        lv = quant_lib.quantize_tree(sparse, self.q)
-        if transmit:
-            upd = comms.ClientUpdate(
-                levels_params=jax.tree.map(np.asarray, lv),
-                levels_scales=None,
-                recon_params=quant_lib.dequantize_tree(lv, self.q),
-                recon_scales=None)
-            payload = self.codec.encode(upd, self.spec)
-            recon = self.codec.decode(payload, self.spec).params
-            self.last_payload_bytes = len(payload)
-            down = receivers * len(payload)
-        else:
-            recon = quant_lib.dequantize_tree(lv, self.q)
-            down = 0
-        self.residual = delta_lib.tree_sub(carried, recon)
-        return recon, down
+    @staticmethod
+    def _mean_metric(intake: RoundIntake, name: str) -> float:
+        return float(np.mean([c.metrics[name]
+                              for c in intake.contributions]))
 
-
-# ---------------------------------------------------------------- setup
-
-class _Setup(NamedTuple):
-    """Shared sync/async prologue.  Kept in ONE place because the compat
-    guarantee depends on the exact k_init/key split order."""
-    num_clients: int
-    n_train: int
-    client_round: Any
-    jeval: Any
-    server: ServerState
-    persistent: Any
-    sopt: Any
-    sopt_state: Any
-    wire: "_Wire"
-    down: "_Downstream"
-    chan: ChannelModel | None
-    key: jax.Array
-
-
-def _setup(model, cfg: ProtocolConfig, splits: FederatedSplits,
-           key: jax.Array, engine: EngineConfig) -> _Setup:
-    num_clients = splits.num_clients
-    if engine.sampling.strategy == "weighted":
-        w = engine.sampling.weights
-        if w is None or len(w) != num_clients:
-            raise ValueError("weighted sampling needs one weight per client")
-    if engine.channel is not None and not engine.measure_bytes:
-        raise ValueError("a channel model needs real payloads: "
-                         "set measure_bytes=True")
-    if (engine.channel is not None and engine.channel.drop_rate > 0.0
-            and engine.mode == "async"):
-        raise ValueError("ChannelConfig.drop_rate models sync-round upload "
-                         "loss only; async mode does not implement drops")
-    n_train = splits.client_x.shape[1]
-    steps_per_round = max(1, n_train // cfg.batch_size)
-
-    init, client_round, evaluate = make_protocol(model, cfg, steps_per_round)
-    k_init, key = jax.random.split(key)
-    server, persistent0 = init(k_init)
-    persistent = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), persistent0)
-
-    wire = _Wire(cfg, engine, server)
-    sopt = make_server_opt(engine.server_opt)
-    chan = (ChannelModel(engine.channel, num_clients)
-            if engine.channel is not None else None)
-    return _Setup(num_clients, n_train, client_round, jax.jit(evaluate),
-                  server, persistent, sopt, sopt.init(server.params),
-                  wire,
-                  _Downstream(cfg, engine.down_step_size, server.params,
-                              wire.codec),
-                  chan, key)
-
-
-# ---------------------------------------------------------------- sync
-
-def _run_sync(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
-              key: jax.Array, engine: EngineConfig, verbose: bool) -> RunResult:
-    s = _setup(model, cfg, splits, key, engine)
-    num_clients, n_train, key = s.num_clients, s.n_train, s.key
-    server, persistent = s.server, s.persistent
-    sopt, sopt_state, jeval = s.sopt, s.sopt_state, s.jeval
-    wire, down, chan = s.wire, s.down, s.chan
-
-    vround = jax.jit(jax.vmap(s.client_round,
-                              in_axes=(None, 0, 0, 0, 0, 0, 0),
-                              out_axes=0))
-    full = engine.sampling.is_full(num_clients)
-    transmit = engine.measure_bytes
-    raw_model_bytes = _raw_bytes_per_client(server.params)
-
-    records: list[RoundRecord] = []
-    cum = 0
-    sim_clock = 0.0
-    for t in range(1, rounds + 1):
-        t0 = time.time()
-        key, kb = jax.random.split(key)
-        if full:
-            idx = np.arange(num_clients)
-        else:  # extra split only when sampling, so full-participation runs
-            # consume the seed loop's exact key sequence
-            key, ks = jax.random.split(key)
-            idx = sample_cohort(ks, num_clients, engine.sampling)
-        cohort = len(idx)
-        batch_idx = client_epoch_batches(kb, cohort, n_train, cfg.batch_size)
-
-        if full:
-            cx, cy = splits.client_x, splits.client_y
-            cvx, cvy = splits.client_val_x, splits.client_val_y
-            pers_c = persistent
-        else:
-            cx, cy = splits.client_x[idx], splits.client_y[idx]
-            cvx, cvy = splits.client_val_x[idx], splits.client_val_y[idx]
-            pers_c = gather_clients(persistent, idx)
-
-        out = vround(server, pers_c, cx, cy, cvx, cvy, batch_idx)
-        persistent = (out.persistent if full else
-                      scatter_clients(persistent, out.persistent, idx))
-
-        # ---- upstream wire: encode + decode every participant ----------
-        up_bytes = 0
-        survivors = list(range(cohort))
-        if transmit:
-            host = wire.fetch(out)
-            payloads, dec_p, dec_s = [], [], []
-            for i in range(cohort):
-                payload, dec = wire.transmit(host, i)
-                payloads.append(payload)
-                dec_p.append(dec.params)
-                dec_s.append(dec.scales)
-            up_bytes = sum(len(p) for p in payloads)
-            if chan is not None:
-                down_ref = (down.last_payload_bytes if engine.bidirectional
-                            and down.last_payload_bytes else raw_model_bytes)
-                sim_clock += chan.round_time(
-                    [int(c) for c in idx], [len(p) for p in payloads],
-                    down_ref)
-                survivors = [i for i in range(cohort)
-                             if not chan.dropped(t, int(idx[i]))]
-                if cfg.error_feedback and len(survivors) != cohort:
-                    # a dropped upload must not break Eq. 5: re-inject the
-                    # lost (decoded) delta into that client's residual so
-                    # its mass is retransmitted next round (the scale-delta
-                    # section has no residual and stays lost)
-                    for i in range(cohort):
-                        if i in survivors:
-                            continue
-                        c = int(idx[i])
-                        persistent = persistent._replace(
-                            residual=jax.tree.map(
-                                lambda r, d: r.at[c].add(jnp.asarray(d)),
-                                persistent.residual, dec_p[i]))
-        aggregate = bool(survivors)
-        if transmit and aggregate:
-            mean_dp = _tree_mean0(_stack_trees([dec_p[i] for i in survivors]))
-            mean_ds = _tree_mean0(_stack_trees([dec_s[i] for i in survivors]))
-            mean_bn = (_tree_mean0(out.bn_state)
-                       if len(survivors) == cohort
-                       else _tree_mean_rows(out.bn_state, survivors))
-        elif aggregate:
-            mean_dp = _tree_mean0(out.recon_delta_params)
-            mean_ds = _tree_mean0(out.recon_delta_scales)
-            mean_bn = _tree_mean0(out.bn_state)
-
-        down_bytes = 0
-        if aggregate:
-            updates, sopt_state = server_update(sopt, sopt_state, mean_dp,
-                                                server.params)
-            if engine.bidirectional and down.enabled_for:
-                updates, down_bytes = down.compress(updates, cohort, transmit)
-            server = ServerState(
-                params=apply_updates(server.params, updates),
-                scales=delta_lib.tree_add(server.scales, mean_ds),
-                bn_state=mean_bn)
-        cum += up_bytes + down_bytes
-
-        acc = float(jeval(server, splits.test_x, splits.test_y))
-        rec = RoundRecord(
-            round=t, test_acc=acc, up_bytes=up_bytes, down_bytes=down_bytes,
-            cum_bytes=cum,
-            mean_val_acc=float(jnp.mean(out.metrics["val_acc"])),
-            update_sparsity=float(jnp.mean(out.metrics["update_sparsity"])),
-            train_loss=float(jnp.mean(out.metrics["train_loss"])),
-            wall_s=time.time() - t0,
-            participants=tuple(int(idx[i]) for i in survivors),
-            sim_time_s=sim_clock)
-        records.append(rec)
-        if verbose:
-            print(f"[{cfg.name}] round {t:3d} acc={acc:.3f} "
-                  f"cohort={len(survivors)}/{cohort} "
-                  f"up={up_bytes/1e6:.3f}MB "
-                  f"sparsity={rec.update_sparsity:.3f}"
-                  + (f" t_sim={sim_clock:.2f}s" if chan else ""))
-    return RunResult(cfg.name, records, server=server)
-
-
-# ---------------------------------------------------------------- async
-
-@dataclasses.dataclass
-class _InFlight:
-    client: int
-    start_version: int
-    server: ServerState
-    finish: float
-
-
-def _run_async(model, cfg: ProtocolConfig, splits: FederatedSplits, rounds: int,
-               key: jax.Array, engine: EngineConfig, verbose: bool) -> RunResult:
-    acfg = engine.async_cfg
-    if engine.sampling.cohort_size is not None:
-        raise ValueError(
-            "async mode has no per-round cohort: participation is driven by "
-            "AsyncConfig.concurrency; leave SamplingConfig.cohort_size unset")
-    s = _setup(model, cfg, splits, key, engine)
-    num_clients, n_train, key = s.num_clients, s.n_train, s.key
-    server, persistent = s.server, s.persistent
-    sopt, sopt_state, jeval = s.sopt, s.sopt_state, s.jeval
-    wire, down, chan = s.wire, s.down, s.chan
-    transmit = engine.measure_bytes
-    raw_model_bytes = _raw_bytes_per_client(server.params)
-
-    jround = jax.jit(s.client_round)
-
-    key, kl = jax.random.split(key)
-    latency = client_latencies(kl, num_clients, acfg)
-
-    def dispatch_delay(c: int) -> float:
-        """Model-download leg of a dispatch (channel mode only)."""
-        if chan is None:
-            return 0.0
-        down_ref = (down.last_payload_bytes if engine.bidirectional
-                    and down.last_payload_bytes else raw_model_bytes)
-        return chan.down_time(c, down_ref)
-
-    concurrency = min(acfg.concurrency, num_clients)
-    available = set(range(num_clients))
-    key, ks = jax.random.split(key)
-    first = sample_available(ks, np.array(sorted(available)), concurrency,
-                             engine.sampling)
-    in_flight: list[_InFlight] = []
-    for c in first:
-        available.discard(int(c))
-        in_flight.append(_InFlight(int(c), 0, server,
-                                   dispatch_delay(int(c)) + float(latency[c])))
-
-    version = 0
-    now = 0.0
-    buffer: list[BufferEntry] = []
-    buf_metrics: list[Any] = []
-    records: list[RoundRecord] = []
-    cum = 0
-    t0 = time.time()
-    while len(records) < rounds:
-        # pop the earliest-finishing client (concurrency is small); with a
-        # channel the upload leg is appended at pop time, so arrival order
-        # approximates compute-finish order (documented simplification)
-        e = min(in_flight, key=lambda f: f.finish)
-        in_flight.remove(e)
-        c = e.client
-
-        key, kb = jax.random.split(key)
-        bidx = epoch_batches(kb, n_train, cfg.batch_size)
-        pers_c = jax.tree.map(lambda x: x[c], persistent)
-        out = jround(e.server, pers_c,
-                     splits.client_x[c], splits.client_y[c],
-                     splits.client_val_x[c], splits.client_val_y[c], bidx)
-        persistent = jax.tree.map(lambda f, u: f.at[c].set(u),
-                                  persistent, out.persistent)
-
-        up = 0
-        if transmit:
-            payload, dec = wire.transmit_single(out)
-            up = len(payload)
-            delta_params, delta_scales = dec.params, dec.scales
-        else:
-            delta_params = out.recon_delta_params
-            delta_scales = out.recon_delta_scales
-        # arrival = compute finish + upload leg; clients pop in compute-finish
-        # order, so with heterogeneous uploads a later pop can carry an
-        # earlier arrival — clamp to keep the simulated clock monotone
-        arrival = e.finish + (chan.up_time(c, up) if chan is not None else 0.0)
-        now = max(now, arrival)
-
-        buffer.append(BufferEntry(
-            client=c, staleness=version - e.start_version, finish_time=now,
-            delta_params=delta_params,
-            delta_scales=delta_scales,
-            bn_state=out.bn_state, up_bytes=up))
-        buf_metrics.append(out.metrics)
-
-        if len(buffer) >= acfg.buffer_size:
-            # ---- server step on the staleness-weighted buffer ------------
-            mean_dp, mean_ds, mean_bn, _w = aggregate_buffer(
-                buffer, acfg.staleness_exponent)
-            updates, sopt_state = server_update(sopt, sopt_state, mean_dp,
-                                                server.params)
-            down_bytes = 0
-            if engine.bidirectional and down.enabled_for:
-                updates, down_bytes = down.compress(updates, concurrency,
-                                                    transmit)
-            server = ServerState(
-                params=apply_updates(server.params, updates),
-                scales=delta_lib.tree_add(server.scales, mean_ds),
-                bn_state=mean_bn)
-            version += 1
-
-            up_bytes = sum(b.up_bytes for b in buffer)
-            cum += up_bytes + down_bytes
-            acc = float(jeval(server, splits.test_x, splits.test_y))
-            rec = RoundRecord(
-                round=version, test_acc=acc, up_bytes=up_bytes,
-                down_bytes=down_bytes, cum_bytes=cum,
-                mean_val_acc=float(np.mean(
-                    [float(m["val_acc"]) for m in buf_metrics])),
-                update_sparsity=float(np.mean(
-                    [float(m["update_sparsity"]) for m in buf_metrics])),
-                train_loss=float(np.mean(
-                    [float(m["train_loss"]) for m in buf_metrics])),
-                wall_s=time.time() - t0,
-                participants=tuple(b.client for b in buffer),
-                sim_time_s=now)
-            records.append(rec)
-            if verbose:
-                stale = [b.staleness for b in buffer]
-                print(f"[{cfg.name}] agg {version:3d} acc={acc:.3f} "
-                      f"t_sim={now:.2f}s staleness={stale} "
-                      f"up={up_bytes/1e6:.3f}MB")
-            buffer, buf_metrics = [], []
-            t0 = time.time()
-
-        # the client is free again; dispatch a replacement AFTER any
-        # aggregation its own update triggered, so the replacement trains
-        # from the newest server version available at this sim-instant
-        # (otherwise every B-th dispatch starts one version stale)
-        available.add(c)
-        key, ks = jax.random.split(key)
-        nxt = int(sample_available(ks, np.array(sorted(available)), 1,
-                                   engine.sampling)[0])
-        available.discard(nxt)
-        in_flight.append(_InFlight(nxt, version, server,
-                                   now + dispatch_delay(nxt)
-                                   + float(latency[nxt])))
-    return RunResult(cfg.name, records, server=server)
+    def run(self, rounds: int, *, verbose: bool = False) -> RunResult:
+        records: list[RoundRecord] = []
+        cum = 0
+        try:
+            while len(records) < rounds:
+                t0 = time.time()
+                intake = self.scheduler.next_round()
+                survivors = [intake.contributions[i]
+                             for i in intake.survivors]
+                up_bytes = sum(c.payload_bytes
+                               for c in intake.contributions)
+                down_bytes = 0
+                if survivors:
+                    agg = self.aggregate(survivors, intake.weights)
+                    self.server, down_bytes = self.server_step(
+                        self.server, agg, self.downlink, intake.receivers,
+                        self.transmit)
+                    self.version += 1
+                cum += up_bytes + down_bytes
+                acc = self.evaluate(self.server)
+                rec = RoundRecord(
+                    round=len(records) + 1, test_acc=acc, up_bytes=up_bytes,
+                    down_bytes=down_bytes, cum_bytes=cum,
+                    mean_val_acc=self._mean_metric(intake, "val_acc"),
+                    update_sparsity=self._mean_metric(intake,
+                                                      "update_sparsity"),
+                    train_loss=self._mean_metric(intake, "train_loss"),
+                    wall_s=time.time() - t0,
+                    participants=tuple(c.client for c in survivors),
+                    sim_time_s=intake.sim_time)
+                records.append(rec)
+                if verbose:
+                    print(f"[{self.config_name}] "
+                          + self.scheduler.log_line(rec, intake))
+        finally:
+            self.uplink.close()
+        return RunResult(self.config_name, records, server=self.server)
 
 
 # ---------------------------------------------------------------- entry
 
 def run_simulation(model, cfg: ProtocolConfig, splits: FederatedSplits,
                    rounds: int, key: jax.Array, *,
-                   engine: EngineConfig = EngineConfig(),
+                   engine: EngineConfig | None = None,
                    verbose: bool = False) -> RunResult:
     """Run ``rounds`` aggregations of the federated simulation."""
-    if engine.mode == "sync":
-        return _run_sync(model, cfg, splits, rounds, key, engine, verbose)
-    if engine.mode == "async":
-        return _run_async(model, cfg, splits, rounds, key, engine, verbose)
-    raise ValueError(f"unknown engine mode: {engine.mode!r}")
+    return FederatedEngine(model, cfg, splits, key,
+                           engine_cfg=engine).run(rounds, verbose=verbose)

@@ -1,0 +1,730 @@
+"""Round-lifecycle stages: the paper's Algorithm 1 as composable objects.
+
+One federated round is the same lifecycle regardless of *when* clients run:
+
+    CohortPlan -> LocalTrain (vmapped client_round) -> Uplink -> Aggregate
+               -> ServerStep -> Downlink -> Evaluate
+
+This module provides each stage as a typed object plus the small dataclass
+contracts between them (:class:`Contribution` — one decoded client message
+with metadata, :class:`AggregatedRound` — the weighted means the server
+consumes, :class:`RoundIntake` — what a scheduler hands the orchestrator
+per aggregation).  ``repro.fl.engine.FederatedEngine`` builds ONE instance
+of each stage and consumes a :class:`RoundScheduler` policy:
+
+  * :class:`SyncScheduler` — per-round cohort barrier: everyone in the
+    cohort trains against the same server snapshot, channel drops exclude
+    stragglers from aggregation (their decoded mass is re-injected into the
+    residual under error feedback, Eq. 5),
+  * :class:`BufferedAsyncScheduler` — FedBuff-style buffer: M clients train
+    concurrently against whatever server version each started from, the
+    buffer aggregates with staleness weights once B updates land.
+
+Sync vs. async is therefore a *scheduling policy*, not a forked code path —
+both policies drive the identical ``Uplink``/``Aggregate``/``ServerStep``
+stage instances (tested structurally in tests/test_rounds.py).
+
+``Uplink`` owns the host wire hot path: each cohort member's message is
+encoded AND decoded (the server aggregates only what provably round-trips),
+and because codec state (e.g. CABAC contexts) is per-message the per-client
+round-trips are embarrassingly parallel — ``EngineConfig.uplink_workers``
+fans them out across a ``ThreadPoolExecutor`` (numpy-dominated codecs
+release the GIL) or a ``ProcessPoolExecutor`` (pure-Python entropy coders;
+fork-based, results order-preserved).  Under wire schema v2 the client's BN
+statistics travel inside the codec payload and :class:`Aggregate` sees them
+only via the decoded message; under v1 (the PR-2 byte-pinned frame) the
+uplink fills ``Contribution.bn_state`` from the device fetch instead.
+
+PRNG-key discipline: each scheduler consumes splits in exactly the order
+the PR-1/PR-2 engine did (sync: ``kb`` then — only when sampling — ``ks``;
+async: ``kl`` latencies, ``ks`` first cohort, then per completion ``kb``
+followed by the replacement ``ks``), which is what keeps the seed parity
+pins bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import comms
+from repro.core import delta as delta_lib
+from repro.core import quant as quant_lib
+from repro.core import sparsify as sparsify_lib
+from repro.core.protocol import ProtocolConfig, ServerState
+from repro.data.federated import client_epoch_batches, epoch_batches
+from repro.fl.async_buffer import (client_latencies,
+                                   normalized_staleness_weights,
+                                   weighted_mean_trees)
+from repro.fl.sampling import (SamplingConfig, gather_clients, sample_available,
+                               sample_cohort, scatter_clients)
+from repro.fl.server_opt import server_update
+from repro.optim import apply_updates
+
+# ---------------------------------------------------------------- tree utils
+
+
+def tree_mean0(tree: Any) -> Any:
+    """Mean over the leading (client) axis."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def stack_trees(trees: list[Any]) -> Any:
+    """Stack per-client trees along a new leading axis.
+
+    Host (numpy) leaves stack on host — one transfer when the mean pushes
+    the block to device, exactly the PR-2 wire path.  Device leaves stack
+    on device so the no-wire fast path never syncs to host."""
+    return jax.tree.map(
+        lambda *ls: (np.stack(ls) if isinstance(ls[0], np.ndarray)
+                     else jnp.stack(ls)), *trees)
+
+
+def client_slice(tree: Any, i: int) -> Any:
+    return jax.tree.map(lambda x: np.asarray(x[i]), tree)
+
+
+def raw_bytes_per_client(params: Any) -> int:
+    return 4 * sum(l.size for l in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------- contracts
+
+@dataclasses.dataclass
+class Contribution:
+    """One decoded client message plus its metadata.
+
+    ``delta_params``/``delta_scales``/``bn_state`` are host float32 pytrees:
+    the DECODED wire reconstruction when the engine transmits (schema v2
+    additionally sources ``bn_state`` from the payload's BN section), or the
+    device-side reconstruction on the no-wire fast path.
+    """
+    client: int
+    delta_params: Any
+    delta_scales: Any
+    bn_state: Any
+    payload_bytes: int = 0
+    staleness: int = 0
+    arrival_time: float = 0.0
+    metrics: dict[str, float] | None = None
+
+
+@dataclasses.dataclass
+class AggregatedRound:
+    """What one server step consumes: weighted means + the survivor set."""
+    delta_params: Any
+    delta_scales: Any
+    bn_state: Any
+    survivors: tuple[int, ...]
+    weights: np.ndarray | None    # None = plain mean (sync cohort barrier)
+
+
+@dataclasses.dataclass
+class RoundIntake:
+    """A scheduler's hand-off to the orchestrator for ONE aggregation.
+
+    ``contributions`` are all charged uploads (byte accounting);
+    ``survivors`` indexes the subset that aggregates (channel drops exclude
+    clients without refunding their bytes).  ``weights`` is None for the
+    sync plain mean, or the normalised FedBuff staleness weights.
+    ``receivers`` is how many clients receive the following broadcast.
+    """
+    contributions: list[Contribution]
+    survivors: list[int]
+    weights: np.ndarray | None
+    sim_time: float
+    receivers: int
+
+
+# ---------------------------------------------------------------- cohort plan
+
+class CohortPlan:
+    """Stage 1: who participates.  Wraps ``repro.fl.sampling`` with the
+    key-splitting discipline the parity pins rely on: full participation
+    consumes NO sampling randomness."""
+
+    def __init__(self, sampling: SamplingConfig, num_clients: int):
+        self.sampling = sampling
+        self.num_clients = num_clients
+        self.full = sampling.is_full(num_clients)
+
+    def select(self, key: jax.Array) -> tuple[np.ndarray, jax.Array]:
+        """One sync round's cohort; returns (indices, advanced key)."""
+        if self.full:
+            return np.arange(self.num_clients), key
+        key, ks = jax.random.split(key)
+        return sample_cohort(ks, self.num_clients, self.sampling), key
+
+    def select_available(self, key: jax.Array, available: np.ndarray,
+                         k: int) -> tuple[np.ndarray, jax.Array]:
+        """Async dispatch draw from the idle set (always consumes a split)."""
+        key, ks = jax.random.split(key)
+        return sample_available(ks, available, k, self.sampling), key
+
+
+# ---------------------------------------------------------------- local train
+
+class LocalTrain:
+    """Stage 2: run ``client_round`` for a cohort (vmapped) or one client.
+
+    Owns the stacked per-client persistent state (residuals, optimizer
+    states, schedule counters) across rounds; channel-dropped decoded mass
+    is re-injected here (``reinject_residual``) so Eq. 5 holds across drops.
+    """
+
+    def __init__(self, client_round, splits, persistent, batch_size: int):
+        self.vround = jax.jit(jax.vmap(client_round,
+                                       in_axes=(None, 0, 0, 0, 0, 0, 0),
+                                       out_axes=0))
+        self.jround = jax.jit(client_round)
+        self.splits = splits
+        self.persistent = persistent
+        self.batch_size = batch_size
+        self.n_train = splits.client_x.shape[1]
+
+    def train_cohort(self, kb: jax.Array, idx: np.ndarray, server: ServerState,
+                     full: bool):
+        """One barrier round over the cohort ``idx``; returns RoundOutput."""
+        splits = self.splits
+        batch_idx = client_epoch_batches(kb, len(idx), self.n_train,
+                                         self.batch_size)
+        if full:
+            cx, cy = splits.client_x, splits.client_y
+            cvx, cvy = splits.client_val_x, splits.client_val_y
+            pers_c = self.persistent
+        else:
+            cx, cy = splits.client_x[idx], splits.client_y[idx]
+            cvx, cvy = splits.client_val_x[idx], splits.client_val_y[idx]
+            pers_c = gather_clients(self.persistent, idx)
+        out = self.vround(server, pers_c, cx, cy, cvx, cvy, batch_idx)
+        self.persistent = (out.persistent if full else
+                           scatter_clients(self.persistent, out.persistent,
+                                           idx))
+        return out
+
+    def train_one(self, kb: jax.Array, client: int, server: ServerState):
+        """One client's round against ``server`` (async completions)."""
+        splits = self.splits
+        bidx = epoch_batches(kb, self.n_train, self.batch_size)
+        pers_c = jax.tree.map(lambda x: x[client], self.persistent)
+        out = self.jround(server, pers_c,
+                          splits.client_x[client], splits.client_y[client],
+                          splits.client_val_x[client],
+                          splits.client_val_y[client], bidx)
+        self.persistent = jax.tree.map(lambda f, u: f.at[client].set(u),
+                                       self.persistent, out.persistent)
+        return out
+
+    def reinject_residual(self, client: int, delta: Any) -> None:
+        """A dropped upload must not break Eq. 5: put the lost (decoded)
+        delta back into that client's residual so its mass is retransmitted
+        (the scale-delta section has no residual and stays lost)."""
+        self.persistent = self.persistent._replace(
+            residual=jax.tree.map(
+                lambda r, d: r.at[client].add(jnp.asarray(d)),
+                self.persistent.residual, delta))
+
+
+# ---------------------------------------------------------------- uplink
+
+# Fork-pool worker state: the codec/spec pair is shipped once per worker via
+# the pool initializer instead of once per task (specs embed shape templates).
+_POOL_CODEC: comms.Codec | None = None
+_POOL_SPEC: comms.WireSpec | None = None
+
+
+def _pool_init(codec: comms.Codec, spec: comms.WireSpec) -> None:
+    global _POOL_CODEC, _POOL_SPEC
+    _POOL_CODEC, _POOL_SPEC = codec, spec
+
+
+def _pool_roundtrip(upd: comms.ClientUpdate):
+    payload = _POOL_CODEC.encode(upd, _POOL_SPEC)
+    return len(payload), _POOL_CODEC.decode(payload, _POOL_SPEC)
+
+
+class Uplink:
+    """Stage 3: the wire.  Encode each participant's update, decode it back.
+
+    The engine aggregates the DECODED reconstructions, so ``payload_bytes``
+    is the length of payloads that provably decode.  For level-lossless
+    codecs the decode is bit-identical to the in-graph dequantization
+    (parity with the seed); lossy wire codecs (fp16/int8) make the server
+    honestly see the wire loss.
+
+    Per-client round-trips share no codec state, so ``workers > 1`` fans
+    them across an executor: ``"thread"`` for numpy-dominated codecs (GIL
+    released), ``"process"`` for the pure-Python entropy coders.  Results
+    come back in submission order — parallelism cannot change bytes.
+    """
+
+    def __init__(self, cfg: ProtocolConfig, engine_cfg, server: ServerState):
+        self.transmit = engine_cfg.measure_bytes
+        self.codec = comms.resolve_codec(engine_cfg.codec, cfg.quantize)
+        if ("levels" in self.codec.needs and not cfg.quantize
+                and cfg.method != "ternary"):
+            # a level codec would put quantized levels on the wire while the
+            # client's residual (Eq. 5) assumes the full-precision recon was
+            # delivered — the same hazard resolve_codec's "auto" avoids
+            raise ValueError(
+                f"codec {self.codec.name!r} transmits integer levels but the "
+                "protocol has quantize=False; use a float codec "
+                "(raw-fp32/fp16/int8-blockscale) or enable quantization")
+        send_mask = None
+        if engine_cfg.up_predicate is not None:
+            send_mask = comms.make_send_mask(server.params,
+                                             engine_cfg.up_predicate)
+        self.spec = comms.WireSpec(
+            params=comms.shape_template(server.params),
+            scales=comms.shape_template(server.scales),
+            fine_mask=comms.path_fine_mask(server.params),
+            step_size=cfg.step_size,
+            fine_step_size=cfg.fine_step_size,
+            ternary=(cfg.method == "ternary"),
+            send_mask=send_mask,
+            bn=(comms.shape_template(server.bn_state)
+                if engine_cfg.wire_schema == 2 else None),
+            version=engine_cfg.wire_schema)
+        self.workers = engine_cfg.uplink_workers
+        self.executor_kind = engine_cfg.uplink_executor
+        if (self.workers > 1 and self.executor_kind == "process"
+                and not self.codec.fork_safe):
+            raise ValueError(
+                f"codec {self.codec.name!r} dispatches through jax/XLA and "
+                "is not fork-safe; use uplink_executor='thread' (its numpy "
+                "work releases the GIL) or a fork-safe codec")
+        self._ex = None
+
+    # -- device -> host ----------------------------------------------------
+
+    def fetch(self, out):
+        """Pull the wire-relevant RoundOutput trees to host in ONE transfer
+        (per-leaf slicing would sync the device once per leaf per client).
+        Only the trees the codec reads are fetched — level codecs skip the
+        float reconstructions (except ternary, which needs them for the
+        magnitude tail) and float codecs skip the levels.  BN state is
+        fetched only under schema v2, where it must be encoded; under v1
+        it stays on device (contributions carry device rows and the BN
+        mean never syncs to host, like the pre-redesign engine).  The
+        scalar metrics ride along for the Contribution metadata."""
+        need_levels = "levels" in self.codec.needs
+        need_recon = "recon" in self.codec.needs or self.spec.ternary
+        lp, ls, rp, rs, bn, metrics = jax.device_get((
+            out.levels_params if need_levels else None,
+            out.levels_scales if need_levels else None,
+            out.recon_delta_params if need_recon else None,
+            out.recon_delta_scales if need_recon else None,
+            out.bn_state if self.spec.version == 2 else None,
+            out.metrics))
+        upd = comms.ClientUpdate(lp, ls, rp, rs, bn=bn)
+        return upd, metrics
+
+    # -- wire round-trips --------------------------------------------------
+
+    def _roundtrip(self, upd: comms.ClientUpdate):
+        payload = self.codec.encode(upd, self.spec)
+        return len(payload), self.codec.decode(payload, self.spec)
+
+    def _executor(self):
+        if self._ex is None:
+            if self.executor_kind == "thread":
+                self._ex = ThreadPoolExecutor(self.workers)
+            else:
+                # forkserver, not fork: by uplink time the parent runs XLA
+                # thread pools, and forking a multithreaded process can
+                # deadlock the child.  The forkserver process is spawned
+                # clean (fork+exec) and workers fork from IT; preloading
+                # repro.comms there amortises the import across workers.
+                ctx = multiprocessing.get_context("forkserver")
+                ctx.set_forkserver_preload(["repro.comms"])
+                self._ex = ProcessPoolExecutor(
+                    self.workers, mp_context=ctx, initializer=_pool_init,
+                    initargs=(self.codec, self.spec))
+        return self._ex
+
+    def roundtrip_all(self, upds: list[comms.ClientUpdate]):
+        """Encode+decode every update; parallel across clients when
+        configured (order-preserving either way)."""
+        if self.workers <= 1 or len(upds) <= 1:
+            return [self._roundtrip(u) for u in upds]
+        fn = (self._roundtrip if self.executor_kind == "thread"
+              else _pool_roundtrip)
+        return list(self._executor().map(fn, upds))
+
+    def close(self) -> None:
+        if self._ex is not None:
+            self._ex.shutdown()
+            self._ex = None
+
+    # -- RoundOutput -> Contributions --------------------------------------
+
+    def _metric_row(self, metrics, i: int | None) -> dict[str, float]:
+        return {k: float(v if i is None else v[i])
+                for k, v in metrics.items()}
+
+    def intake(self, out, clients: list[int]) -> list[Contribution]:
+        """Stacked cohort RoundOutput -> one Contribution per client."""
+        if not self.transmit:
+            # no-wire fast path: contributions carry DEVICE rows (lazy
+            # slices), so aggregation stays on device with zero host
+            # transfer — only the scalar metrics are fetched
+            metrics = jax.device_get(out.metrics)
+
+            def row(tree, i):
+                return jax.tree.map(lambda x: x[i], tree)
+
+            return [Contribution(
+                client=c,
+                delta_params=row(out.recon_delta_params, i),
+                delta_scales=row(out.recon_delta_scales, i),
+                bn_state=row(out.bn_state, i),
+                metrics=self._metric_row(metrics, i))
+                for i, c in enumerate(clients)]
+        host, metrics = self.fetch(out)
+        upds = [comms.ClientUpdate(*(None if t is None else client_slice(t, i)
+                                     for t in host))
+                for i in range(len(clients))]
+        results = self.roundtrip_all(upds)
+        return [Contribution(
+            client=c,
+            delta_params=dec.params,
+            delta_scales=dec.scales,
+            bn_state=(dec.bn if self.spec.version == 2
+                      else jax.tree.map(lambda x: x[i], out.bn_state)),
+            payload_bytes=nbytes,
+            metrics=self._metric_row(metrics, i))
+            for i, (c, (nbytes, dec)) in enumerate(zip(clients, results))]
+
+    def intake_one(self, out, client: int) -> Contribution:
+        """Unstacked single-client RoundOutput (async completion)."""
+        if not self.transmit:
+            metrics = jax.device_get(out.metrics)
+            return Contribution(client=client,
+                                delta_params=out.recon_delta_params,
+                                delta_scales=out.recon_delta_scales,
+                                bn_state=out.bn_state,
+                                metrics=self._metric_row(metrics, None))
+        upd, metrics = self.fetch(out)
+        nbytes, dec = self._roundtrip(upd)
+        return Contribution(
+            client=client, delta_params=dec.params, delta_scales=dec.scales,
+            bn_state=dec.bn if self.spec.version == 2 else out.bn_state,
+            payload_bytes=nbytes,
+            metrics=self._metric_row(metrics, None))
+
+
+# ---------------------------------------------------------------- aggregate
+
+class Aggregate:
+    """Stage 4: THE aggregation.  Both schedulers' contributions flow
+    through this one instance — a plain mean for the sync cohort barrier
+    (bitwise the seed loop's aggregation) or the FedBuff staleness-weighted
+    combination (``weighted_mean_trees``) when the scheduler supplies
+    weights.  There is no other aggregation math in the engine."""
+
+    def __call__(self, contribs: list[Contribution],
+                 weights: np.ndarray | None = None) -> AggregatedRound:
+        if not contribs:
+            raise ValueError("cannot aggregate zero contributions")
+        if weights is None:
+            mdp = tree_mean0(stack_trees([c.delta_params for c in contribs]))
+            mds = tree_mean0(stack_trees([c.delta_scales for c in contribs]))
+            mbn = tree_mean0(stack_trees([c.bn_state for c in contribs]))
+        else:
+            mdp = weighted_mean_trees([c.delta_params for c in contribs],
+                                      weights)
+            mds = weighted_mean_trees([c.delta_scales for c in contribs],
+                                      weights)
+            mbn = weighted_mean_trees([c.bn_state for c in contribs],
+                                      weights)
+        return AggregatedRound(
+            delta_params=mdp, delta_scales=mds, bn_state=mbn,
+            survivors=tuple(c.client for c in contribs), weights=weights)
+
+
+# ---------------------------------------------------------------- server step
+
+class ServerStep:
+    """Stage 5: fold one AggregatedRound into the server state.
+
+    The aggregated delta acts as a pseudo-gradient for the server optimizer
+    (``repro.fl.server_opt``); the resulting update is what Downlink may
+    compress before it is applied (the broadcast quantity, §5.2)."""
+
+    def __init__(self, opt):
+        self.opt = opt
+        self.state = None
+
+    def init(self, params: Any) -> None:
+        self.state = self.opt.init(params)
+
+    def __call__(self, server: ServerState, agg: AggregatedRound,
+                 downlink: "Downlink", receivers: int,
+                 transmit: bool) -> tuple[ServerState, int]:
+        updates, self.state = server_update(self.opt, self.state,
+                                            agg.delta_params, server.params)
+        down_bytes = 0
+        if downlink.active:
+            updates, down_bytes = downlink.compress(updates, receivers,
+                                                    transmit)
+        server = ServerState(
+            params=apply_updates(server.params, updates),
+            scales=delta_lib.tree_add(server.scales, agg.delta_scales),
+            bn_state=agg.bn_state)
+        return server, down_bytes
+
+
+# ---------------------------------------------------------------- downlink
+
+class Downlink:
+    """Stage 6: bidirectional server->clients compression with error
+    feedback (§5.2).
+
+    Operates on the server *update* (the quantity actually broadcast) and
+    runs it through the wire codec as a params-only message: the engine
+    applies the DECODED broadcast and ``down_bytes`` is
+    ``receivers * len(payload)``.  For FedAvg(lr=1) the update equals the
+    aggregated delta bitwise, matching the seed loop's pre-aggregation
+    compression exactly.
+    """
+
+    def __init__(self, cfg: ProtocolConfig, step_size: float, params0: Any,
+                 codec: comms.Codec, bidirectional: bool):
+        self.active = bidirectional and cfg.method != "none"
+        self.codec = codec
+        self.q = quant_lib.QuantConfig(step_size=step_size,
+                                       fine_step_size=cfg.fine_step_size)
+        self.spars = sparsify_lib.SparsifyConfig(
+            delta=cfg.delta, gamma=cfg.gamma, step_size=step_size,
+            unstructured=cfg.unstructured, structured=cfg.structured,
+            fixed_sparsity=cfg.fixed_sparsity)
+        self.spec = comms.WireSpec(
+            params=comms.shape_template(params0), scales=None,
+            fine_mask=None, step_size=step_size,
+            fine_step_size=cfg.fine_step_size)
+        self.residual = jax.tree.map(jnp.zeros_like, params0)
+        self.last_payload_bytes = 0
+
+    def compress(self, updates: Any, receivers: int,
+                 transmit: bool) -> tuple[Any, int]:
+        carried = delta_lib.tree_add(updates, self.residual)
+        sparse = sparsify_lib.sparsify_tree(carried, self.spars)
+        lv = quant_lib.quantize_tree(sparse, self.q)
+        if transmit:
+            upd = comms.ClientUpdate(
+                levels_params=jax.tree.map(np.asarray, lv),
+                levels_scales=None,
+                recon_params=quant_lib.dequantize_tree(lv, self.q),
+                recon_scales=None)
+            payload = self.codec.encode(upd, self.spec)
+            recon = self.codec.decode(payload, self.spec).params
+            self.last_payload_bytes = len(payload)
+            down = receivers * len(payload)
+        else:
+            recon = quant_lib.dequantize_tree(lv, self.q)
+            down = 0
+        self.residual = delta_lib.tree_sub(carried, recon)
+        return recon, down
+
+
+# ---------------------------------------------------------------- evaluate
+
+class Evaluate:
+    """Stage 7: server-side test accuracy (jitted once per engine)."""
+
+    def __init__(self, evaluate_fn, test_x, test_y):
+        self._eval = jax.jit(evaluate_fn)
+        self.test_x, self.test_y = test_x, test_y
+
+    def __call__(self, server: ServerState) -> float:
+        return float(self._eval(server, self.test_x, self.test_y))
+
+
+# ---------------------------------------------------------------- schedulers
+
+class RoundScheduler:
+    """Policy deciding who trains when and what one aggregation consumes.
+
+    A scheduler is bound to a :class:`~repro.fl.engine.FederatedEngine`
+    and drives the engine's OWN ``CohortPlan``/``LocalTrain``/``Uplink``
+    stage instances; it never aggregates or steps the server itself — it
+    returns a :class:`RoundIntake` and the orchestrator runs
+    ``Aggregate``/``ServerStep``/``Downlink``/``Evaluate``.
+    """
+
+    mode: str = "?"
+
+    def bind(self, engine, key: jax.Array) -> None:
+        raise NotImplementedError
+
+    def next_round(self) -> RoundIntake:
+        raise NotImplementedError
+
+    def log_line(self, rec, intake: RoundIntake) -> str:
+        raise NotImplementedError
+
+
+class SyncScheduler(RoundScheduler):
+    """Cohort barrier: one vmapped round per aggregation, channel drops."""
+
+    mode = "sync"
+
+    def bind(self, engine, key: jax.Array) -> None:
+        self.eng = engine
+        self.key = key
+        self.sim_clock = 0.0
+        self.round_idx = 0
+
+    def next_round(self) -> RoundIntake:
+        eng = self.eng
+        self.round_idx += 1
+        self.key, kb = jax.random.split(self.key)
+        idx, self.key = eng.cohort.select(self.key)
+        clients = [int(c) for c in idx]
+        cohort = len(clients)
+
+        out = eng.local_train.train_cohort(kb, idx, eng.server,
+                                           full=eng.cohort.full)
+        contribs = eng.uplink.intake(out, clients)
+
+        survivors = list(range(cohort))
+        chan = eng.channel
+        if eng.transmit and chan is not None:
+            self.sim_clock += chan.round_time(
+                clients, [c.payload_bytes for c in contribs],
+                eng.broadcast_ref_bytes())
+            survivors = [i for i in range(cohort)
+                         if not chan.dropped(self.round_idx, clients[i])]
+            if (eng.protocol_cfg.error_feedback
+                    and len(survivors) != cohort):
+                for i in range(cohort):
+                    if i not in survivors:
+                        eng.local_train.reinject_residual(
+                            clients[i], contribs[i].delta_params)
+        for c in contribs:
+            c.arrival_time = self.sim_clock
+        return RoundIntake(contribs, survivors, weights=None,
+                           sim_time=self.sim_clock, receivers=cohort)
+
+    def log_line(self, rec, intake: RoundIntake) -> str:
+        line = (f"round {rec.round:3d} acc={rec.test_acc:.3f} "
+                f"cohort={len(intake.survivors)}/{len(intake.contributions)} "
+                f"up={rec.up_bytes/1e6:.3f}MB "
+                f"sparsity={rec.update_sparsity:.3f}")
+        if self.eng.channel is not None:
+            line += f" t_sim={rec.sim_time_s:.2f}s"
+        return line
+
+
+@dataclasses.dataclass
+class _InFlight:
+    client: int
+    start_version: int
+    server: ServerState
+    finish: float
+
+
+class BufferedAsyncScheduler(RoundScheduler):
+    """FedBuff buffer: M concurrent clients, aggregate every B arrivals
+    with staleness weights; heterogeneous latencies drive a simulated
+    wall-clock."""
+
+    mode = "async"
+
+    def bind(self, engine, key: jax.Array) -> None:
+        self.eng = engine
+        acfg = engine.engine_cfg.async_cfg
+        self.acfg = acfg
+        key, kl = jax.random.split(key)
+        self.latency = client_latencies(kl, engine.num_clients, acfg)
+        self.concurrency = min(acfg.concurrency, engine.num_clients)
+        self.available = set(range(engine.num_clients))
+        self.now = 0.0
+        first, key = engine.cohort.select_available(
+            key, np.array(sorted(self.available)), self.concurrency)
+        self.in_flight: list[_InFlight] = []
+        for c in first:
+            self.available.discard(int(c))
+            self.in_flight.append(_InFlight(
+                int(c), 0, engine.server,
+                self._dispatch_delay(int(c)) + float(self.latency[c])))
+        self.key = key
+        # replacement for the completion that triggered the last aggregation
+        # is deferred until after the server step, so it trains from the
+        # newest version (otherwise every B-th dispatch starts one stale)
+        self.pending_dispatch = False
+
+    def _dispatch_delay(self, client: int) -> float:
+        """Model-download leg of a dispatch (channel mode only)."""
+        if self.eng.channel is None:
+            return 0.0
+        return self.eng.channel.down_time(client,
+                                          self.eng.broadcast_ref_bytes())
+
+    def _dispatch_one(self) -> None:
+        eng = self.eng
+        nxt, self.key = eng.cohort.select_available(
+            self.key, np.array(sorted(self.available)), 1)
+        nxt = int(nxt[0])
+        self.available.discard(nxt)
+        self.in_flight.append(_InFlight(
+            nxt, eng.version, eng.server,
+            self.now + self._dispatch_delay(nxt) + float(self.latency[nxt])))
+
+    def next_round(self) -> RoundIntake:
+        eng = self.eng
+        buffer: list[Contribution] = []
+        while True:
+            if self.pending_dispatch:
+                self._dispatch_one()
+                self.pending_dispatch = False
+            # pop the earliest-finishing client (concurrency is small); with
+            # a channel the upload leg is appended at pop time, so arrival
+            # order approximates compute-finish order (documented
+            # simplification)
+            e = min(self.in_flight, key=lambda f: f.finish)
+            self.in_flight.remove(e)
+            c = e.client
+
+            self.key, kb = jax.random.split(self.key)
+            out = eng.local_train.train_one(kb, c, e.server)
+            contrib = eng.uplink.intake_one(out, c)
+            # arrival = compute finish + upload leg; clients pop in
+            # compute-finish order, so with heterogeneous uploads a later
+            # pop can carry an earlier arrival — clamp to keep the
+            # simulated clock monotone
+            arrival = e.finish + (
+                eng.channel.up_time(c, contrib.payload_bytes)
+                if eng.channel is not None else 0.0)
+            self.now = max(self.now, arrival)
+            contrib.staleness = eng.version - e.start_version
+            contrib.arrival_time = self.now
+            buffer.append(contrib)
+            self.available.add(c)
+
+            if len(buffer) >= self.acfg.buffer_size:
+                self.pending_dispatch = True
+                w = normalized_staleness_weights(
+                    [b.staleness for b in buffer],
+                    self.acfg.staleness_exponent)
+                return RoundIntake(buffer, list(range(len(buffer))),
+                                   weights=w, sim_time=self.now,
+                                   receivers=self.concurrency)
+            self._dispatch_one()
+
+    def log_line(self, rec, intake: RoundIntake) -> str:
+        stale = [c.staleness for c in intake.contributions]
+        return (f"agg {rec.round:3d} acc={rec.test_acc:.3f} "
+                f"t_sim={rec.sim_time_s:.2f}s staleness={stale} "
+                f"up={rec.up_bytes/1e6:.3f}MB")
+
+
+SCHEDULERS: dict[str, type[RoundScheduler]] = {
+    "sync": SyncScheduler,
+    "async": BufferedAsyncScheduler,
+}

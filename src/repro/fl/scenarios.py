@@ -56,9 +56,12 @@ class Scenario:
     staleness_exponent: float = 0.5
     bidirectional: bool = False
     rounds: int = 3
-    # --- wire: codec x channel (repro.comms) ---
+    # --- wire: codec x channel x schema (repro.comms) ---
     codec: str = "auto"             # registry name; "auto" = seed semantics
     channel: ChannelConfig | None = None
+    wire_schema: int = 1            # 1 = PR-2 frame | 2 = BN on the wire
+    uplink_workers: int = 0         # >1: parallel per-client encode+decode
+    uplink_executor: str = "thread"  # "thread" | "process"
     # --- data heterogeneity (default task only) ---
     dirichlet_alpha: float | None = None   # None = IID random partition
 
@@ -94,6 +97,9 @@ def build_engine(s: Scenario) -> EngineConfig:
         bidirectional=s.bidirectional,
         codec=s.codec,
         channel=s.channel,
+        wire_schema=s.wire_schema,
+        uplink_workers=s.uplink_workers,
+        uplink_executor=s.uplink_executor,
         # partial updates never have non-classifier deltas, so the wire
         # drops those leaves entirely (layer-selective payloads)
         up_predicate=_fc_only if s.partial_updates else None)
@@ -118,10 +124,28 @@ def default_setting(num_clients: int, *, n_samples: int = 640,
 
 SCENARIOS: dict[str, Scenario] = {}
 
+_PROTOCOL_NAMES = frozenset(baseline_configs())
+
+
+def validate_scenario(s: Scenario) -> None:
+    """Reject conflicting axes when a Scenario is *defined*, not deep in
+    engine setup: async x cohort_size, channel x measure_bytes/drop-mode,
+    weighted-sampling weight counts, unknown modes/schemas/protocols all
+    fail here with the engine's own error messages."""
+    if s.protocol not in _PROTOCOL_NAMES:
+        known = ", ".join(sorted(_PROTOCOL_NAMES))
+        raise ValueError(f"scenario {s.name!r}: unknown protocol "
+                         f"{s.protocol!r} (known: {known})")
+    try:
+        build_engine(s).validate(s.num_clients)
+    except ValueError as e:
+        raise ValueError(f"scenario {s.name!r}: {e}") from None
+
 
 def register(s: Scenario) -> Scenario:
     if s.name in SCENARIOS:
         raise ValueError(f"scenario {s.name!r} already registered")
+    validate_scenario(s)
     SCENARIOS[s.name] = s
     return s
 
@@ -207,6 +231,19 @@ for _s in [
              channel=ChannelConfig(up_mbps=4.0, down_mbps=16.0,
                                    latency_s=0.02, bandwidth_sigma=0.5,
                                    drop_rate=0.1)),
+    # ---- wire schema v2 + parallel uplink (round-lifecycle axes) ----
+    Scenario("bnwire_v2_full",
+             "wire schema v2: BN statistics travel inside every codec "
+             "payload (nothing out-of-band)",
+             wire_schema=2),
+    Scenario("bnwire_v2_async",
+             "schema v2 under buffered-async scheduling: staleness-weighted "
+             "BN arrives via decoded messages",
+             mode="async", buffer_size=2, concurrency=3, wire_schema=2),
+    Scenario("uplink_pool_k8",
+             "thread-pooled per-client wire round-trips (fp16 payloads "
+             "release the GIL)",
+             codec="fp16", uplink_workers=2),
 ]:
     register(_s)
 del _s

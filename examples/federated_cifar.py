@@ -12,6 +12,8 @@ the final server model.
     [--scenario NAME]        (run a named engine scenario instead; see
                               `repro.fl.list_scenarios()` — adds client
                               sampling / server optimizers / async rounds)
+    [--executor serial|vmap|sharded]  (cohort execution backend; "sharded"
+                              lays the client axis across visible devices)
 """
 import argparse
 import dataclasses
@@ -41,13 +43,20 @@ def main():
     ap.add_argument("--uplink-workers", type=int, default=None,
                     help="parallel per-client wire encode+decode "
                          "(scenario runs only)")
+    ap.add_argument("--executor", choices=("serial", "vmap", "sharded"),
+                    default=None,
+                    help="cohort execution backend: per-client jit loop, "
+                         "one vmapped call (default), or the cohort axis "
+                         "sharded across visible devices (scenario runs "
+                         "only)")
     ap.add_argument("--out", default="/tmp/fsfl_server.ckpt")
     args = ap.parse_args()
 
     scenario = get_scenario(args.scenario) if args.scenario else None
     if scenario is None and (args.wire_schema is not None
-                             or args.uplink_workers is not None):
-        ap.error("--wire-schema/--uplink-workers need --scenario")
+                             or args.uplink_workers is not None
+                             or args.executor is not None):
+        ap.error("--wire-schema/--uplink-workers/--executor need --scenario")
     if args.clients is None:
         args.clients = scenario.num_clients if scenario else 4
     if args.rounds is None and scenario is None:
@@ -70,6 +79,8 @@ def main():
         if args.uplink_workers is not None:
             scenario = dataclasses.replace(scenario,
                                            uplink_workers=args.uplink_workers)
+        if args.executor is not None:
+            scenario = dataclasses.replace(scenario, executor=args.executor)
         res = run_scenario(scenario, rounds=args.rounds,
                            model=model, splits=splits, verbose=True)
     else:

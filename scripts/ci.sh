@@ -25,6 +25,9 @@ if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
   echo "== engine throughput smoke: parallel uplink + round wall-clock =="
   python benchmarks/engine_throughput.py --smoke --out /tmp/BENCH_engine_smoke.json >/dev/null
 
+  echo "== cohort scaling smoke: executor backends + async window batching =="
+  python benchmarks/cohort_scaling.py --smoke --out /tmp/BENCH_cohort_smoke.json >/dev/null
+
   echo "== engine smoke: 2 rounds, K=4 of C=8, FedAdam, tiny CNN =="
   python - <<'PY'
 import jax

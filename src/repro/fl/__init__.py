@@ -12,12 +12,15 @@ from repro.fl.async_buffer import (AsyncConfig, BufferEntry, aggregate_buffer,
 from repro.fl.engine import (EngineConfig, FederatedEngine, RoundRecord,
                              RunResult, encode_client_bytes,
                              measure_update_bytes, run_simulation)
+from repro.fl.executors import (EXECUTORS, ClientExecutor, SerialExecutor,
+                                ShardedExecutor, VmapExecutor, make_executor)
 from repro.fl.rounds import (SCHEDULERS, Aggregate, AggregatedRound,
                              BufferedAsyncScheduler, CohortPlan, Contribution,
                              Downlink, Evaluate, LocalTrain, RoundIntake,
                              RoundScheduler, ServerStep, SyncScheduler,
                              Uplink)
-from repro.fl.sampling import SamplingConfig, sample_cohort
+from repro.fl.sampling import (SamplingConfig, gather_clients, pad_clients,
+                               sample_cohort, scatter_clients)
 from repro.fl.scenarios import (SCENARIOS, Scenario, get_scenario,
                                 list_scenarios, register, run_scenario,
                                 validate_scenario)
@@ -33,7 +36,10 @@ __all__ = [
     "SCHEDULERS", "Aggregate", "AggregatedRound", "BufferedAsyncScheduler",
     "CohortPlan", "Contribution", "Downlink", "Evaluate", "LocalTrain",
     "RoundIntake", "RoundScheduler", "ServerStep", "SyncScheduler", "Uplink",
-    "SamplingConfig", "sample_cohort",
+    "EXECUTORS", "ClientExecutor", "SerialExecutor", "ShardedExecutor",
+    "VmapExecutor", "make_executor",
+    "SamplingConfig", "gather_clients", "pad_clients", "sample_cohort",
+    "scatter_clients",
     "SCENARIOS", "Scenario", "get_scenario", "list_scenarios", "register",
     "run_scenario", "validate_scenario",
     "ServerOptConfig", "make_server_opt", "server_step", "server_update",

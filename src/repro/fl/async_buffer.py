@@ -30,6 +30,10 @@ class AsyncConfig:
     staleness_exponent: float = 0.5
     latency_mean: float = 1.0     # seconds, lognormal median scale
     latency_sigma: float = 0.5    # lognormal shape; 0 = homogeneous clients
+    # simulated seconds: in-flight clients finishing within this window of
+    # the earliest finisher are batched into ONE executor call (0.0 = one
+    # completion at a time, the pre-batching behaviour — ties included)
+    dispatch_window: float = 0.0
 
 
 class BufferEntry(NamedTuple):

@@ -27,8 +27,16 @@ Orthogonal axes (all composable through :class:`EngineConfig`):
   * **wire schema** — v1 (PR-2 frame, BN state rides out-of-band from the
     device fetch) or v2 (versioned header, BN statistics inside the codec
     payload, so ``Aggregate`` consumes only decoded wire messages),
+  * **cohort executor** — how a batch of ``client_round`` calls runs:
+    ``executor="serial"`` (per-client jit loop), ``"vmap"`` (one vmapped
+    call, the default), or ``"sharded"`` (cohort axis laid out across a
+    1-D device mesh, ``mesh_shape``; ragged cohorts are padded to the
+    mesh size).  Async dispatch windows (``AsyncConfig.dispatch_window``)
+    batch concurrently-finishing clients through the same backend
+    (``benchmarks/cohort_scaling.py`` measures all of it),
   * **parallel uplink** — ``uplink_workers > 1`` fans the per-client
-    encode+decode round-trips across a thread or process pool
+    encode+decode round-trips across a thread or process pool — for the
+    sync cohort and for async windows alike
     (``benchmarks/engine_throughput.py`` measures the speedup),
   * **channel** — an optional ``repro.comms.ChannelModel`` converts payload
     sizes into transfer times on the simulated clock (and can drop sync
@@ -62,6 +70,7 @@ from repro.core import quant as quant_lib
 from repro.core.protocol import ProtocolConfig, make_protocol
 from repro.data.federated import FederatedSplits
 from repro.fl.async_buffer import AsyncConfig
+from repro.fl.executors import EXECUTORS, make_executor
 from repro.fl.rounds import (SCHEDULERS, Aggregate, CohortPlan, Downlink,
                              Evaluate, LocalTrain, RoundIntake, ServerStep,
                              Uplink, client_slice, raw_bytes_per_client)
@@ -127,6 +136,8 @@ class EngineConfig:
     wire_schema: int = 1                 # 1 = PR-2 frame | 2 = BN on the wire
     uplink_workers: int = 0              # >1: parallel encode+decode
     uplink_executor: str = "thread"      # "thread" | "process"
+    executor: str = "vmap"               # cohort backend (fl.executors)
+    mesh_shape: tuple[int, ...] | None = None  # sharded: 1-D cohort mesh
 
     def validate(self, num_clients: int | None = None) -> None:
         """Reject conflicting axes up front (also run at Scenario
@@ -135,6 +146,25 @@ class EngineConfig:
             known = ", ".join(sorted(SCHEDULERS))
             raise ValueError(f"unknown engine mode: {self.mode!r} "
                              f"(known: {known})")
+        if self.executor not in EXECUTORS:
+            known = ", ".join(sorted(EXECUTORS))
+            raise ValueError(f"unknown executor: {self.executor!r} "
+                             f"(known: {known})")
+        if self.mesh_shape is not None:
+            if self.executor != "sharded":
+                raise ValueError(
+                    f"mesh_shape configures the sharded cohort mesh; it has "
+                    f"no meaning for executor={self.executor!r} — drop it or "
+                    "set executor='sharded'")
+            if len(self.mesh_shape) != 1 or self.mesh_shape[0] < 1:
+                raise ValueError(
+                    f"mesh_shape must be a 1-D positive shape (the cohort "
+                    f"axis is the only sharded axis), got {self.mesh_shape!r}")
+            need, have = self.mesh_shape[0], len(jax.devices())
+            if need > have:
+                raise ValueError(
+                    f"mesh_shape {self.mesh_shape!r} needs {need} devices "
+                    f"but only {have} are visible")
         if self.sampling.strategy == "weighted":
             w = self.sampling.weights
             if w is None or (num_clients is not None
@@ -154,12 +184,22 @@ class EngineConfig:
                 "async mode has no per-round cohort: participation is driven "
                 "by AsyncConfig.concurrency; leave SamplingConfig.cohort_size "
                 "unset")
-        if self.mode == "async" and self.uplink_workers > 1:
+        if self.async_cfg.dispatch_window < 0.0:
+            raise ValueError("AsyncConfig.dispatch_window must be >= 0 "
+                             "(simulated seconds)")
+        if self.mode != "async" and self.async_cfg.dispatch_window > 0.0:
             raise ValueError(
-                "uplink_workers parallelises the sync cohort's wire "
-                "round-trips; async mode transmits one completion at a time, "
-                "so a pool would be a silent no-op — leave uplink_workers "
-                "unset (batching async completions is a ROADMAP item)")
+                "AsyncConfig.dispatch_window batches concurrently-finishing "
+                "async completions; it has no meaning for mode="
+                f"{self.mode!r} — drop it or set mode='async'")
+        if (self.mode == "async" and self.uplink_workers > 1
+                and self.async_cfg.dispatch_window <= 0.0):
+            raise ValueError(
+                "uplink_workers parallelises a batch of wire round-trips; "
+                "with dispatch_window=0 the async scheduler transmits one "
+                "completion at a time, so a pool would be a silent no-op — "
+                "set AsyncConfig.dispatch_window > 0 (window batches flow "
+                "through the pooled intake) or leave uplink_workers unset")
         if self.wire_schema not in (1, 2):
             raise ValueError(
                 f"unknown wire schema {self.wire_schema!r} (known: 1, 2)")
@@ -234,8 +274,10 @@ class FederatedEngine:
 
         # ---- the stage pipeline (ONE instance each; schedulers share) ----
         self.cohort = CohortPlan(engine_cfg.sampling, self.num_clients)
-        self.local_train = LocalTrain(client_round, splits, persistent,
-                                      cfg.batch_size)
+        self.local_train = LocalTrain(
+            client_round, splits, persistent, cfg.batch_size,
+            executor=make_executor(engine_cfg.executor,
+                                   mesh_shape=engine_cfg.mesh_shape))
         self.uplink = Uplink(cfg, engine_cfg, server)
         self.aggregate = Aggregate()
         self.server_step = ServerStep(make_server_opt(engine_cfg.server_opt))

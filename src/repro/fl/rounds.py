@@ -18,11 +18,17 @@ of each stage and consumes a :class:`RoundScheduler` policy:
     residual under error feedback, Eq. 5),
   * :class:`BufferedAsyncScheduler` — FedBuff-style buffer: M clients train
     concurrently against whatever server version each started from, the
-    buffer aggregates with staleness weights once B updates land.
+    buffer aggregates with staleness weights once B updates land; clients
+    whose simulated finish times fall in the same dispatch window run as
+    ONE executor call (``LocalTrain.train_window``).
 
 Sync vs. async is therefore a *scheduling policy*, not a forked code path —
 both policies drive the identical ``Uplink``/``Aggregate``/``ServerStep``
-stage instances (tested structurally in tests/test_rounds.py).
+stage instances (tested structurally in tests/test_rounds.py).  HOW a batch
+of ``client_round`` calls executes — serial jit loop, vmapped, or
+mesh-sharded over the cohort axis — is a third orthogonal axis, the
+:class:`repro.fl.executors.ClientExecutor` backend injected into
+``LocalTrain``.
 
 ``Uplink`` owns the host wire hot path: each cohort member's message is
 encoded AND decoded (the server aggregates only what provably round-trips),
@@ -37,8 +43,9 @@ uplink fills ``Contribution.bn_state`` from the device fetch instead.
 
 PRNG-key discipline: each scheduler consumes splits in exactly the order
 the PR-1/PR-2 engine did (sync: ``kb`` then — only when sampling — ``ks``;
-async: ``kl`` latencies, ``ks`` first cohort, then per completion ``kb``
-followed by the replacement ``ks``), which is what keeps the seed parity
+async: ``kl`` latencies, ``ks`` first cohort, then one ``kb`` per windowed
+completion in deterministic (finish, client) order followed by one
+replacement ``ks`` per completion), which is what keeps the seed parity
 pins bit-for-bit.
 """
 from __future__ import annotations
@@ -58,6 +65,7 @@ from repro.core import quant as quant_lib
 from repro.core import sparsify as sparsify_lib
 from repro.core.protocol import ProtocolConfig, ServerState
 from repro.data.federated import client_epoch_batches, epoch_batches
+from repro.fl.executors import ClientExecutor, VmapExecutor
 from repro.fl.async_buffer import (client_latencies,
                                    normalized_staleness_weights,
                                    weighted_mean_trees)
@@ -170,18 +178,21 @@ class CohortPlan:
 # ---------------------------------------------------------------- local train
 
 class LocalTrain:
-    """Stage 2: run ``client_round`` for a cohort (vmapped) or one client.
+    """Stage 2: run ``client_round`` over a batch of clients.
 
     Owns the stacked per-client persistent state (residuals, optimizer
-    states, schedule counters) across rounds; channel-dropped decoded mass
-    is re-injected here (``reinject_residual``) so Eq. 5 holds across drops.
+    states, schedule counters) across rounds and the data plumbing
+    (gather/scatter of the stacked client arrays); HOW the batch executes
+    is delegated to the injected :class:`~repro.fl.executors.ClientExecutor`
+    (serial jit loop / vmapped / mesh-sharded — ``EngineConfig.executor``).
+    Channel-dropped decoded mass is re-injected here
+    (``reinject_residual``) so Eq. 5 holds across drops.
     """
 
-    def __init__(self, client_round, splits, persistent, batch_size: int):
-        self.vround = jax.jit(jax.vmap(client_round,
-                                       in_axes=(None, 0, 0, 0, 0, 0, 0),
-                                       out_axes=0))
-        self.jround = jax.jit(client_round)
+    def __init__(self, client_round, splits, persistent, batch_size: int,
+                 executor: ClientExecutor | None = None):
+        self.executor = executor if executor is not None else VmapExecutor()
+        self.executor.bind(client_round)
         self.splits = splits
         self.persistent = persistent
         self.batch_size = batch_size
@@ -201,23 +212,39 @@ class LocalTrain:
             cx, cy = splits.client_x[idx], splits.client_y[idx]
             cvx, cvy = splits.client_val_x[idx], splits.client_val_y[idx]
             pers_c = gather_clients(self.persistent, idx)
-        out = self.vround(server, pers_c, cx, cy, cvx, cvy, batch_idx)
+        out = self.executor.run_shared(server, pers_c, cx, cy, cvx, cvy,
+                                       batch_idx)
         self.persistent = (out.persistent if full else
                            scatter_clients(self.persistent, out.persistent,
                                            idx))
         return out
 
-    def train_one(self, kb: jax.Array, client: int, server: ServerState):
-        """One client's round against ``server`` (async completions)."""
+    def train_window(self, kbs: list[jax.Array], clients: list[int],
+                     servers: list[ServerState]):
+        """One async dispatch window as ONE executor call.
+
+        Each client carries its own batch-shuffle key and the server
+        snapshot it was dispatched against (concurrently-finishing clients
+        may straddle an aggregation), so the batch runs through the
+        executor's stacked-server path — EXCEPT when every member was
+        dispatched against the same snapshot (the common regime: a whole
+        window of replacements issued after one aggregation), where the
+        broadcast path avoids materialising one server copy per client.
+        Returns the client-stacked RoundOutput in ``clients`` order.
+        """
+        idx = np.asarray(clients)
         splits = self.splits
-        bidx = epoch_batches(kb, self.n_train, self.batch_size)
-        pers_c = jax.tree.map(lambda x: x[client], self.persistent)
-        out = self.jround(server, pers_c,
-                          splits.client_x[client], splits.client_y[client],
-                          splits.client_val_x[client],
-                          splits.client_val_y[client], bidx)
-        self.persistent = jax.tree.map(lambda f, u: f.at[client].set(u),
-                                       self.persistent, out.persistent)
+        bidx = jnp.stack([epoch_batches(kb, self.n_train, self.batch_size)
+                          for kb in kbs])
+        args = (gather_clients(self.persistent, idx),
+                splits.client_x[idx], splits.client_y[idx],
+                splits.client_val_x[idx], splits.client_val_y[idx], bidx)
+        if all(s is servers[0] for s in servers[1:]):
+            out = self.executor.run_shared(servers[0], *args)
+        else:
+            out = self.executor.run_stacked(stack_trees(servers), *args)
+        self.persistent = scatter_clients(self.persistent, out.persistent,
+                                          idx)
         return out
 
     def reinject_residual(self, client: int, delta: Any) -> None:
@@ -399,23 +426,6 @@ class Uplink:
             payload_bytes=nbytes,
             metrics=self._metric_row(metrics, i))
             for i, (c, (nbytes, dec)) in enumerate(zip(clients, results))]
-
-    def intake_one(self, out, client: int) -> Contribution:
-        """Unstacked single-client RoundOutput (async completion)."""
-        if not self.transmit:
-            metrics = jax.device_get(out.metrics)
-            return Contribution(client=client,
-                                delta_params=out.recon_delta_params,
-                                delta_scales=out.recon_delta_scales,
-                                bn_state=out.bn_state,
-                                metrics=self._metric_row(metrics, None))
-        upd, metrics = self.fetch(out)
-        nbytes, dec = self._roundtrip(upd)
-        return Contribution(
-            client=client, delta_params=dec.params, delta_scales=dec.scales,
-            bn_state=dec.bn if self.spec.version == 2 else out.bn_state,
-            payload_bytes=nbytes,
-            metrics=self._metric_row(metrics, None))
 
 
 # ---------------------------------------------------------------- aggregate
@@ -632,7 +642,20 @@ class _InFlight:
 class BufferedAsyncScheduler(RoundScheduler):
     """FedBuff buffer: M concurrent clients, aggregate every B arrivals
     with staleness weights; heterogeneous latencies drive a simulated
-    wall-clock."""
+    wall-clock.
+
+    Completions are popped in **dispatch windows**: every in-flight client
+    whose compute-finish time lands within ``AsyncConfig.dispatch_window``
+    seconds of the earliest finisher trains in ONE executor call
+    (``LocalTrain.train_window`` — each row against the server snapshot it
+    started from).  ``dispatch_window=0`` (the default) pops exactly one
+    completion at a time — the pre-batching behaviour, ties included.
+    Contributions enter the buffer ordered by
+    ``(arrival_time, client_id)`` — a total order, so async runs are
+    reproducible across executor backends (arrival times are simulated,
+    never wall-clock).  A window that overfills the buffer aggregates the
+    whole buffer (the staleness weights renormalise).
+    """
 
     mode = "async"
 
@@ -654,10 +677,14 @@ class BufferedAsyncScheduler(RoundScheduler):
                 int(c), 0, engine.server,
                 self._dispatch_delay(int(c)) + float(self.latency[c])))
         self.key = key
-        # replacement for the completion that triggered the last aggregation
-        # is deferred until after the server step, so it trains from the
-        # newest version (otherwise every B-th dispatch starts one stale)
-        self.pending_dispatch = False
+        # replacements for the window that triggered the last aggregation
+        # are deferred until after the server step, so they train from the
+        # newest version (otherwise every buffer-filling dispatch starts
+        # one version stale)
+        self.pending_dispatch = 0
+        # executor-call batch sizes (benchmarks/cohort_scaling.py reads
+        # this for the async batch-fill ratio)
+        self.batch_sizes: list[int] = []
 
     def _dispatch_delay(self, client: int) -> float:
         """Model-download leg of a dispatch (channel mode only)."""
@@ -676,46 +703,74 @@ class BufferedAsyncScheduler(RoundScheduler):
             nxt, eng.version, eng.server,
             self.now + self._dispatch_delay(nxt) + float(self.latency[nxt])))
 
+    def _pop_window(self) -> list[_InFlight]:
+        """Every in-flight client finishing within ``dispatch_window`` of
+        the earliest finisher, in deterministic (finish, client) order.
+
+        ``dispatch_window=0`` pops exactly ONE completion — the
+        pre-batching FedBuff behaviour (buffer_size updates per
+        aggregation) even when latencies tie exactly (latency_sigma=0
+        would otherwise batch the whole in-flight set and silently bypass
+        the buffer size); ties break deterministically by client id."""
+        if self.acfg.dispatch_window <= 0.0:
+            e = min(self.in_flight, key=lambda f: (f.finish, f.client))
+            self.in_flight.remove(e)
+            return [e]
+        t0 = min(f.finish for f in self.in_flight)
+        window = sorted(
+            (f for f in self.in_flight
+             if f.finish <= t0 + self.acfg.dispatch_window),
+            key=lambda f: (f.finish, f.client))
+        for e in window:
+            self.in_flight.remove(e)
+        return window
+
     def next_round(self) -> RoundIntake:
         eng = self.eng
         buffer: list[Contribution] = []
         while True:
-            if self.pending_dispatch:
+            while self.pending_dispatch:
                 self._dispatch_one()
-                self.pending_dispatch = False
-            # pop the earliest-finishing client (concurrency is small); with
-            # a channel the upload leg is appended at pop time, so arrival
-            # order approximates compute-finish order (documented
+                self.pending_dispatch -= 1
+            # with a channel the upload leg is appended at pop time, so
+            # arrival order approximates compute-finish order (documented
             # simplification)
-            e = min(self.in_flight, key=lambda f: f.finish)
-            self.in_flight.remove(e)
-            c = e.client
-
-            self.key, kb = jax.random.split(self.key)
-            out = eng.local_train.train_one(kb, c, e.server)
-            contrib = eng.uplink.intake_one(out, c)
-            # arrival = compute finish + upload leg; clients pop in
-            # compute-finish order, so with heterogeneous uploads a later
-            # pop can carry an earlier arrival — clamp to keep the
-            # simulated clock monotone
-            arrival = e.finish + (
-                eng.channel.up_time(c, contrib.payload_bytes)
-                if eng.channel is not None else 0.0)
-            self.now = max(self.now, arrival)
-            contrib.staleness = eng.version - e.start_version
-            contrib.arrival_time = self.now
-            buffer.append(contrib)
-            self.available.add(c)
+            window = self._pop_window()
+            kbs = []
+            for _ in window:
+                self.key, kb = jax.random.split(self.key)
+                kbs.append(kb)
+            out = eng.local_train.train_window(
+                kbs, [e.client for e in window], [e.server for e in window])
+            self.batch_sizes.append(len(window))
+            contribs = eng.uplink.intake(out, [e.client for e in window])
+            for e, c in zip(window, contribs):
+                c.staleness = eng.version - e.start_version
+                c.arrival_time = e.finish + (
+                    eng.channel.up_time(e.client, c.payload_bytes)
+                    if eng.channel is not None else 0.0)
+                self.available.add(e.client)
+            # deterministic intake order: (arrival_time, client_id) is a
+            # total order, so ties (homogeneous latencies) cannot reorder
+            # across runs or executor backends; the clock clamp keeps
+            # recorded arrivals monotone when a heterogeneous upload leg
+            # inverts the compute-finish order
+            contribs.sort(key=lambda c: (c.arrival_time, c.client))
+            for c in contribs:
+                self.now = max(self.now, c.arrival_time)
+                c.arrival_time = self.now
+            buffer.extend(contribs)
 
             if len(buffer) >= self.acfg.buffer_size:
-                self.pending_dispatch = True
+                self.pending_dispatch = len(window)
                 w = normalized_staleness_weights(
                     [b.staleness for b in buffer],
                     self.acfg.staleness_exponent)
                 return RoundIntake(buffer, list(range(len(buffer))),
                                    weights=w, sim_time=self.now,
                                    receivers=self.concurrency)
-            self._dispatch_one()
+            for _ in window:
+                self._dispatch_one()
 
     def log_line(self, rec, intake: RoundIntake) -> str:
         stale = [c.staleness for c in intake.contributions]

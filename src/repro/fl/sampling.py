@@ -87,3 +87,21 @@ def gather_clients(tree: Any, idx: np.ndarray) -> Any:
 def scatter_clients(full: Any, cohort: Any, idx: np.ndarray) -> Any:
     """Write cohort rows back into the full client-stacked pytree."""
     return jax.tree.map(lambda f, c: f.at[idx].set(c), full, cohort)
+
+
+def pad_clients(tree: Any, total: int) -> Any:
+    """Pad the leading (client) axis up to ``total`` rows.
+
+    The sharded executor pads ragged cohorts to a multiple of the mesh size
+    by repeating the LAST client row — a real row, so the padded replicas
+    trace the same program without NaN/zero hazards — and drops the padded
+    rows from the output.  A tree already at (or beyond) ``total`` rows is
+    returned unchanged.
+    """
+    def pad(x):
+        n = x.shape[0]
+        if n >= total:
+            return x
+        return jnp.concatenate(
+            [x, jnp.repeat(x[-1:], total - n, axis=0)], axis=0)
+    return jax.tree.map(pad, tree)

@@ -1,7 +1,8 @@
 """Scenario registry: named, reproducible federated experiment settings.
 
 A Scenario composes the orthogonal engine axes — client sampling x server
-optimizer x sync/async x uni/bidirectional x full/partial updates x wire
+optimizer x sync/async (dispatch windows) x cohort executor backend x
+uni/bidirectional x full/partial updates x wire
 codec x channel x data heterogeneity (dirichlet) — on top of one of the
 Table-2 protocol rows.  Scenarios are frozen dataclasses keyed by name in
 ``SCENARIOS`` so benchmarks (`benchmarks/fl_convergence.py`), examples
@@ -54,8 +55,12 @@ class Scenario:
     buffer_size: int = 4
     concurrency: int = 4
     staleness_exponent: float = 0.5
+    dispatch_window: float = 0.0    # async: batch same-window finishers
     bidirectional: bool = False
     rounds: int = 3
+    # --- cohort execution backend (repro.fl.executors) ---
+    executor: str = "vmap"          # "serial" | "vmap" | "sharded"
+    mesh_shape: tuple[int, ...] | None = None  # sharded: 1-D cohort mesh
     # --- wire: codec x channel x schema (repro.comms) ---
     codec: str = "auto"             # registry name; "auto" = seed semantics
     channel: ChannelConfig | None = None
@@ -93,7 +98,10 @@ def build_engine(s: Scenario) -> EngineConfig:
         mode=s.mode,
         async_cfg=AsyncConfig(buffer_size=s.buffer_size,
                               concurrency=s.concurrency,
-                              staleness_exponent=s.staleness_exponent),
+                              staleness_exponent=s.staleness_exponent,
+                              dispatch_window=s.dispatch_window),
+        executor=s.executor,
+        mesh_shape=s.mesh_shape,
         bidirectional=s.bidirectional,
         codec=s.codec,
         channel=s.channel,
@@ -244,6 +252,21 @@ for _s in [
              "thread-pooled per-client wire round-trips (fp16 payloads "
              "release the GIL)",
              codec="fp16", uplink_workers=2),
+    # ---- cohort execution backends (repro.fl.executors) ----
+    Scenario("exec_serial_k4",
+             "per-client jit execution of the sync cohort (compiles once "
+             "for every cohort size; the equivalence-suite reference)",
+             cohort_size=4, executor="serial"),
+    Scenario("sharded_cohort_full",
+             "cohort axis sharded across every visible device "
+             "(NamedSharding over the vmapped client axis; ragged cohorts "
+             "pad to the mesh size)",
+             executor="sharded"),
+    Scenario("async_windowed_b4",
+             "buffered async with a 0.5 s dispatch window: concurrently "
+             "finishing clients train as ONE vmapped executor call",
+             mode="async", buffer_size=4, concurrency=4,
+             dispatch_window=0.5),
 ]:
     register(_s)
 del _s

@@ -15,3 +15,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape: tuple, axes: tuple):
     """Arbitrary mesh (tests use small host-device meshes)."""
     return jax.make_mesh(shape, axes)
+
+
+def make_cohort_mesh(mesh_shape: tuple[int, ...] | None = None,
+                     axis: str = "clients"):
+    """1-D mesh over the federated cohort axis (fl.executors sharded backend).
+
+    ``mesh_shape=None`` takes every visible device; an explicit shape must
+    be 1-D (the cohort axis is the only thing sharded) and fit the visible
+    device count — ``EngineConfig.validate`` checks both up front so bad
+    shapes fail at Scenario registration, not mid-run.
+    """
+    if mesh_shape is None:
+        mesh_shape = (len(jax.devices()),)
+    if len(mesh_shape) != 1:
+        raise ValueError(
+            f"cohort mesh is 1-D (the client axis); got shape {mesh_shape!r}")
+    return jax.make_mesh(tuple(mesh_shape), (axis,))

@@ -24,10 +24,11 @@ from repro import comms
 from repro.core import fsfl as fsfl_lib
 from repro.core.protocol import ProtocolConfig
 from repro.data import federated, synthetic
-from repro.fl import (Aggregate, BufferedAsyncScheduler, Contribution,
-                      EngineConfig, FederatedEngine, RoundRecord, RunResult,
-                      SamplingConfig, Scenario, ServerStep, SyncScheduler,
-                      Uplink, run_simulation, validate_scenario)
+from repro.fl import (Aggregate, AsyncConfig, BufferedAsyncScheduler,
+                      Contribution, EngineConfig, FederatedEngine,
+                      RoundRecord, RunResult, SamplingConfig, Scenario,
+                      ServerStep, SyncScheduler, Uplink, run_simulation,
+                      validate_scenario)
 from repro.fl import engine as engine_lib
 from repro.models import cnn
 
@@ -351,9 +352,13 @@ def test_engine_config_validate_rejects_unknown_mode():
         EngineConfig(uplink_executor="greenlet").validate()
     with pytest.raises(ValueError, match=">= 0"):
         EngineConfig(uplink_workers=-1).validate()
-    # a pool on the async path would be a silent no-op — reject it
+    # a pool on the one-completion-at-a-time async path (dispatch_window=0)
+    # would still be a silent no-op — rejected; dispatch windows batch
+    # completions through the pooled Uplink.intake, so window > 0 unlocks it
     with pytest.raises(ValueError, match="no-op"):
         EngineConfig(mode="async", uplink_workers=2).validate()
+    EngineConfig(mode="async", uplink_workers=2,
+                 async_cfg=AsyncConfig(dispatch_window=0.5)).validate()
     EngineConfig(sampling=SamplingConfig(cohort_size=3)).validate(8)
 
 

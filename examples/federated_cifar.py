@@ -43,6 +43,10 @@ def main():
     ap.add_argument("--uplink-workers", type=int, default=None,
                     help="parallel per-client wire encode+decode "
                          "(scenario runs only)")
+    ap.add_argument("--uplink-batch", action="store_true",
+                    help="cohort-batched uplink: code the whole cohort "
+                         "through the codec batch API in <= workers pool "
+                         "tasks (scenario runs only)")
     ap.add_argument("--executor", choices=("serial", "vmap", "sharded"),
                     default=None,
                     help="cohort execution backend: per-client jit loop, "
@@ -55,8 +59,10 @@ def main():
     scenario = get_scenario(args.scenario) if args.scenario else None
     if scenario is None and (args.wire_schema is not None
                              or args.uplink_workers is not None
+                             or args.uplink_batch
                              or args.executor is not None):
-        ap.error("--wire-schema/--uplink-workers/--executor need --scenario")
+        ap.error("--wire-schema/--uplink-workers/--uplink-batch/--executor "
+                 "need --scenario")
     if args.clients is None:
         args.clients = scenario.num_clients if scenario else 4
     if args.rounds is None and scenario is None:
@@ -79,6 +85,8 @@ def main():
         if args.uplink_workers is not None:
             scenario = dataclasses.replace(scenario,
                                            uplink_workers=args.uplink_workers)
+        if args.uplink_batch:
+            scenario = dataclasses.replace(scenario, uplink_batch=True)
         if args.executor is not None:
             scenario = dataclasses.replace(scenario, executor=args.executor)
         res = run_scenario(scenario, rounds=args.rounds,

@@ -19,8 +19,10 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
-  echo "== codec smoke: registry ladder, round-trip verified =="
-  python benchmarks/compression.py --smoke
+  echo "== codec smoke: registry ladder + cabac engine guard (two-pass =="
+  echo "== vectorized >=3x serial encode, batched uplink wins at K=32) =="
+  python benchmarks/compression.py --smoke --engine both --guard \
+    --out /tmp/BENCH_cabac_smoke.json
 
   echo "== engine throughput smoke: parallel uplink + round wall-clock =="
   python benchmarks/engine_throughput.py --smoke --out /tmp/BENCH_engine_smoke.json >/dev/null

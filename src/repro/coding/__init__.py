@@ -1,4 +1,7 @@
 """DeepCABAC/NNC-style host codec for quantized differential updates."""
-from repro.coding.nnc import decode_tree, encode_tree, encoded_bytes, shapes_of
+from repro.coding.errors import CorruptPayloadError
+from repro.coding.nnc import (decode_tree, decode_tree_batch, encode_tree,
+                              encode_tree_batch, encoded_bytes, shapes_of)
 
-__all__ = ["decode_tree", "encode_tree", "encoded_bytes", "shapes_of"]
+__all__ = ["CorruptPayloadError", "decode_tree", "decode_tree_batch",
+           "encode_tree", "encode_tree_batch", "encoded_bytes", "shapes_of"]

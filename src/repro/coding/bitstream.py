@@ -11,6 +11,18 @@ from __future__ import annotations
 import numpy as np
 
 
+# per-width MSB-first shift vectors, cached: put_uint runs several times per
+# tensor on the encode hot path and np.arange dominated its cost
+_SHIFTS: dict[int, np.ndarray] = {}
+
+
+def _shifts(width: int) -> np.ndarray:
+    s = _SHIFTS.get(width)
+    if s is None:
+        s = _SHIFTS[width] = np.arange(width - 1, -1, -1, dtype=np.int64)
+    return s
+
+
 class BitWriter:
     def __init__(self) -> None:
         self._chunks: list[np.ndarray] = []  # uint8 arrays of 0/1 bits
@@ -25,7 +37,7 @@ class BitWriter:
 
     def put_uint(self, value: int, width: int) -> None:
         """Fixed-width big-endian unsigned integer."""
-        bits = (value >> np.arange(width - 1, -1, -1)) & 1
+        bits = (value >> _shifts(width)) & 1
         self._chunks.append(bits.astype(np.uint8))
 
     @property
@@ -44,6 +56,8 @@ class BitReader:
         raw = np.frombuffer(data, np.uint8)
         self._bits = np.unpackbits(raw)
         self._pos = 0
+        self._ones: np.ndarray | None = None
+        self._csum: np.ndarray | None = None
 
     def get_bit(self) -> int:
         b = int(self._bits[self._pos])
@@ -59,8 +73,37 @@ class BitReader:
 
     def get_uint(self, width: int) -> int:
         bits = self.get_bits(width)
-        return int(bits.dot(1 << np.arange(width - 1, -1, -1, dtype=np.int64)))
+        return int(bits.dot(1 << _shifts(width)))
 
     @property
     def bits_remaining(self) -> int:
         return int(self._bits.size - self._pos)
+
+    # -- block access (package-internal) ------------------------------------
+    # The vectorized exp-Golomb decoder (repro.coding.golomb.decode_egk)
+    # parses many codewords from the underlying bit array in one pass; it
+    # reads ``raw_bits``/``tell`` and commits its final cursor via ``seek``.
+
+    @property
+    def raw_bits(self) -> np.ndarray:
+        return self._bits
+
+    def ones_index(self) -> tuple[np.ndarray, np.ndarray]:
+        """(set-bit positions, cumulative-ones prefix) over the WHOLE bit
+        array, built once per reader: the bits are immutable, and a
+        multi-section message would otherwise pay a full-stream rescan for
+        every exp-Golomb section it decodes."""
+        if self._ones is None:
+            self._ones = np.flatnonzero(self._bits)
+            csum = np.zeros(self._bits.size + 1, np.int64)
+            np.cumsum(self._bits, out=csum[1:])
+            self._csum = csum
+        return self._ones, self._csum
+
+    def tell(self) -> int:
+        return self._pos
+
+    def seek(self, pos: int) -> None:
+        if not 0 <= pos <= self._bits.size:
+            raise EOFError("bitstream exhausted")
+        self._pos = pos

@@ -4,10 +4,32 @@ This is the "CABAC" engine of our DeepCABAC-like NNC codec: context-adaptive
 probabilities (11-bit, shift-adapted) with carry-correct byte renormalisation.
 Bypass (p=0.5) bins live in a separate raw bitstream (see bitstream.py) so
 they can be vectorised; only context-coded bins pass through this engine.
+
+Two engines share the bit-exact stream format:
+
+* the **serial reference** (:class:`Encoder`/:class:`Decoder.decode_bit`):
+  one Python call per bin — the oracle every fast path is differentially
+  tested against (tests/test_cabac_differential.py), never dead code;
+* the **two-pass vectorized encoder** (:func:`encode_context_bins`): pass 1
+  derives every bin's probability state with numpy — the 11-bit
+  shift-adaptation recurrence depends only on each context's own bin
+  subsequence, so it is a per-context scan over precomputed transition
+  orbits (:func:`context_state_sequence`), vectorised over runs of equal
+  bits.  Pass 2 (:func:`range_encode_bins`) is the only remaining loop: the
+  carry-correct renormalisation with the probability already in hand —
+  byte-for-byte identical to the reference encoder.
+
+The decoder cannot precompute states (each decoded bit feeds the next
+state), but :meth:`Decoder.decode_bits` decodes a whole same-context block
+per call with local-variable state — bit-exactly the repeated
+``decode_bit`` — which is what makes the fast NNC decode path
+(`repro.coding.nnc`) competitive with the vectorized encoder.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.coding.errors import CorruptPayloadError
 
 _TOP = 1 << 24
 _BOT = 1 << 11  # probability scale (2048)
@@ -66,9 +88,16 @@ class Encoder:
 
 
 class Decoder:
-    def __init__(self, data: bytes) -> None:
+    """Range decoder.  ``strict=True`` raises :class:`CorruptPayloadError`
+    instead of zero-filling when the coded stream is exhausted: a
+    well-formed stream is consumed *exactly* (the encoder's 5-shift flush
+    emits every byte the decoder's init+renormalisations will read), so any
+    overrun proves truncation or a corrupted length header."""
+
+    def __init__(self, data: bytes, strict: bool = False) -> None:
         self.data = data
         self.pos = 0
+        self.strict = strict
         self.range = 0xFFFFFFFF
         self.code = 0
         for _ in range(5):
@@ -76,7 +105,14 @@ class Decoder:
         self.code &= 0xFFFFFFFF
 
     def _next_byte(self) -> int:
-        b = self.data[self.pos] if self.pos < len(self.data) else 0
+        if self.pos < len(self.data):
+            b = self.data[self.pos]
+        elif self.strict:
+            raise CorruptPayloadError(
+                f"cabac stream exhausted at byte {self.pos} "
+                f"(stream is {len(self.data)} bytes)")
+        else:
+            b = 0
         self.pos += 1
         return b
 
@@ -96,3 +132,205 @@ class Decoder:
             self.range = (self.range << 8) & 0xFFFFFFFF
             self.code = ((self.code << 8) | self._next_byte()) & 0xFFFFFFFF
         return bit
+
+    def decode_bits(self, ctxs: ContextSet, idx: int, n: int) -> np.ndarray:
+        """Decode ``n`` consecutive bins of ONE context in a tight loop.
+
+        Bit-exactly ``[self.decode_bit(ctxs, idx) for _ in range(n)]`` —
+        the probability state, range and code walk the identical sequence —
+        but with all coder state in locals, so the per-bin cost is a
+        fraction of the method-dispatch + numpy-scalar-indexing reference
+        path.  Returns a uint8 array of the decoded bits.
+        """
+        if n <= 0:
+            return np.zeros(0, np.uint8)
+        out = bytearray(n)
+        p = int(ctxs.p[idx])
+        rng = self.range
+        code = self.code
+        data = self.data
+        pos = self.pos
+        dlen = len(data)
+        strict = self.strict
+        top, m32, bot = _TOP, 0xFFFFFFFF, _BOT
+        for i in range(n):
+            bound = (rng >> 11) * p
+            if code < bound:
+                rng = bound
+                p += (bot - p) >> 5
+            else:
+                out[i] = 1
+                code -= bound
+                rng -= bound
+                p -= p >> 5
+            while rng < top:
+                rng = (rng << 8) & m32
+                if pos < dlen:
+                    b = data[pos]
+                elif strict:
+                    self.pos = pos
+                    raise CorruptPayloadError(
+                        f"cabac stream exhausted at byte {pos} "
+                        f"(stream is {dlen} bytes)")
+                else:
+                    b = 0
+                pos += 1
+                code = ((code << 8) | b) & m32
+        ctxs.p[idx] = p
+        self.range = rng
+        self.code = code
+        self.pos = pos
+        return np.frombuffer(bytes(out), np.uint8)
+
+
+# ===========================================================================
+# two-pass vectorized encoder
+# ===========================================================================
+#
+# The adaptation recurrence  p' = p + ((2048-p)>>5)   (bit 0)
+#                            p' = p - (p>>5)          (bit 1)
+# touches only the 11-bit state of the bin's OWN context, so the state every
+# bin sees is a function of that context's bin subsequence alone — pass 1
+# computes it without touching the range coder.  Within a run of equal bits
+# the states walk a fixed orbit of the per-bit transition map; orbits reach
+# their fixed point in <~150 steps, so one precomputed (2, 2048, cap+1)
+# table turns the whole scan into a run-length pass: one table lookup per
+# run for the carry-over state, one fancy-indexed gather for every bin.
+
+_ORBIT: np.ndarray | None = None     # (2, _BOT, cap+1) int32
+_ORBIT_CAP: int = 0
+_ORBIT_END: list | None = None       # nested-list view for the scalar walk
+
+
+def _orbit_tables() -> tuple[np.ndarray, int]:
+    global _ORBIT, _ORBIT_CAP
+    if _ORBIT is None:
+        p = np.arange(_BOT, dtype=np.int32)
+        nxt = np.stack([p + ((_BOT - p) >> _ADAPT_SHIFT),
+                        p - (p >> _ADAPT_SHIFT)])
+        cols = [np.stack([p, p])]
+        while True:
+            cur = cols[-1]
+            step = np.stack([nxt[0][cur[0]], nxt[1][cur[1]]])
+            if np.array_equal(step, cur):   # every orbit at its fixed point
+                break
+            cols.append(step)
+        _ORBIT = np.ascontiguousarray(np.stack(cols, axis=-1))
+        _ORBIT_CAP = len(cols) - 1
+    return _ORBIT, _ORBIT_CAP
+
+
+def _orbit_end() -> list:
+    """``orbit`` as nested Python lists: the run-to-run carry walk does one
+    scalar lookup per run, and list indexing is ~5x a numpy scalar index."""
+    global _ORBIT_END
+    if _ORBIT_END is None:
+        _ORBIT_END = _orbit_tables()[0].tolist()
+    return _ORBIT_END
+
+
+def context_state_sequence(bits: np.ndarray) -> np.ndarray:
+    """Pass 1 for ONE context: the probability state each bin is coded with.
+
+    ``bits`` is the context's bin subsequence (in coding order);  returns an
+    int32 array of the same length holding the state *before* each bin —
+    exactly the ``p`` the serial ``encode_bit``/``decode_bit`` would read.
+    Vectorised over runs of equal bits via the precomputed transition
+    orbits; the only Python loop is one table lookup per run.
+    """
+    bits = np.asarray(bits, np.uint8)
+    n = bits.size
+    if n == 0:
+        return np.zeros(0, np.int32)
+    orbit, cap = _orbit_tables()
+    boundaries = np.flatnonzero(np.diff(bits)) + 1
+    starts = np.concatenate(([0], boundaries))
+    lens = np.diff(np.concatenate((starts, [n])))
+    run_bits = bits[starts].astype(np.intp)
+    # carry the state across runs: one orbit-endpoint lookup per run
+    end = _orbit_end()
+    p = _INIT_P
+    run_p = []
+    for b, h in zip(run_bits.tolist(), np.minimum(lens, cap).tolist()):
+        run_p.append(p)
+        p = end[b][p][h]
+    run_p = np.asarray(run_p, np.intp)
+    # gather every bin's state from its run's orbit
+    t = np.arange(n) - np.repeat(starts, lens)
+    np.minimum(t, cap, out=t)        # beyond cap the orbit sits at its
+    return orbit[np.repeat(run_bits, lens),   # fixed point (= column cap)
+                 np.repeat(run_p, lens), t]
+
+
+def range_encode_bins(bits: np.ndarray, probs: np.ndarray) -> bytes:
+    """Pass 2: carry-correct range coding with precomputed probabilities.
+
+    Byte-for-byte identical to feeding the (bit, state) pairs through the
+    reference :class:`Encoder` — same bound arithmetic, same
+    renormalisation, same 5-shift flush — but the loop body is only the
+    range/low bookkeeping (the context model was fully resolved in pass 1).
+    """
+    low = 0
+    rng = 0xFFFFFFFF
+    cache = 0
+    cache_size = 1
+    out = bytearray()
+    append = out.append
+    extend = out.extend
+    top, m32, hi, of = _TOP, 0xFFFFFFFF, 0xFF000000, 0x100000000
+    # one packed (state << 1 | bit) int per bin: a single tolist() and a
+    # single loop variable measurably beat a zip of two converted arrays
+    packed = ((probs.astype(np.int64) << 1)
+              | np.asarray(bits, np.int64)).tolist()
+    for v in packed:
+        bound = (rng >> 11) * (v >> 1)
+        if v & 1:
+            low += bound
+            rng -= bound
+        else:
+            rng = bound
+        while rng < top:
+            rng = (rng << 8) & m32
+            if low < hi or low >= of:
+                carry = low >> 32
+                append((cache + carry) & 0xFF)
+                if cache_size > 1:
+                    extend(((0xFF + carry) & 0xFF).to_bytes(1, "big")
+                           * (cache_size - 1))
+                cache_size = 0
+                cache = (low >> 24) & 0xFF
+            cache_size += 1
+            low = (low << 8) & m32
+    for _ in range(5):          # flush (identical to Encoder.finish)
+        if low < hi or low >= of:
+            carry = low >> 32
+            append((cache + carry) & 0xFF)
+            if cache_size > 1:
+                extend(((0xFF + carry) & 0xFF).to_bytes(1, "big")
+                       * (cache_size - 1))
+            cache_size = 0
+            cache = (low >> 24) & 0xFF
+        cache_size += 1
+        low = (low << 8) & m32
+    return bytes(out)
+
+
+def encode_context_bins(ctx_ids: np.ndarray, bits: np.ndarray,
+                        num_ctx: int) -> bytes:
+    """Two-pass vectorized encode of an entire context-coded bin stream.
+
+    ``ctx_ids``/``bits`` describe every bin of one message in coding order.
+    Contexts are independent in pass 1 (each state depends only on its own
+    subsequence), so the scan runs per context and the states scatter back
+    into stream order for the single pass-2 loop.
+    """
+    ctx_ids = np.asarray(ctx_ids, np.uint8)
+    bits = np.asarray(bits, np.uint8)
+    if ctx_ids.shape != bits.shape:
+        raise ValueError("ctx_ids and bits must be parallel arrays")
+    probs = np.empty(bits.size, np.int32)
+    for c in range(num_ctx):
+        sel = ctx_ids == c
+        if sel.any():
+            probs[sel] = context_state_sequence(bits[sel])
+    return range_encode_bins(bits, probs)

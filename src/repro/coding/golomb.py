@@ -1,15 +1,22 @@
-"""Exponential-Golomb codes (order-k), vectorised encode.
+"""Exponential-Golomb codes (order-k), vectorised both directions.
 
 DeepCABAC binarises quantization-level remainders with exp-Golomb codes whose
 bins are bypass-coded; STC's position coding is Golomb as well.  Encoding is
-fully vectorised (bit matrix assembly in numpy); decoding walks the bitstream
-sequentially (only used for round-trip verification and server decode).
+fully vectorised (bit matrix assembly in numpy).  :func:`decode_egk` parses
+all ``count`` codewords in one pass over the underlying bit array: a cheap
+integer walk finds each codeword's boundary (O(1) per codeword via the
+cumulative-ones index), then one fancy-indexed gather extracts every value —
+this is the server-decode hot path under the vectorized NNC engine.
+:func:`decode_egk_ref` keeps the original bit-by-bit walk as the reference
+the fast parser is differentially tested against.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.coding.bitstream import BitReader, BitWriter
+
+_MAX_CODE_BITS = 63   # value bits fit int64; longer prefixes prove corruption
 
 
 def egk_bit_length(values: np.ndarray, k: int) -> np.ndarray:
@@ -31,26 +38,33 @@ def choose_k(values: np.ndarray) -> int:
 
 
 def encode_egk(writer: BitWriter, values: np.ndarray, k: int) -> None:
-    """Vectorised order-k exp-Golomb encode of unsigned ints."""
+    """Vectorised order-k exp-Golomb encode of unsigned ints.
+
+    Single-pass bit-matrix assembly: every codeword's value bits are
+    extracted with one broadcast shift and scattered with one fancy-indexed
+    store (the old per-bit-position loop paid numpy call overhead
+    ``nbits.max()`` times over)."""
     if values.size == 0:
         return
     v = values.astype(np.int64) + (1 << k)
     nbits = np.floor(np.log2(v)).astype(np.int64) + 1
     total = 2 * nbits - k - 1  # prefix (nbits-k-1 zeros) + nbits value bits
-    # Assemble all codewords into one flat bit array.
-    lengths = total
-    offsets = np.concatenate([[0], np.cumsum(lengths)[:-1]])
-    out = np.zeros(int(lengths.sum()), np.uint8)
-    # value bits are written MSB-first at the end of each codeword
-    for bit in range(int(nbits.max())):
-        # bit position from LSB
-        has = nbits > bit
-        pos = offsets + lengths - 1 - bit  # LSB at the last slot
-        out[pos[has]] = (v[has] >> bit) & 1
+    offsets = np.cumsum(total) - total
+    out = np.zeros(int(total.sum()), np.uint8)
+    vstart = offsets + total - nbits   # value bits end each codeword
+    # group codewords by bit length: every group shares one rectangular
+    # (count, nb) layout, so the whole section assembles with ~log(vmax)
+    # dense fancy stores and no ragged masking temporaries
+    for nb in np.unique(nbits).tolist():
+        idx = np.flatnonzero(nbits == nb)
+        cols = np.arange(nb)
+        bits_mat = (v[idx, None] >> (nb - 1 - cols)[None, :]) & 1
+        out[vstart[idx, None] + cols[None, :]] = bits_mat
     writer.put_bits(out)
 
 
-def decode_egk(reader: BitReader, count: int, k: int) -> np.ndarray:
+def decode_egk_ref(reader: BitReader, count: int, k: int) -> np.ndarray:
+    """Reference bit-by-bit decode (the fast parser's differential oracle)."""
     out = np.empty(count, np.int64)
     for i in range(count):
         zeros = 0
@@ -63,3 +77,51 @@ def decode_egk(reader: BitReader, count: int, k: int) -> np.ndarray:
         v = (1 << (nbits - 1)) | rest
         out[i] = v - (1 << k)
     return out
+
+
+def decode_egk(reader: BitReader, count: int, k: int) -> np.ndarray:
+    """Vectorised order-k exp-Golomb decode of ``count`` values.
+
+    Phase 1 walks codeword boundaries with plain ints: the prefix of
+    codeword *i* ends at the first set bit at or after its start, found in
+    O(1) from the cumulative-ones index (value bits may contain ones, so a
+    simple "next one" pointer would not do).  Phase 2 gathers all value
+    bits in one fancy-indexed matrix multiply.  Bit-exact with
+    :func:`decode_egk_ref`; raises ``EOFError`` on a truncated stream and
+    ``ValueError`` on codewords too long to be well-formed.
+    """
+    if count == 0:
+        return np.empty(0, np.int64)
+    bits = reader.raw_bits
+    nbits_total = bits.size
+    # whole-stream set-bit index, built once per reader (immutable bits):
+    # csum[i] = ones in bits[:i] -> index into `ones` of the first set bit
+    # at position >= i
+    ones, csum = reader.ones_index()
+    starts = np.empty(count, np.int64)
+    nbits = np.empty(count, np.int64)
+    s = reader.tell()
+    try:
+        for i in range(count):
+            z = ones[csum[s]]           # first 1 at/after s ends the prefix
+            nb = (z - s) + k + 1
+            starts[i] = z
+            nbits[i] = nb
+            s = z + nb
+    except IndexError:
+        raise EOFError("bitstream exhausted") from None
+    if s > nbits_total:
+        raise EOFError("bitstream exhausted")
+    maxnb = int(nbits.max())
+    if maxnb > _MAX_CODE_BITS:
+        raise ValueError(f"exp-Golomb codeword of {maxnb} bits (corrupt)")
+    # value bits are MSB-first starting at each codeword's first set bit
+    cols = np.arange(maxnb)
+    idx = starts[:, None] + cols[None, :]
+    valid = cols[None, :] < nbits[:, None]
+    mat = bits[np.minimum(idx, nbits_total - 1)] * valid
+    weights = np.where(valid, 1 << np.maximum(nbits[:, None] - 1 - cols, 0),
+                       0)
+    v = (mat.astype(np.int64) * weights).sum(axis=1)
+    reader.seek(s)
+    return v - (1 << k)

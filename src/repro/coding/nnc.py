@@ -15,22 +15,54 @@ Per tensor (leaves visited in sorted-path order, shapes known to both sides):
 
 Contexts persist across tensors of one message (adaptive across the update).
 The decoder reproduces levels exactly; tests assert bit-exact round-trips.
+
+Two engines produce THE SAME bytes:
+
+  * ``engine="vectorized"`` (default): the two-pass coder — per-tensor bin
+    extraction stays array-shaped, pass 1 resolves every bin's probability
+    state with the per-context numpy scan (``cabac.context_state_sequence``)
+    and pass 2 is the single precomputed-probability range-coder loop
+    (``cabac.range_encode_bins``).  Decode walks same-context bin blocks
+    through ``Decoder.decode_bits`` and parses exp-Golomb sections with the
+    vectorised ``golomb.decode_egk``.
+  * ``engine="serial"``: the original one-call-per-bin reference coder.  It
+    is the ORACLE the vectorized engine is differentially tested against
+    (tests/test_cabac_differential.py) — kept runnable, never dead code.
+
+Decoding validates the frame: truncated payloads, inconsistent length
+headers, range-decoder overrun, and framing-invariant violations raise
+:class:`repro.coding.errors.CorruptPayloadError` instead of zero-filling
+or escaping as ``IndexError``.  ``encode_tree_batch``/``decode_tree_batch``
+code a whole cohort of messages against ONE shared shapes view (paths
+formatted and sorted once) — the host half of the batched uplink API.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Sequence
 
 import numpy as np
 
 from repro.coding import golomb
 from repro.coding.bitstream import BitReader, BitWriter
-from repro.coding.cabac import ContextSet, Decoder, Encoder
+from repro.coding.cabac import (ContextSet, Decoder, Encoder,
+                                encode_context_bins)
+from repro.coding.errors import CorruptPayloadError
 
 # context ids
 CTX_ROW_SKIP = 0
 CTX_GT1 = 1
 CTX_GT2 = 2
 NUM_CTX = 3
+
+DEFAULT_ENGINE = "vectorized"
+_ENGINES = ("vectorized", "serial")
+
+
+def _check_engine(engine: str) -> str:
+    if engine not in _ENGINES:
+        raise ValueError(f"unknown nnc engine {engine!r} "
+                         f"(known: {', '.join(_ENGINES)})")
+    return engine
 
 
 def leaves_with_paths(tree: Any):
@@ -52,9 +84,15 @@ _leaves_with_paths = leaves_with_paths  # old private name
 
 def _as_rows(arr: np.ndarray) -> np.ndarray:
     if arr.ndim >= 2:
-        return arr.reshape(arr.shape[0], -1)
+        # explicit row length: reshape(m, -1) is ambiguous for empty tensors
+        m = arr.shape[0]
+        return arr.reshape(m, arr.size // m if m else 0)
     return arr.reshape(1, -1)
 
+
+# ===========================================================================
+# serial reference coder (the differential oracle)
+# ===========================================================================
 
 def encode_tensor(levels: np.ndarray, enc: Encoder, ctx: ContextSet, bypass: BitWriter) -> None:
     rows = _as_rows(np.asarray(levels, np.int64))
@@ -88,53 +126,206 @@ def encode_tensor(levels: np.ndarray, enc: Encoder, ctx: ContextSet, bypass: Bit
     for f in gt2:
         enc.encode_bit(ctx, CTX_GT2, int(f))
     rem = mg1[gt2] - 3
-    k_rem = golomb.choose_k(rem)
+    # degenerate framing pin: with no >2 magnitudes there are no remainder
+    # codewords, but the 4-bit k header is still part of the frame — it is
+    # ALWAYS written (as 0) and the decoder requires it to be 0, instead of
+    # both sides silently relying on choose_k([]) == 0
+    k_rem = golomb.choose_k(rem) if rem.size else 0
     bypass.put_uint(k_rem, 4)
     golomb.encode_egk(bypass, rem, k_rem)
 
 
-def decode_tensor(shape: tuple, enc_dec: Decoder, ctx: ContextSet, bypass: BitReader) -> np.ndarray:
+def _decode_tensor_ref(shape: tuple, enc_dec: Decoder, ctx: ContextSet,
+                       bypass: BitReader) -> np.ndarray:
+    """Reference bin-by-bin decode (differential oracle for the fast path)."""
     ndim = len(shape)
     size = int(np.prod(shape)) if shape else 1
     m = shape[0] if ndim >= 2 else 1
-    row_len = size // m
+    row_len = size // m if m else 0
     structured = ndim >= 2
     if structured:
-        nz_rows = np.array([enc_dec.decode_bit(ctx, CTX_ROW_SKIP) for _ in range(m)], bool)
+        nz_rows = np.array([enc_dec.decode_bit(ctx, CTX_ROW_SKIP)
+                            for _ in range(m)], bool).reshape(m)
         kept_len = int(nz_rows.sum()) * row_len
     else:
         nz_rows = np.ones(1, bool)
         kept_len = size
     nnz = bypass.get_uint(32)
+    _check_nnz(nnz, kept_len)
+    kept = np.zeros(kept_len, np.int64)
+    if nnz > 0:
+        k_run = bypass.get_uint(4)
+        gaps = golomb.decode_egk_ref(bypass, nnz, k_run)
+        idx = np.cumsum(gaps + 1) - 1
+        _check_positions(idx, kept_len)
+        signs = bypass.get_bits(nnz).astype(np.int64)
+        mags = np.ones(nnz, np.int64)
+        gt1 = np.array([enc_dec.decode_bit(ctx, CTX_GT1)
+                        for _ in range(nnz)], bool)
+        n1 = int(gt1.sum())
+        gt2 = np.array([enc_dec.decode_bit(ctx, CTX_GT2)
+                        for _ in range(n1)], bool)
+        n2 = int(gt2.sum())
+        mg1 = np.full(n1, 2, np.int64)
+        k_rem = bypass.get_uint(4)  # always framed when nnz>0
+        _check_k_rem(k_rem, n2)
+        if n2:
+            rem = golomb.decode_egk_ref(bypass, n2, k_rem)
+            mg1[gt2] = rem + 3
+        mags[gt1] = mg1
+        kept[idx] = np.where(signs == 1, -mags, mags)
+    return _reassemble(shape, m, row_len, nz_rows, kept)
+
+
+# ===========================================================================
+# vectorized two-pass engine
+# ===========================================================================
+
+def _plan_tensor(levels: np.ndarray, bypass: BitWriter,
+                 bin_chunks: list[tuple[int, np.ndarray]]) -> None:
+    """Pass-1 bin extraction for one tensor: the vectorized twin of
+    :func:`encode_tensor`.  Appends ``(context, bits)`` chunks in coding
+    order and writes the (already vectorised) bypass sections.  Identical
+    bits to the reference path, but no full-tensor int64 copy and no kept
+    copy when every row survives — only the nonzero values are widened.
+    """
+    rows = _as_rows(np.asarray(levels))
+    structured = levels.ndim >= 2
+    if structured:
+        nz_rows = rows.any(axis=1)
+        bin_chunks.append((CTX_ROW_SKIP, nz_rows))
+        kept = (rows.reshape(-1) if nz_rows.all()
+                else rows[nz_rows].reshape(-1))
+    else:
+        kept = rows.reshape(-1)
+    nnz_idx = np.flatnonzero(kept)
+    bypass.put_uint(len(nnz_idx), 32)
+    if len(nnz_idx) == 0:
+        return
+    gaps = np.diff(nnz_idx, prepend=-1) - 1
+    k_run = golomb.choose_k(gaps)
+    bypass.put_uint(k_run, 4)
+    golomb.encode_egk(bypass, gaps, k_run)
+    vals = kept[nnz_idx].astype(np.int64)
+    mags = np.abs(vals)
+    bypass.put_bits((vals < 0).astype(np.uint8))
+    gt1 = mags > 1
+    bin_chunks.append((CTX_GT1, gt1))
+    mg1 = mags[gt1]
+    gt2 = mg1 > 2
+    bin_chunks.append((CTX_GT2, gt2))
+    rem = mg1[gt2] - 3
+    k_rem = golomb.choose_k(rem) if rem.size else 0   # framing pin (above)
+    bypass.put_uint(k_rem, 4)
+    golomb.encode_egk(bypass, rem, k_rem)
+
+
+def _encode_leaves(leaves: Sequence[np.ndarray]) -> bytes:
+    """Two-pass encode of ordered level tensors into one NNC message."""
+    bypass = BitWriter()
+    bin_chunks: list[tuple[int, np.ndarray]] = []
+    for leaf in leaves:
+        _plan_tensor(np.asarray(leaf), bypass, bin_chunks)
+    total = sum(c.size for _, c in bin_chunks)
+    ctx_ids = np.empty(total, np.uint8)
+    bits = np.empty(total, np.uint8)
+    off = 0
+    for c, chunk in bin_chunks:
+        n = chunk.size
+        ctx_ids[off:off + n] = c
+        bits[off:off + n] = chunk
+        off += n
+    cab = encode_context_bins(ctx_ids, bits, NUM_CTX)
+    byp = bypass.to_bytes()
+    header = len(cab).to_bytes(8, "big") + len(byp).to_bytes(8, "big")
+    return header + cab + byp
+
+
+def decode_tensor(shape: tuple, enc_dec: Decoder, ctx: ContextSet,
+                  bypass: BitReader) -> np.ndarray:
+    """Fast decode of one tensor: same-context bin blocks decode through
+    ``Decoder.decode_bits`` (bit-exactly the reference per-bin walk) and
+    the exp-Golomb sections parse vectorised."""
+    ndim = len(shape)
+    size = int(np.prod(shape)) if shape else 1
+    m = shape[0] if ndim >= 2 else 1
+    row_len = size // m if m else 0
+    structured = ndim >= 2
+    if structured:
+        nz_rows = enc_dec.decode_bits(ctx, CTX_ROW_SKIP, m).astype(bool)
+        kept_len = int(nz_rows.sum()) * row_len
+    else:
+        nz_rows = np.ones(1, bool)
+        kept_len = size
+    nnz = bypass.get_uint(32)
+    _check_nnz(nnz, kept_len)
     kept = np.zeros(kept_len, np.int64)
     if nnz > 0:
         k_run = bypass.get_uint(4)
         gaps = golomb.decode_egk(bypass, nnz, k_run)
         idx = np.cumsum(gaps + 1) - 1
+        _check_positions(idx, kept_len)
         signs = bypass.get_bits(nnz).astype(np.int64)
         mags = np.ones(nnz, np.int64)
-        gt1 = np.array([enc_dec.decode_bit(ctx, CTX_GT1) for _ in range(nnz)], bool)
+        gt1 = enc_dec.decode_bits(ctx, CTX_GT1, nnz).astype(bool)
         n1 = int(gt1.sum())
-        gt2 = np.array([enc_dec.decode_bit(ctx, CTX_GT2) for _ in range(n1)], bool)
+        gt2 = enc_dec.decode_bits(ctx, CTX_GT2, n1).astype(bool)
         n2 = int(gt2.sum())
         mg1 = np.full(n1, 2, np.int64)
-        k_rem = bypass.get_uint(4)  # encoder always writes the k header when nnz>0
+        k_rem = bypass.get_uint(4)  # always framed when nnz>0
+        _check_k_rem(k_rem, n2)
         if n2:
             rem = golomb.decode_egk(bypass, n2, k_rem)
             mg1[gt2] = rem + 3
         mags[gt1] = mg1
         kept[idx] = np.where(signs == 1, -mags, mags)
+    return _reassemble(shape, m, row_len, nz_rows, kept)
+
+
+# ---------------------------------------------------------------- validation
+
+def _check_nnz(nnz: int, kept_len: int) -> None:
+    if nnz > kept_len:
+        raise CorruptPayloadError(
+            f"decoded nnz={nnz} exceeds the {kept_len} kept positions")
+
+
+def _check_positions(idx: np.ndarray, kept_len: int) -> None:
+    if idx.size and int(idx[-1]) >= kept_len:
+        raise CorruptPayloadError(
+            f"decoded position {int(idx[-1])} outside the {kept_len} kept "
+            "positions")
+
+
+def _check_k_rem(k_rem: int, n2: int) -> None:
+    # the encoder normalises the degenerate n2 == 0 frame to k_rem == 0
+    if n2 == 0 and k_rem != 0:
+        raise CorruptPayloadError(
+            f"non-zero k_rem={k_rem} framed for a tensor with no >2 "
+            "magnitudes")
+
+
+def _reassemble(shape: tuple, m: int, row_len: int, nz_rows: np.ndarray,
+                kept: np.ndarray) -> np.ndarray:
     out = np.zeros((m, row_len), np.int64)
-    out[nz_rows] = kept.reshape(-1, row_len)
+    if kept.size:
+        out[nz_rows] = kept.reshape(-1, row_len)
     return out.reshape(shape).astype(np.int32)
 
 
-def encode_tree(levels_tree: Any) -> bytes:
+# ===========================================================================
+# message-level API
+# ===========================================================================
+
+def encode_tree(levels_tree: Any, engine: str = DEFAULT_ENGINE) -> bytes:
     """Encode a pytree of int32 level tensors into one NNC message."""
+    items = _leaves_with_paths(levels_tree)
+    if _check_engine(engine) == "vectorized":
+        return _encode_leaves([np.asarray(l) for _, l in items])
     enc = Encoder()
     ctx = ContextSet(NUM_CTX)
     bypass = BitWriter()
-    for _, leaf in _leaves_with_paths(levels_tree):
+    for _, leaf in items:
         encode_tensor(np.asarray(leaf), enc, ctx, bypass)
     cab = enc.finish()
     byp = bypass.to_bytes()
@@ -142,28 +333,145 @@ def encode_tree(levels_tree: Any) -> bytes:
     return header + cab + byp
 
 
-def decode_tree(data: bytes, shapes_tree: Any) -> Any:
-    """Decode an NNC message given the pytree of tensor shapes."""
-    import jax
-
+def _split_frame(data: bytes) -> tuple[bytes, bytes]:
+    """Validate the 16-byte length header; return (cabac, bypass) streams."""
+    if len(data) < 16:
+        raise CorruptPayloadError(
+            f"message of {len(data)} bytes cannot hold the 16-byte header")
     cab_len = int.from_bytes(data[:8], "big")
     byp_len = int.from_bytes(data[8:16], "big")
-    cab = data[16:16 + cab_len]
-    byp = data[16 + cab_len:16 + cab_len + byp_len]
-    dec = Decoder(cab)
+    if 16 + cab_len + byp_len != len(data):
+        raise CorruptPayloadError(
+            f"length header (cabac={cab_len}, bypass={byp_len}) does not "
+            f"frame the {len(data)}-byte message")
+    return data[16:16 + cab_len], data[16 + cab_len:]
+
+
+_DECODE_ERRORS = (EOFError, IndexError, ValueError, ZeroDivisionError,
+                  OverflowError)
+
+
+def _decode_sections(data: bytes, path_shapes: list[tuple[str, tuple]],
+                     engine: str) -> dict[str, np.ndarray]:
+    """Decode one message into {path: int32 array} with frame validation."""
+    cab, byp = _split_frame(data)
+    dec = Decoder(cab, strict=True)
     ctx = ContextSet(NUM_CTX)
     bypass = BitReader(byp)
+    one = decode_tensor if engine == "vectorized" else _decode_tensor_ref
+    try:
+        decoded = {path: one(shape, dec, ctx, bypass)
+                   for path, shape in path_shapes}
+    except CorruptPayloadError:
+        raise
+    except _DECODE_ERRORS as e:
+        raise CorruptPayloadError(f"payload failed to decode: {e}") from e
+    # a well-formed message is consumed exactly: the cabac stream to the
+    # byte, the bypass stream to within its <8 padding bits — leftovers
+    # prove the shapes tree does not match the encoder's
+    if dec.pos != len(cab):
+        raise CorruptPayloadError(
+            f"cabac stream length mismatch: consumed {dec.pos} of "
+            f"{len(cab)} bytes (shapes tree does not match the message)")
+    if bypass.bits_remaining >= 8:
+        raise CorruptPayloadError(
+            f"{bypass.bits_remaining} unread bypass bits (shapes tree "
+            "does not match the message)")
+    return decoded
 
-    items = _leaves_with_paths(shapes_tree)
-    decoded = {path: decode_tensor(tuple(spec.shape), dec, ctx, bypass)
-               for path, spec in items}
 
-    # rebuild the tree in original structure
+def _shape_items(shapes_tree: Any):
+    """(sorted (path, shape) list, flatten cache) for a shapes tree."""
+    import jax
+
     from repro.core.scaling import path_str
 
-    flat = jax.tree_util.tree_flatten_with_path(shapes_tree)
-    out_leaves = [decoded[path_str(kp)] for kp, _ in flat[0]]
-    return jax.tree_util.tree_unflatten(flat[1], out_leaves)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    paths = [path_str(kp) for kp, _ in flat]
+    items = sorted(((p, tuple(s.shape)) for p, (_, s) in zip(paths, flat)),
+                   key=lambda kv: kv[0])
+    return items, (paths, flat, treedef)
+
+
+def _rebuild(decoded: dict[str, np.ndarray], cache) -> Any:
+    import jax
+
+    paths, flat, treedef = cache
+    return jax.tree_util.tree_unflatten(
+        treedef, [decoded[p] for p in paths])
+
+
+def decode_tree(data: bytes, shapes_tree: Any,
+                engine: str = DEFAULT_ENGINE) -> Any:
+    """Decode an NNC message given the pytree of tensor shapes.
+
+    Raises :class:`CorruptPayloadError` for truncated/corrupted payloads
+    and for shapes trees that provably mismatch the encoded message.
+    """
+    _check_engine(engine)
+    items, cache = _shape_items(shapes_tree)
+    return _rebuild(_decode_sections(data, items, engine), cache)
+
+
+# ---------------------------------------------------------------- batch API
+
+def encode_tree_batch(trees: Sequence[Any],
+                      engine: str = DEFAULT_ENGINE) -> list[bytes]:
+    """Encode K clients' level trees against ONE shared shapes view.
+
+    All trees must share the first tree's structure (one cohort, one wire
+    schema); paths are formatted and sorted once, so the per-message work
+    is only the coding itself.  Returns one payload per tree, each
+    byte-identical to ``encode_tree(tree, engine)``.
+    """
+    import jax
+
+    _check_engine(engine)
+    if not trees:
+        return []
+    treedef0 = jax.tree_util.tree_flatten(trees[0])[1]
+    order = _batch_leaf_order(trees[0])
+    out = []
+    for t in trees:
+        leaves, treedef = jax.tree_util.tree_flatten(t)
+        if treedef != treedef0:
+            raise ValueError(
+                "encode_tree_batch needs structurally identical trees; got "
+                f"{treedef} vs {treedef0}")
+        ordered = [np.asarray(leaves[i]) for i in order]
+        if engine == "vectorized":
+            out.append(_encode_leaves(ordered))
+        else:
+            enc = Encoder()
+            ctx = ContextSet(NUM_CTX)
+            bypass = BitWriter()
+            for leaf in ordered:
+                encode_tensor(leaf, enc, ctx, bypass)
+            cab = enc.finish()
+            byp = bypass.to_bytes()
+            out.append(len(cab).to_bytes(8, "big")
+                       + len(byp).to_bytes(8, "big") + cab + byp)
+    return out
+
+
+def _batch_leaf_order(tree: Any) -> list[int]:
+    """Flat-leaf indices in sorted-path (wire) order."""
+    import jax
+
+    from repro.core.scaling import path_str
+
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths = [path_str(kp) for kp, _ in flat]
+    return sorted(range(len(paths)), key=lambda i: paths[i])
+
+
+def decode_tree_batch(payloads: Sequence[bytes], shapes_tree: Any,
+                      engine: str = DEFAULT_ENGINE) -> list[Any]:
+    """Decode K payloads against ONE shared shapes view (parsed once)."""
+    _check_engine(engine)
+    items, cache = _shape_items(shapes_tree)
+    return [_rebuild(_decode_sections(p, items, engine), cache)
+            for p in payloads]
 
 
 def shapes_of(tree: Any) -> Any:

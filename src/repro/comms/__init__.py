@@ -8,17 +8,22 @@ graph half (jittable lossy stages) is ``repro.comms.stages``; the wire half
 ``repro.comms.codecs``; ``repro.comms.channel`` turns payload sizes into
 simulated transfer times.
 """
+from repro.coding.errors import CorruptPayloadError
 from repro.comms import codecs as _codecs  # noqa: F401  (fills the registry)
 from repro.comms.channel import ChannelConfig, ChannelModel
-from repro.comms.codec import (ClientUpdate, Codec, Decoded, WireSpec,
-                               get_codec, list_codecs, make_send_mask,
-                               register_codec, resolve_codec, shape_template)
+from repro.comms.codec import (ClientUpdate, Codec, Decoded, FlatDecoded,
+                               WireSpec, check_batch_clients,
+                               flatten_decoded, get_codec, list_codecs,
+                               make_send_mask, register_codec, resolve_codec,
+                               shape_template, unflatten_decoded)
 from repro.comms.stages import UpstreamStages, path_fine_mask
 
 __all__ = [
     "ChannelConfig", "ChannelModel",
-    "ClientUpdate", "Codec", "Decoded", "WireSpec",
-    "get_codec", "list_codecs", "make_send_mask", "register_codec",
-    "resolve_codec", "shape_template",
+    "ClientUpdate", "Codec", "CorruptPayloadError", "Decoded",
+    "FlatDecoded", "WireSpec",
+    "check_batch_clients", "flatten_decoded", "get_codec", "list_codecs",
+    "make_send_mask",
+    "register_codec", "resolve_codec", "shape_template", "unflatten_decoded",
     "UpstreamStages", "path_fine_mask",
 ]

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import numpy as np
@@ -215,6 +215,20 @@ def _decode_bn(tail: bytes, spec: WireSpec) -> Any:
 
 # ---------------------------------------------------------------- codec base
 
+def check_batch_clients(clients: Any, n: int, what: str) -> None:
+    """Validate a batch call's client-id list: one id per message, no
+    duplicates.  ``clients=None`` (anonymous batch) is allowed."""
+    if clients is None:
+        return
+    clients = list(clients)
+    if len(clients) != n:
+        raise ValueError(f"ragged batch: {len(clients)} client ids for "
+                         f"{n} {what}")
+    if len(set(clients)) != len(clients):
+        dupes = sorted({c for c in clients if clients.count(c) > 1})
+        raise ValueError(f"duplicate client ids in batch: {dupes}")
+
+
 class Codec:
     """One wire codec: ``encode`` to a payload, ``decode`` back to pytrees.
 
@@ -226,6 +240,15 @@ class Codec:
     the payload IS the body (byte-compatible with the PR-2 pins); under
     schema v2 the payload is ``[1-byte version][body][raw-f32 bn tail]`` —
     so every registered codec carries the BN section without per-codec code.
+
+    **Batch API** — ``encode_batch``/``decode_batch`` process one cohort of
+    messages per call against the ONE shared spec (and, where the codec
+    supports it, one shared shapes view).  Payload *i* is byte-identical to
+    the per-message call on update *i*; the batch entry points exist so a
+    pooled uplink can submit one task per worker chunk instead of one per
+    client.  When ``clients`` is given it must be one id per message with
+    no duplicates (a cohort, not a multiset) — ragged or duplicated ids
+    raise ``ValueError``.
     """
 
     name: str = "?"
@@ -239,23 +262,49 @@ class Codec:
     # refuses the fork-based process executor for this codec
     fork_safe: bool = True
 
-    def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
-        body = self._encode_body(upd, spec)
+    # -- framing (shared by the per-message and batch paths) ----------------
+
+    def _frame(self, body: bytes, upd: ClientUpdate, spec: WireSpec) -> bytes:
         if spec.version == 1:
             return body
         return bytes([spec.version]) + body + _encode_bn(upd.bn, spec)
 
-    def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+    def _deframe(self, payload: bytes, spec: WireSpec) -> tuple[bytes, bytes]:
+        """-> (body, bn tail); validates the v2 version header."""
         if spec.version == 1:
-            return self._decode_body(payload, spec)
+            return payload, b""
         if not payload or payload[0] != spec.version:
             got = payload[0] if payload else None
             raise ValueError(f"wire schema mismatch: payload header {got!r}, "
                              f"spec expects version {spec.version}")
         tail = spec.bn_nbytes
-        body = payload[1:len(payload) - tail]
+        return payload[1:len(payload) - tail], payload[len(payload) - tail:]
+
+    # -- per-message entry points -------------------------------------------
+
+    def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+        return self._frame(self._encode_body(upd, spec), upd, spec)
+
+    def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
+        body, tail = self._deframe(payload, spec)
         dec = self._decode_body(body, spec)
-        return dec._replace(bn=_decode_bn(payload[len(payload) - tail:], spec))
+        if spec.version == 1:
+            return dec
+        return dec._replace(bn=_decode_bn(tail, spec))
+
+    # -- batch entry points -------------------------------------------------
+
+    def encode_batch(self, upds: Sequence[ClientUpdate], spec: WireSpec, *,
+                     clients: Sequence[int] | None = None) -> list[bytes]:
+        """Encode K updates; payload i == ``encode(upds[i], spec)``."""
+        check_batch_clients(clients, len(upds), "updates")
+        return [self.encode(u, spec) for u in upds]
+
+    def decode_batch(self, payloads: Sequence[bytes], spec: WireSpec, *,
+                     clients: Sequence[int] | None = None) -> list[Decoded]:
+        """Decode K payloads; result i == ``decode(payloads[i], spec)``."""
+        check_batch_clients(clients, len(payloads), "payloads")
+        return [self.decode(p, spec) for p in payloads]
 
     def _encode_body(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
         raise NotImplementedError
@@ -265,6 +314,61 @@ class Codec:
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"<Codec {self.name}>"
+
+
+# ------------------------------------------------------------- flat transport
+
+class FlatDecoded(NamedTuple):
+    """A :class:`Decoded` as flat float32 arrays in wire order.
+
+    The pickle-cheap transport for pooled decode results: process workers
+    return three contiguous arrays instead of nested pytrees (whose
+    per-leaf pickling dominated the fork-pool uplink), and the host
+    reassembles against its own spec with :func:`unflatten_decoded`.
+    """
+    params: np.ndarray
+    scales: np.ndarray | None
+    bn: np.ndarray | None
+
+
+def _concat_items(tree: Any, items: list[tuple[str, Any]]) -> np.ndarray:
+    if not items:
+        return np.zeros(0, np.float32)
+    by = dict(sorted_items(tree))
+    return np.concatenate([np.asarray(by[p], np.float32).reshape(-1)
+                           for p, _ in items])
+
+
+def _split_items(arr: np.ndarray, items: list[tuple[str, Any]],
+                 template: Any) -> Any:
+    by: dict[str, np.ndarray] = {}
+    off = 0
+    for p, s in items:
+        n = int(np.prod(s.shape)) if s.shape else 1
+        by[p] = np.asarray(arr[off:off + n], np.float32).reshape(s.shape)
+        off += n
+    return rebuild_tree(template, by)
+
+
+def flatten_decoded(dec: Decoded, spec: WireSpec) -> FlatDecoded:
+    """Decoded pytrees -> flat float32 arrays (exact; no precision loss)."""
+    return FlatDecoded(
+        params=_concat_items(dec.params, spec.param_items()),
+        scales=(None if spec.scales is None
+                else _concat_items(dec.scales, spec.scale_items())),
+        bn=(None if spec.bn is None or dec.bn is None
+            else _concat_items(dec.bn, spec.bn_items())))
+
+
+def unflatten_decoded(flat: FlatDecoded, spec: WireSpec) -> Decoded:
+    """Inverse of :func:`flatten_decoded` (unsent leaves decode to zeros)."""
+    return Decoded(
+        params=_split_items(flat.params, spec.param_items(), spec.params),
+        scales=(None if spec.scales is None or flat.scales is None
+                else _split_items(flat.scales, spec.scale_items(),
+                                  spec.scales)),
+        bn=(None if spec.bn is None or flat.bn is None
+            else _split_items(flat.bn, spec.bn_items(), spec.bn)))
 
 
 # ---------------------------------------------------------------- registry

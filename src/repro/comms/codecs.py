@@ -30,7 +30,9 @@ from repro.coding import nnc
 from repro.coding import golomb as golomb_lib
 from repro.coding.bitstream import BitReader, BitWriter
 from repro.comms.codec import (ClientUpdate, Codec, Decoded, WireSpec,
-                               rebuild_tree, register_codec, sorted_items)
+                               check_batch_clients, rebuild_tree,
+                               register_codec, sorted_items)
+from repro.comms.codec import _decode_bn as decode_bn_tail
 
 
 def _np32(x) -> np.ndarray:
@@ -176,31 +178,36 @@ class LevelCodec(Codec):
         """-> ({path: int32 array}, {path: int32 array})"""
         raise NotImplementedError
 
-    def _encode_body(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+    # -- shared assembly pieces (per-message AND batch paths) ---------------
+
+    def _level_items(self, upd: ClientUpdate, spec: WireSpec):
+        """-> (p_items, s_items): the ordered int32 sections to code."""
         p_items = [(p, np.asarray(l, np.int32))
                    for p, l in sorted_items(upd.levels_params)
                    if p in spec.sent_paths]
         s_items = ([] if spec.scales is None else
                    [(p, np.asarray(l, np.int32))
                     for p, l in sorted_items(upd.levels_scales)])
-        body = self._encode_levels(p_items, s_items)
-        if spec.ternary:
-            mags = np.array([np.max(np.abs(_np32(l)))
-                             for _, l in _sent_recon_items(upd, spec)],
-                            "<f4")
-            body += mags.tobytes()
-        return body
+        return p_items, s_items
 
-    def _decode_body(self, payload: bytes, spec: WireSpec) -> Decoded:
-        p_shapes = [(p, tuple(s.shape)) for p, s in spec.param_items()]
-        s_shapes = [(p, tuple(s.shape)) for p, s in spec.scale_items()]
-        body = payload
-        mags = None
-        if spec.ternary and p_shapes:
-            tail = 4 * len(p_shapes)
-            body, mag_bytes = payload[:-tail], payload[-tail:]
-            mags = np.frombuffer(mag_bytes, "<f4")
-        p_levels, s_levels = self._decode_levels(body, p_shapes, s_shapes)
+    def _ternary_tail(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+        if not spec.ternary:
+            return b""
+        return np.array([np.max(np.abs(_np32(l)))
+                         for _, l in _sent_recon_items(upd, spec)],
+                        "<f4").tobytes()
+
+    @staticmethod
+    def _split_ternary(payload: bytes, spec: WireSpec, n_params: int):
+        """-> (level body, per-tensor ternary magnitudes or None)."""
+        if not (spec.ternary and n_params):
+            return payload, None
+        tail = 4 * n_params
+        return payload[:-tail], np.frombuffer(payload[-tail:], "<f4")
+
+    def _dequantize(self, p_levels, s_levels, mags, spec: WireSpec,
+                    p_shapes, s_shapes) -> Decoded:
+        """Decoded level sections -> float32 reconstructions."""
         by_path: dict[str, np.ndarray] = {}
         for i, (path, _) in enumerate(p_shapes):
             lv = p_levels[path].astype(np.float32)
@@ -217,6 +224,19 @@ class LevelCodec(Codec):
             scales = rebuild_tree(spec.scales, by_s)
         return Decoded(params, scales)
 
+    def _encode_body(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
+        p_items, s_items = self._level_items(upd, spec)
+        return self._encode_levels(p_items, s_items) + self._ternary_tail(
+            upd, spec)
+
+    def _decode_body(self, payload: bytes, spec: WireSpec) -> Decoded:
+        p_shapes = [(p, tuple(s.shape)) for p, s in spec.param_items()]
+        s_shapes = [(p, tuple(s.shape)) for p, s in spec.scale_items()]
+        body, mags = self._split_ternary(payload, spec, len(p_shapes))
+        p_levels, s_levels = self._decode_levels(body, p_shapes, s_shapes)
+        return self._dequantize(p_levels, s_levels, mags, spec,
+                                p_shapes, s_shapes)
+
 
 class NncCabacCodec(LevelCodec):
     """The paper's DeepCABAC/NNC stack (``repro.coding.nnc``).
@@ -226,22 +246,62 @@ class NncCabacCodec(LevelCodec):
     payload lengths reproduce the seed byte totals bit-for-bit (nnc sorts
     leaves by path and never serialises the path strings, so the flattened
     sections code to the identical stream).
+
+    Batch calls route through ``nnc.encode_tree_batch``/
+    ``decode_tree_batch``: the cohort's level messages code against ONE
+    shared shapes view (paths formatted, sorted and template-flattened
+    once), with every payload byte-identical to its per-message call.
     """
 
     name = "nnc-cabac"
 
-    def _encode_levels(self, p_items, s_items) -> bytes:
+    @staticmethod
+    def _msg(p_items, s_items) -> dict:
         msg: dict = {"p": dict(p_items)}
         if s_items:
             msg["s"] = dict(s_items)
-        return nnc.encode_tree(msg)
+        return msg
 
-    def _decode_levels(self, body, p_shapes, s_shapes):
+    @staticmethod
+    def _msg_shapes(p_shapes, s_shapes) -> dict:
         shapes: dict = {"p": {p: jax_sds(shape) for p, shape in p_shapes}}
         if s_shapes:
             shapes["s"] = {p: jax_sds(shape) for p, shape in s_shapes}
-        decoded = nnc.decode_tree(body, shapes)
+        return shapes
+
+    def _encode_levels(self, p_items, s_items) -> bytes:
+        return nnc.encode_tree(self._msg(p_items, s_items))
+
+    def _decode_levels(self, body, p_shapes, s_shapes):
+        decoded = nnc.decode_tree(body, self._msg_shapes(p_shapes, s_shapes))
         return decoded["p"], decoded.get("s", {})
+
+    def encode_batch(self, upds, spec, *, clients=None):
+        check_batch_clients(clients, len(upds), "updates")
+        pieces = [self._level_items(u, spec) for u in upds]
+        bodies = nnc.encode_tree_batch([self._msg(p, s) for p, s in pieces])
+        return [self._frame(body + self._ternary_tail(u, spec), u, spec)
+                for body, u in zip(bodies, upds)]
+
+    def decode_batch(self, payloads, spec, *, clients=None):
+        check_batch_clients(clients, len(payloads), "payloads")
+        if not payloads:
+            return []
+        p_shapes = [(p, tuple(s.shape)) for p, s in spec.param_items()]
+        s_shapes = [(p, tuple(s.shape)) for p, s in spec.scale_items()]
+        frames = [self._deframe(p, spec) for p in payloads]
+        split = [self._split_ternary(body, spec, len(p_shapes))
+                 for body, _ in frames]
+        trees = nnc.decode_tree_batch([body for body, _ in split],
+                                      self._msg_shapes(p_shapes, s_shapes))
+        out = []
+        for tree, (_, mags), (_, bn_tail) in zip(trees, split, frames):
+            dec = self._dequantize(tree["p"], tree.get("s", {}), mags, spec,
+                                   p_shapes, s_shapes)
+            if spec.version != 1:
+                dec = dec._replace(bn=decode_bn_tail(bn_tail, spec))
+            out.append(dec)
+        return out
 
 
 def jax_sds(shape):

@@ -136,6 +136,7 @@ class EngineConfig:
     wire_schema: int = 1                 # 1 = PR-2 frame | 2 = BN on the wire
     uplink_workers: int = 0              # >1: parallel encode+decode
     uplink_executor: str = "thread"      # "thread" | "process"
+    uplink_batch: bool = False           # batch-API intake: <=W pool tasks
     executor: str = "vmap"               # cohort backend (fl.executors)
     mesh_shape: tuple[int, ...] | None = None  # sharded: 1-D cohort mesh
 

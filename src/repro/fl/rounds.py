@@ -275,6 +275,21 @@ def _pool_roundtrip(upd: comms.ClientUpdate):
     return len(payload), _POOL_CODEC.decode(payload, _POOL_SPEC)
 
 
+def _pool_roundtrip_chunk(chunk: list[comms.ClientUpdate],
+                          clients: list[int] | None):
+    """One batched worker task: encode+decode a whole client chunk.
+
+    Returns ``(payload_bytes, FlatDecoded)`` pairs — flat float32 arrays,
+    NOT decoded pytrees: pickling one contiguous array per section back to
+    the parent is what removes the per-leaf pickle tax that made the
+    process-pool uplink pay for its parallelism.  The parent reassembles
+    against its own spec (``comms.unflatten_decoded``)."""
+    payloads = _POOL_CODEC.encode_batch(chunk, _POOL_SPEC, clients=clients)
+    decs = _POOL_CODEC.decode_batch(payloads, _POOL_SPEC, clients=clients)
+    return [(len(p), comms.flatten_decoded(d, _POOL_SPEC))
+            for p, d in zip(payloads, decs)]
+
+
 class Uplink:
     """Stage 3: the wire.  Encode each participant's update, decode it back.
 
@@ -286,8 +301,16 @@ class Uplink:
 
     Per-client round-trips share no codec state, so ``workers > 1`` fans
     them across an executor: ``"thread"`` for numpy-dominated codecs (GIL
-    released), ``"process"`` for the pure-Python entropy coders.  Results
-    come back in submission order — parallelism cannot change bytes.
+    released), ``"process"`` for the entropy coders.  Results come back in
+    submission order — parallelism cannot change bytes.
+
+    ``uplink_batch=True`` swaps the per-client dispatch for the codec
+    **batch API**: the cohort splits into at most ``workers`` contiguous
+    chunks, ONE pool task per chunk (``pool_tasks`` counts submissions),
+    all messages coded against one shared shapes view, and process
+    workers return ``comms.FlatDecoded`` flat arrays instead of pickled
+    pytrees — the host reassembles them against its own spec.  Payloads
+    are byte-identical to the per-client path.
     """
 
     def __init__(self, cfg: ProtocolConfig, engine_cfg, server: ServerState):
@@ -319,6 +342,7 @@ class Uplink:
             version=engine_cfg.wire_schema)
         self.workers = engine_cfg.uplink_workers
         self.executor_kind = engine_cfg.uplink_executor
+        self.batch = engine_cfg.uplink_batch
         if (self.workers > 1 and self.executor_kind == "process"
                 and not self.codec.fork_safe):
             raise ValueError(
@@ -326,6 +350,10 @@ class Uplink:
                 "is not fork-safe; use uplink_executor='thread' (its numpy "
                 "work releases the GIL) or a fork-safe codec")
         self._ex = None
+        # cumulative executor task submissions (tests and benchmarks read
+        # this: batched intake submits <= workers tasks per cohort, the
+        # per-client path one per update)
+        self.pool_tasks = 0
 
     # -- device -> host ----------------------------------------------------
 
@@ -357,6 +385,12 @@ class Uplink:
         payload = self.codec.encode(upd, self.spec)
         return len(payload), self.codec.decode(payload, self.spec)
 
+    def _roundtrip_batch(self, chunk: list[comms.ClientUpdate],
+                         clients: list[int] | None):
+        payloads = self.codec.encode_batch(chunk, self.spec, clients=clients)
+        decs = self.codec.decode_batch(payloads, self.spec, clients=clients)
+        return [(len(p), d) for p, d in zip(payloads, decs)]
+
     def _executor(self):
         if self._ex is None:
             if self.executor_kind == "thread":
@@ -374,14 +408,45 @@ class Uplink:
                     initargs=(self.codec, self.spec))
         return self._ex
 
-    def roundtrip_all(self, upds: list[comms.ClientUpdate]):
+    def roundtrip_all(self, upds: list[comms.ClientUpdate],
+                      clients: list[int] | None = None):
         """Encode+decode every update; parallel across clients when
-        configured (order-preserving either way)."""
+        configured (order-preserving either way).
+
+        ``uplink_batch=False`` is the per-client dispatch: one executor
+        task per update.  ``uplink_batch=True`` routes through the codec's
+        batch API — the cohort splits into at most ``workers`` contiguous
+        chunks and ONE task is submitted per chunk, so a K-client cohort
+        costs <= W submissions instead of K, and process workers return
+        flat arrays instead of pickled pytrees.  Either way results come
+        back in submission order — parallelism cannot change bytes."""
+        if not self.batch:
+            if self.workers <= 1 or len(upds) <= 1:
+                return [self._roundtrip(u) for u in upds]
+            fn = (self._roundtrip if self.executor_kind == "thread"
+                  else _pool_roundtrip)
+            self.pool_tasks += len(upds)
+            return list(self._executor().map(fn, upds))
+        # enforce the cohort contract on the WHOLE batch: chunking must not
+        # weaken the no-duplicate check (a duplicate pair could otherwise
+        # land in different chunks and pass per-chunk validation)
+        comms.check_batch_clients(clients, len(upds), "updates")
         if self.workers <= 1 or len(upds) <= 1:
-            return [self._roundtrip(u) for u in upds]
-        fn = (self._roundtrip if self.executor_kind == "thread"
-              else _pool_roundtrip)
-        return list(self._executor().map(fn, upds))
+            return self._roundtrip_batch(upds, clients)
+        nchunks = min(self.workers, len(upds))
+        bounds = np.array_split(np.arange(len(upds)), nchunks)
+        chunks = [([upds[i] for i in b],
+                   None if clients is None else [clients[i] for i in b])
+                  for b in bounds if len(b)]
+        ex = self._executor()
+        self.pool_tasks += len(chunks)
+        if self.executor_kind == "thread":
+            futs = [ex.submit(self._roundtrip_batch, ch, cl)
+                    for ch, cl in chunks]
+            return [r for f in futs for r in f.result()]
+        futs = [ex.submit(_pool_roundtrip_chunk, ch, cl) for ch, cl in chunks]
+        return [(nbytes, comms.unflatten_decoded(flat, self.spec))
+                for f in futs for nbytes, flat in f.result()]
 
     def close(self) -> None:
         if self._ex is not None:
@@ -416,7 +481,7 @@ class Uplink:
         upds = [comms.ClientUpdate(*(None if t is None else client_slice(t, i)
                                      for t in host))
                 for i in range(len(clients))]
-        results = self.roundtrip_all(upds)
+        results = self.roundtrip_all(upds, clients)
         return [Contribution(
             client=c,
             delta_params=dec.params,

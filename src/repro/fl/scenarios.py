@@ -67,6 +67,7 @@ class Scenario:
     wire_schema: int = 1            # 1 = PR-2 frame | 2 = BN on the wire
     uplink_workers: int = 0         # >1: parallel per-client encode+decode
     uplink_executor: str = "thread"  # "thread" | "process"
+    uplink_batch: bool = False      # codec batch API: <=W pool tasks/cohort
     # --- data heterogeneity (default task only) ---
     dirichlet_alpha: float | None = None   # None = IID random partition
 
@@ -108,6 +109,7 @@ def build_engine(s: Scenario) -> EngineConfig:
         wire_schema=s.wire_schema,
         uplink_workers=s.uplink_workers,
         uplink_executor=s.uplink_executor,
+        uplink_batch=s.uplink_batch,
         # partial updates never have non-classifier deltas, so the wire
         # drops those leaves entirely (layer-selective payloads)
         up_predicate=_fc_only if s.partial_updates else None)
@@ -252,6 +254,16 @@ for _s in [
              "thread-pooled per-client wire round-trips (fp16 payloads "
              "release the GIL)",
              codec="fp16", uplink_workers=2),
+    # ---- vectorized CABAC + cohort-batched uplink (coding/ two-pass) ----
+    Scenario("cabac_fast_batch_k8",
+             "batched uplink intake: the cohort's DeepCABAC messages code "
+             "through the codec batch API in <=W thread-pool tasks (one "
+             "shared shapes view, byte-identical payloads)",
+             uplink_workers=2, uplink_batch=True),
+    Scenario("cabac_fast_pool_k8",
+             "batched uplink over the forkserver pool: workers return flat "
+             "level arrays instead of pickled pytrees",
+             uplink_workers=2, uplink_executor="process", uplink_batch=True),
     # ---- cohort execution backends (repro.fl.executors) ----
     Scenario("exec_serial_k4",
              "per-client jit execution of the sync cohort (compiles once "

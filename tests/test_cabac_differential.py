@@ -1,0 +1,394 @@
+"""Differential + fuzz harness for the two-pass vectorized coding stack.
+
+The serial coder (`cabac.Encoder`/`decode_bit`, `nnc.encode_tensor`,
+`golomb.decode_egk_ref`) is the retained ORACLE: every fast path must be
+byte-identical (encode) or value-identical (decode) against it —
+
+* engine differential: random sparse level trees across densities 0..1,
+  ndim 0..4, empty tensors, all-zero rows and single-row matrices, as a
+  seeded numpy sweep that always runs plus a hypothesis property suite
+  when the dev extra is installed,
+* the three frozen seed-parity byte pins re-asserted with the vectorized
+  engine as the default wire path,
+* fuzz/adversarial decode: truncations, corrupted length headers,
+  framing-invariant violations and mismatched shapes trees must raise the
+  typed :class:`CorruptPayloadError` — never zero-fill silently via the
+  range decoder's historical `0` fallback, never escape as IndexError,
+* the degenerate ``n2 == 0`` ``k_rem`` framing regression, and the batch
+  API's ragged/duplicate client-id validation.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.coding import golomb, nnc
+from repro.coding.bitstream import BitReader, BitWriter
+from repro.coding.cabac import (ContextSet, Decoder, Encoder,
+                                context_state_sequence, encode_context_bins)
+from repro.coding.errors import CorruptPayloadError
+
+# ------------------------------------------------------------- helpers
+
+
+def _serial_encode_bins(ctx_ids, bits, nctx):
+    enc = Encoder()
+    cs = ContextSet(nctx)
+    states = []
+    for c, b in zip(ctx_ids.tolist(), bits.tolist()):
+        states.append(int(cs.p[c]))
+        enc.encode_bit(cs, c, b)
+    return enc.finish(), states
+
+
+def _rand_tree(seed):
+    """Random level tree: densities 0..1, ndim 0..4, zero-sized dims."""
+    r = np.random.default_rng(seed)
+    tree = {}
+    for i in range(int(r.integers(1, 5))):
+        ndim = int(r.integers(0, 5))
+        shape = tuple(int(r.integers(0, 7)) for _ in range(ndim))
+        density = float(r.random())
+        vals = (r.integers(-(2**20), 2**20, shape)
+                * (r.random(shape) < density))
+        tree[f"t{i}"] = vals.astype(np.int32)
+    return tree
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _roundtrip_both_engines(tree):
+    """serial/vectorized encode byte-identical; 2x2 encode/decode grid."""
+    ser = nnc.encode_tree(tree, engine="serial")
+    vec = nnc.encode_tree(tree, engine="vectorized")
+    assert ser == vec
+    shapes = nnc.shapes_of(tree)
+    for engine in ("serial", "vectorized"):
+        _assert_tree_equal(nnc.decode_tree(ser, shapes, engine=engine), tree)
+    return ser
+
+
+# ------------------------------------------------------- engine differential
+
+
+def test_vectorized_bins_byte_identical_to_serial():
+    rng = np.random.default_rng(0)
+    for trial in range(120):
+        n = int(rng.integers(0, 500))
+        nctx = int(rng.integers(1, 5))
+        bits = (rng.random(n) < rng.random()).astype(np.uint8)
+        ctx_ids = rng.integers(0, nctx, n).astype(np.uint8)
+        ser, _ = _serial_encode_bins(ctx_ids, bits, nctx)
+        assert encode_context_bins(ctx_ids, bits, nctx) == ser, trial
+
+
+def test_state_scan_matches_serial_adaptation():
+    """Pass 1 reproduces the exact 11-bit shift-adaptation state sequence."""
+    rng = np.random.default_rng(1)
+    for trial in range(40):
+        n = int(rng.integers(1, 600))
+        bits = (rng.random(n) < rng.random()).astype(np.uint8)
+        ctx_ids = np.zeros(n, np.uint8)
+        _, states = _serial_encode_bins(ctx_ids, bits, 1)
+        np.testing.assert_array_equal(context_state_sequence(bits), states)
+
+
+def test_nnc_differential_random_trees():
+    for seed in range(60):
+        _roundtrip_both_engines(_rand_tree(seed))
+
+
+@pytest.mark.parametrize("levels", [
+    np.zeros((0,), np.int32),                      # empty vector
+    np.zeros((0, 5), np.int32),                    # zero rows
+    np.zeros((5, 0), np.int32),                    # zero row length
+    np.zeros((3, 0, 2), np.int32),                 # interior zero dim
+    np.array(7, np.int32),                         # scalar
+    np.zeros((64, 64), np.int32),                  # all-zero rows
+    np.array([[1, 0, -3, 0]], np.int32),           # single-row matrix
+    np.array([[0, 0, 0], [2, 0, -2]], np.int32),   # mixed zero rows
+])
+def test_nnc_differential_edge_tensors(levels):
+    _roundtrip_both_engines({"w": levels, "v": np.array([1, -1], np.int32)})
+
+
+def test_block_decode_bitwise_identical_to_per_bin():
+    """Decoder.decode_bits walks the identical (state, range, code, pos)
+    trajectory as repeated decode_bit calls."""
+    rng = np.random.default_rng(2)
+    for trial in range(40):
+        n = int(rng.integers(1, 400))
+        nctx = int(rng.integers(1, 4))
+        bits = (rng.random(n) < rng.random()).astype(np.uint8)
+        # contiguous same-context blocks, like the row/gt1/gt2 sections
+        ctx_ids = np.sort(rng.integers(0, nctx, n)).astype(np.uint8)
+        data, _ = _serial_encode_bins(ctx_ids, bits, nctx)
+        ref_dec = Decoder(data)
+        ref_cs = ContextSet(nctx)
+        ref = [ref_dec.decode_bit(ref_cs, int(c)) for c in ctx_ids]
+        blk_dec = Decoder(data, strict=True)
+        blk_cs = ContextSet(nctx)
+        out = []
+        i = 0
+        while i < n:
+            j = i
+            while j < n and ctx_ids[j] == ctx_ids[i]:
+                j += 1
+            out.extend(blk_dec.decode_bits(blk_cs, int(ctx_ids[i]),
+                                           j - i).tolist())
+            i = j
+        assert out == ref == bits.tolist()
+        assert blk_dec.pos == ref_dec.pos
+        np.testing.assert_array_equal(blk_cs.p, ref_cs.p)
+
+
+def test_golomb_fast_decode_matches_reference():
+    rng = np.random.default_rng(3)
+    for trial in range(60):
+        n = int(rng.integers(0, 80))
+        k = int(rng.integers(0, 9))
+        vals = rng.integers(0, 2**31, n).astype(np.int64)
+        if trial % 2:
+            vals = (vals % 9).astype(np.int64)
+        w = BitWriter()
+        golomb.encode_egk(w, vals, k)
+        w.put_uint(5, 3)                      # trailing bits stay untouched
+        data = w.to_bytes()
+        fast, ref = BitReader(data), BitReader(data)
+        np.testing.assert_array_equal(golomb.decode_egk(fast, n, k), vals)
+        np.testing.assert_array_equal(golomb.decode_egk_ref(ref, n, k), vals)
+        assert fast.tell() == ref.tell()
+        assert fast.get_uint(3) == 5
+
+
+def test_strict_decoder_consumes_stream_exactly():
+    """A well-formed message never touches the 0-fallback: the encoder's
+    5-shift flush emits exactly what init + renormalisations read."""
+    rng = np.random.default_rng(4)
+    for n in (0, 1, 17, 900):
+        bits = (rng.random(n) < 0.1).astype(np.uint8)
+        ctx_ids = np.zeros(n, np.uint8)
+        data, _ = _serial_encode_bins(ctx_ids, bits, 1)
+        dec = Decoder(data, strict=True)
+        cs = ContextSet(1)
+        dec.decode_bits(cs, 0, n)
+        assert dec.pos == len(data)
+
+
+# ------------------------------------------------------- hypothesis suite
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:            # dev extra absent: the numpy sweeps above
+    _HAVE_HYPOTHESIS = False   # keep differential coverage in CI
+
+
+if _HAVE_HYPOTHESIS:
+    @st.composite
+    def _level_trees(draw):
+        n_leaves = draw(st.integers(1, 3))
+        tree = {}
+        for i in range(n_leaves):
+            ndim = draw(st.integers(0, 4))
+            shape = tuple(draw(st.integers(0, 6)) for _ in range(ndim))
+            density = draw(st.floats(0.0, 1.0))
+            seed = draw(st.integers(0, 2**31 - 1))
+            r = np.random.default_rng(seed)
+            vals = (r.integers(-(2**20), 2**20, shape)
+                    * (r.random(shape) < density))
+            tree[f"t{i}"] = vals.astype(np.int32)
+        return tree
+
+    @given(_level_trees())
+    @settings(max_examples=40, deadline=None)
+    def test_property_vectorized_engine_byte_identical(tree):
+        _roundtrip_both_engines(tree)
+
+    @given(st.lists(st.integers(0, 1), min_size=0, max_size=300),
+           st.integers(1, 4))
+    @settings(max_examples=40, deadline=None)
+    def test_property_bin_stream_byte_identical(bit_list, nctx):
+        bits = np.array(bit_list, np.uint8)
+        ctx_ids = (np.arange(bits.size) % nctx).astype(np.uint8)
+        ser, _ = _serial_encode_bins(ctx_ids, bits, nctx)
+        assert encode_context_bins(ctx_ids, bits, nctx) == ser
+
+
+# ------------------------------------------------------- seed-parity pins
+
+_PINS = {
+    "fsfl": dict(cfg=dict(method="sparse", fixed_sparsity=0.9),
+                 up_bytes=[727, 712]),
+    "stc": dict(cfg=dict(method="ternary", error_feedback=True,
+                         fixed_sparsity=0.9, structured=False),
+                up_bytes=[561, 566]),
+    "fedavg_nnc": dict(cfg=dict(method="none"), up_bytes=[3439, 3429]),
+}
+
+
+@pytest.fixture(scope="module")
+def tiny2():
+    from repro.data import federated, synthetic
+    from repro.models import cnn
+
+    task = synthetic.ImageTask("t", num_classes=4, channels=3, size=32,
+                               prototypes_per_class=2, noise=0.25)
+    x, y = synthetic.make_image_dataset(jax.random.PRNGKey(0), task, 480)
+    splits = federated.split_federated(jax.random.PRNGKey(1), x, y,
+                                       num_clients=2)
+    model = cnn.make_vgg("vgg_tiny_cabac", [8, 16], 4, 3,
+                         dense_width=16, pool_after=(0, 1))
+    return model, splits
+
+
+@pytest.mark.parametrize("name", sorted(_PINS))
+def test_seed_parity_pins_through_vectorized_engine(tiny2, name):
+    """The three frozen byte pins hold with the two-pass engine as the
+    default wire path (nnc-cabac stays the `auto` codec)."""
+    from repro.core import fsfl as fsfl_lib
+    from repro.core.protocol import ProtocolConfig
+
+    assert nnc.DEFAULT_ENGINE == "vectorized"
+    model, splits = tiny2
+    cfg = ProtocolConfig(name=name, batch_size=32, local_lr=2e-3,
+                         **_PINS[name]["cfg"])
+    res = fsfl_lib.run_federated(model, cfg, splits, 2, jax.random.PRNGKey(7))
+    assert [r.up_bytes for r in res.records] == _PINS[name]["up_bytes"]
+
+
+# ------------------------------------------------------- fuzz / adversarial
+
+
+def _sample_message():
+    r = np.random.default_rng(5)
+    tree = {"w": (r.integers(-6, 7, (8, 8))
+                  * (r.random((8, 8)) < 0.4)).astype(np.int32),
+            "v": np.array([1, 0, -2, 5], np.int32)}
+    return tree, nnc.encode_tree(tree), nnc.shapes_of(tree)
+
+
+@pytest.mark.parametrize("engine", ["serial", "vectorized"])
+def test_truncated_payloads_raise_typed_error(engine):
+    _, msg, shapes = _sample_message()
+    for cut in range(len(msg)):
+        with pytest.raises(CorruptPayloadError):
+            nnc.decode_tree(msg[:cut], shapes, engine=engine)
+
+
+def test_corrupted_length_headers_raise_typed_error():
+    _, msg, shapes = _sample_message()
+    cab_len = int.from_bytes(msg[:8], "big")
+    byp_len = int.from_bytes(msg[8:16], "big")
+    bad_headers = [
+        (2**40, byp_len),              # cabac length beyond the message
+        (cab_len, 2**40),              # bypass length beyond the message
+        (0, byp_len),                  # lengths shorter than the message
+        (cab_len + 1, byp_len - 1),    # total right, split shifted: the
+        (cab_len - 1, byp_len + 1),    # streams desynchronise -> overrun
+    ]
+    for cl, bl in bad_headers:
+        bad = cl.to_bytes(8, "big") + bl.to_bytes(8, "big") + msg[16:]
+        with pytest.raises(CorruptPayloadError):
+            nnc.decode_tree(bad, shapes)
+    with pytest.raises(CorruptPayloadError):
+        nnc.decode_tree(msg + b"\x00", shapes)      # trailing junk
+
+
+def test_mismatched_shapes_trees_raise_typed_error():
+    tree, msg, _ = _sample_message()
+    fewer = nnc.shapes_of({"w": tree["w"]})                    # leaf missing
+    extra = nnc.shapes_of(dict(tree, z=np.ones((4, 4), np.int32)))
+    bigger = nnc.shapes_of({"w": np.zeros((16, 16), np.int32),
+                            "v": np.zeros(9, np.int32)})
+    for shapes in (fewer, extra, bigger):
+        with pytest.raises(CorruptPayloadError):
+            nnc.decode_tree(msg, shapes)
+
+
+def test_oversized_nnz_cannot_allocate():
+    """A corrupted 32-bit nnz header must be rejected by the framing bound
+    (nnz <= kept positions) before any decode-side allocation."""
+    tree = {"w": np.array([3, 0, -1], np.int32)}
+    msg = nnc.encode_tree(tree)
+    cab_len = int.from_bytes(msg[:8], "big")
+    byp = bytearray(msg[16 + cab_len:])
+    byp[0:4] = (2**31).to_bytes(4, "big")          # nnz = 2^31
+    bad = msg[:16 + cab_len] + bytes(byp)
+    with pytest.raises(CorruptPayloadError, match="nnz"):
+        nnc.decode_tree(bad, nnc.shapes_of(tree))
+
+
+def test_k_rem_degenerate_framing_regression():
+    """nnz > 0 with no >2 magnitudes: the 4-bit k header is still framed,
+    is normalised to 0 by the encoder, and a non-zero value is rejected
+    (both sides of the n2 == 0 degeneracy, previously implicit via
+    choose_k([]))."""
+    tree = {"w": np.array([1, -2, 0, 2, -1, 0, 0, 1], np.int32)}
+    msg = _roundtrip_both_engines(tree)   # round-trips on both engines
+    # bypass layout for this tensor: [32b nnz=5][4b k_run][gaps][5 signs]
+    # [4b k_rem] — k_rem are the last 4 written bits; corrupt them
+    cab_len = int.from_bytes(msg[:8], "big")
+    byp = bytearray(msg[16 + cab_len:])
+    w = BitWriter()
+    nnz_idx = np.flatnonzero(tree["w"])
+    gaps = np.diff(nnz_idx, prepend=-1) - 1
+    w.put_uint(len(nnz_idx), 32)
+    w.put_uint(golomb.choose_k(gaps), 4)
+    golomb.encode_egk(w, gaps, golomb.choose_k(gaps))
+    w.put_bits((tree["w"][nnz_idx] < 0).astype(np.uint8))
+    k_rem_off = w.bit_length                       # k_rem starts here
+    byp[k_rem_off // 8] |= 0x80 >> (k_rem_off % 8)  # k_rem 0 -> nonzero
+    bad = msg[:16 + cab_len] + bytes(byp)
+    with pytest.raises(CorruptPayloadError, match="k_rem"):
+        nnc.decode_tree(bad, nnc.shapes_of(tree))
+
+
+def test_decode_batch_rejects_ragged_and_duplicate_clients():
+    from repro import comms
+
+    tree = {"w": np.array([[1, 0], [0, -1]], np.int32)}
+    spec = comms.WireSpec(params=comms.shape_template(
+        jax.tree.map(lambda x: x.astype(np.float32), tree)))
+    codec = comms.get_codec("nnc-cabac")
+    upd = comms.ClientUpdate(levels_params=tree, levels_scales=None,
+                             recon_params=None, recon_scales=None)
+    payloads = codec.encode_batch([upd, upd], spec, clients=[0, 1])
+    with pytest.raises(ValueError, match="ragged"):
+        codec.decode_batch(payloads, spec, clients=[0])
+    with pytest.raises(ValueError, match="duplicate"):
+        codec.decode_batch(payloads, spec, clients=[3, 3])
+    with pytest.raises(ValueError, match="ragged"):
+        codec.encode_batch([upd, upd], spec, clients=[0, 1, 2])
+    with pytest.raises(ValueError, match="duplicate"):
+        codec.encode_batch([upd, upd], spec, clients=[7, 7])
+    # anonymous batches stay valid (decode dequantizes by the spec step)
+    decs = codec.decode_batch(payloads, spec)
+    step = np.float32(spec.step_size)
+    _assert_tree_equal(
+        decs[0].params,
+        jax.tree.map(lambda x: x.astype(np.float32) * step, tree))
+
+
+def test_batch_encode_requires_matching_structures():
+    a = {"w": np.ones((2, 2), np.int32)}
+    b = {"w": np.ones((2, 2), np.int32), "x": np.ones(2, np.int32)}
+    with pytest.raises(ValueError, match="structur"):
+        nnc.encode_tree_batch([a, b])
+
+
+def test_batch_tree_coding_matches_per_message():
+    trees = [_rand_tree(100), ]
+    base = trees[0]
+    r = np.random.default_rng(9)
+    for _ in range(3):
+        trees.append({k: (r.integers(-4, 5, v.shape)
+                          * (r.random(v.shape) < 0.5)).astype(np.int32)
+                      for k, v in base.items()})
+    payloads = nnc.encode_tree_batch(trees)
+    assert payloads == [nnc.encode_tree(t) for t in trees]
+    outs = nnc.decode_tree_batch(payloads, nnc.shapes_of(base))
+    for out, tree in zip(outs, trees):
+        _assert_tree_equal(out, tree)

@@ -285,6 +285,89 @@ def test_pooled_uplink_is_bitwise_identical_to_serial(tiny2, executor):
     assert serial.records[0].test_acc == pooled.records[0].test_acc
 
 
+@pytest.fixture(scope="module")
+def tiny8():
+    return _tiny_setting(8)
+
+
+def _run_capturing(model, splits, cfg, ecfg):
+    """One engine round; returns (RunResult, contributions, pool_tasks)."""
+    eng = FederatedEngine(model, cfg, splits, jax.random.PRNGKey(7),
+                          engine_cfg=ecfg)
+    seen = []
+    orig = eng.aggregate
+
+    def capture(contribs, weights=None):
+        seen.extend(contribs)
+        return orig(contribs, weights)
+
+    eng.aggregate = capture
+    res = eng.run(1)
+    return res, seen, eng.uplink.pool_tasks
+
+
+def test_batched_uplink_chunks_cohort_into_at_most_worker_tasks(tiny8):
+    """K clients through W workers: the batch intake submits <= W pool
+    tasks (one per contiguous chunk) where per-client dispatch submits K —
+    and both are Contribution-identical to the unpooled serial intake."""
+    model, splits = tiny8
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    base, base_c, t0 = _run_capturing(model, splits, cfg, EngineConfig())
+    assert t0 == 0
+    batch, batch_c, t1 = _run_capturing(
+        model, splits, cfg,
+        EngineConfig(uplink_workers=2, uplink_batch=True))
+    assert 0 < t1 <= 2                      # K=8, W=2 => at most W tasks
+    per, per_c, t2 = _run_capturing(model, splits, cfg,
+                                    EngineConfig(uplink_workers=2))
+    assert t2 == 8                          # per-client: one task per update
+    # Contribution equality: bytes, clients and decoded trees bitwise
+    for other in (batch_c, per_c):
+        assert [c.client for c in other] == [c.client for c in base_c]
+        assert ([c.payload_bytes for c in other]
+                == [c.payload_bytes for c in base_c])
+        for a, b in zip(base_c, other):
+            for x, y in zip(jax.tree.leaves(a.delta_params),
+                            jax.tree.leaves(b.delta_params)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert batch.records[0].up_bytes == base.records[0].up_bytes
+    assert batch.records[0].test_acc == base.records[0].test_acc
+
+
+def test_batched_uplink_forkserver_contributions_equal_serial(tiny2):
+    """The flat-array transport (no pytree pickling) through the forkserver
+    pool reassembles bitwise-identical Contributions."""
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    base, base_c, _ = _run_capturing(model, splits, cfg, EngineConfig())
+    fork, fork_c, tasks = _run_capturing(
+        model, splits, cfg,
+        EngineConfig(uplink_workers=2, uplink_batch=True,
+                     uplink_executor="process"))
+    assert 0 < tasks <= 2
+    assert [c.payload_bytes for c in fork_c] == [c.payload_bytes
+                                                 for c in base_c]
+    for a, b in zip(base_c, fork_c):
+        for x, y in zip(jax.tree.leaves(a.delta_params),
+                        jax.tree.leaves(b.delta_params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert fork.records[0].test_acc == base.records[0].test_acc
+
+
+def test_up_bytes_pin_through_batch_path(tiny2):
+    """Byte accounting through the batch intake reproduces the frozen
+    fsfl seed pin: batching cannot move a single payload byte."""
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    res = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                         engine=EngineConfig(uplink_workers=2,
+                                             uplink_batch=True))
+    assert [r.up_bytes for r in res.records] == _PINS["fsfl"]["up_bytes"]
+
+
 def test_process_executor_refuses_non_fork_safe_codec(tiny2):
     model, splits = tiny2
     cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,

@@ -14,6 +14,10 @@ the final server model.
                               sampling / server optimizers / async rounds)
     [--executor serial|vmap|sharded]  (cohort execution backend; "sharded"
                               lays the client axis across visible devices)
+    [--population N]         (virtual population over the data shards; the
+                              cohort streams through the client-state store)
+    [--store memory|sharded] (eager vs. lazy/spill client-state backend)
+    [--traffic PRESET]       (diurnal / churn traffic trace presets)
 """
 import argparse
 import dataclasses
@@ -24,7 +28,8 @@ from repro import checkpoint
 from repro.core.fsfl import run_federated
 from repro.core.protocol import ProtocolConfig
 from repro.data import federated, synthetic
-from repro.fl import get_scenario, list_scenarios, run_scenario
+from repro.fl import (TRAFFIC_PRESETS, get_scenario, list_scenarios,
+                      run_scenario)
 from repro.models import cnn
 
 
@@ -53,6 +58,21 @@ def main():
                          "one vmapped call (default), or the cohort axis "
                          "sharded across visible devices (scenario runs "
                          "only)")
+    ap.add_argument("--population", type=int, default=None,
+                    help="virtual population size: the scenario's --clients "
+                         "data shards back this many hash-mapped clients; "
+                         "per-client state lives in the configured store "
+                         "(scenario runs only; sync scenarios need a "
+                         "cohort_size)")
+    ap.add_argument("--store", choices=("memory", "sharded"), default=None,
+                    help="client-state backend: eager in-memory (legacy) or "
+                         "sharded+lazy with LRU spill-to-disk (scenario "
+                         "runs only)")
+    ap.add_argument("--traffic", choices=sorted(TRAFFIC_PRESETS),
+                    default=None,
+                    help="trace-driven traffic preset: diurnal availability "
+                         "curves / device-class latency / mid-round churn "
+                         "(scenario runs only)")
     ap.add_argument("--out", default="/tmp/fsfl_server.ckpt")
     args = ap.parse_args()
 
@@ -60,9 +80,12 @@ def main():
     if scenario is None and (args.wire_schema is not None
                              or args.uplink_workers is not None
                              or args.uplink_batch
-                             or args.executor is not None):
-        ap.error("--wire-schema/--uplink-workers/--uplink-batch/--executor "
-                 "need --scenario")
+                             or args.executor is not None
+                             or args.population is not None
+                             or args.store is not None
+                             or args.traffic is not None):
+        ap.error("--wire-schema/--uplink-workers/--uplink-batch/--executor/"
+                 "--population/--store/--traffic need --scenario")
     if args.clients is None:
         args.clients = scenario.num_clients if scenario else 4
     if args.rounds is None and scenario is None:
@@ -89,6 +112,14 @@ def main():
             scenario = dataclasses.replace(scenario, uplink_batch=True)
         if args.executor is not None:
             scenario = dataclasses.replace(scenario, executor=args.executor)
+        if args.population is not None:
+            scenario = dataclasses.replace(scenario,
+                                           population=args.population)
+        if args.store is not None:
+            scenario = dataclasses.replace(scenario, store=args.store)
+        if args.traffic is not None:
+            scenario = dataclasses.replace(
+                scenario, traffic=TRAFFIC_PRESETS[args.traffic])
         res = run_scenario(scenario, rounds=args.rounds,
                            model=model, splits=splits, verbose=True)
     else:

@@ -30,6 +30,10 @@ if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
   echo "== cohort scaling smoke: executor backends + async window batching =="
   python benchmarks/cohort_scaling.py --smoke --out /tmp/BENCH_cohort_smoke.json >/dev/null
 
+  echo "== population smoke: sharded lazy store, peak-RSS O(cohort) guard =="
+  python benchmarks/population_scale.py --smoke --guard \
+    --out /tmp/BENCH_population_smoke.json
+
   echo "== engine smoke: 2 rounds, K=4 of C=8, FedAdam, tiny CNN =="
   python - <<'PY'
 import jax

@@ -7,12 +7,17 @@ is the slowest participant's ``down + up`` transfer (the server waits for
 the full cohort); in async mode the transfer times stretch each client's
 in-flight window on the existing FedBuff simulated clock.
 
-Per-client bandwidth heterogeneity is a lognormal factor around the
-configured rates (same shape the async latencies use), fixed for the run
-and derived deterministically from ``ChannelConfig.seed``.  ``drop_rate``
-models straggler loss in sync rounds: a dropped client's upload is charged
-to the byte totals (it was transmitted) but excluded from aggregation and
-from ``RoundRecord.participants``.  Under error feedback (Eq. 5) the engine
+Every draw is keyed deterministically through :mod:`repro.core.prand`:
+per-client bandwidth factors hash ``(seed, direction, client)`` and the
+optional latency jitter hashes ``(seed, client, round)``.  Nothing is
+pre-materialized per client — there is no ``(2, num_clients)`` factor
+array — so a client of a 10^6-population run that streams in and out of a
+lazy state store (``repro.fl.population``) reproduces exactly the transfer
+times it would have had resident, regardless of store backend, population
+size, or materialization order.  ``drop_rate`` models straggler loss in
+sync rounds: a dropped client's upload is charged to the byte totals (it
+was transmitted) but excluded from aggregation and from
+``RoundRecord.participants``.  Under error feedback (Eq. 5) the engine
 re-injects the dropped client's decoded delta into its residual, so the
 lost mass is retransmitted in a later round rather than silently vanishing
 (scale deltas carry no residual and stay lost).
@@ -24,44 +29,65 @@ import math
 
 import numpy as np
 
+from repro.core import prand
+
 
 @dataclasses.dataclass(frozen=True)
 class ChannelConfig:
-    """Bandwidths in Mbit/s (inf = free transfers), latency in seconds."""
+    """Bandwidths in Mbit/s (inf = free transfers), latency in seconds.
+
+    ``latency_sigma > 0`` adds a lognormal jitter to ``latency_s`` drawn
+    per ``(client, round)`` — the same transfer re-queried in the same
+    round repeats its draw, a different round draws fresh.
+    """
     up_mbps: float = math.inf
     down_mbps: float = math.inf
     latency_s: float = 0.0
+    latency_sigma: float = 0.0     # per-(client, round) lognormal jitter
     bandwidth_sigma: float = 0.0   # lognormal per-client spread; 0 = uniform
     drop_rate: float = 0.0         # sync-mode upload loss probability
     seed: int = 0
 
 
 class ChannelModel:
-    def __init__(self, cfg: ChannelConfig, num_clients: int):
+    def __init__(self, cfg: ChannelConfig, num_clients: int = 0):
+        # num_clients is advisory only (kept for call-site compat): draws
+        # are keyed per client id, never indexed out of a population array
         self.cfg = cfg
-        rng = np.random.default_rng(cfg.seed)
-        if cfg.bandwidth_sigma > 0.0:
-            factor = np.exp(rng.normal(0.0, cfg.bandwidth_sigma,
-                                       (2, num_clients)))
-        else:
-            factor = np.ones((2, num_clients))
-        self._up_bps = cfg.up_mbps * 1e6 / 8.0 * factor[0]     # bytes/s
-        self._down_bps = cfg.down_mbps * 1e6 / 8.0 * factor[1]
+        self.num_clients = num_clients
 
-    def up_time(self, client: int, nbytes: int) -> float:
+    def _bw_factor(self, tag: int, client: int) -> float:
+        if self.cfg.bandwidth_sigma <= 0.0:
+            return 1.0
+        z = float(prand.normal(self.cfg.seed, tag, int(client)))
+        return math.exp(self.cfg.bandwidth_sigma * z)
+
+    def _latency(self, client: int, round_idx: int) -> float:
+        if self.cfg.latency_sigma <= 0.0 or self.cfg.latency_s == 0.0:
+            return self.cfg.latency_s
+        z = float(prand.normal(self.cfg.seed, prand.TAG_CHAN_LAT,
+                               int(client), int(round_idx)))
+        return self.cfg.latency_s * math.exp(self.cfg.latency_sigma * z)
+
+    def up_time(self, client: int, nbytes: int, round_idx: int = 0) -> float:
         """Seconds to upload ``nbytes`` from ``client`` (latency included)."""
-        rate = self._up_bps[client]
-        return self.cfg.latency_s + (0.0 if math.isinf(rate)
-                                     else nbytes / rate)
+        rate = (self.cfg.up_mbps * 1e6 / 8.0
+                * self._bw_factor(prand.TAG_BW_UP, client))
+        return self._latency(client, round_idx) + (
+            0.0 if math.isinf(rate) else nbytes / rate)
 
-    def down_time(self, client: int, nbytes: int) -> float:
-        rate = self._down_bps[client]
-        return self.cfg.latency_s + (0.0 if math.isinf(rate)
-                                     else nbytes / rate)
+    def down_time(self, client: int, nbytes: int,
+                  round_idx: int = 0) -> float:
+        rate = (self.cfg.down_mbps * 1e6 / 8.0
+                * self._bw_factor(prand.TAG_BW_DOWN, client))
+        return self._latency(client, round_idx) + (
+            0.0 if math.isinf(rate) else nbytes / rate)
 
-    def round_time(self, clients, up_sizes, down_nbytes: int) -> float:
+    def round_time(self, clients, up_sizes, down_nbytes: int,
+                   round_idx: int = 0) -> float:
         """Sync-round duration: the slowest participant's down + up leg."""
-        return max((self.down_time(c, down_nbytes) + self.up_time(c, n)
+        return max((self.down_time(c, down_nbytes, round_idx)
+                    + self.up_time(c, n, round_idx)
                     for c, n in zip(clients, up_sizes)), default=0.0)
 
     def dropped(self, round_idx: int, client: int) -> bool:

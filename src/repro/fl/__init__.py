@@ -19,8 +19,12 @@ from repro.fl.rounds import (SCHEDULERS, Aggregate, AggregatedRound,
                              Downlink, Evaluate, LocalTrain, RoundIntake,
                              RoundScheduler, ServerStep, SyncScheduler,
                              Uplink)
+from repro.fl.population import (ClientStateStore, InMemoryStore,
+                                 ShardedLazyStore, SplitsView, StoreConfig,
+                                 TRAFFIC_PRESETS, TrafficConfig, TrafficModel,
+                                 VirtualPopulationView, make_store, make_view)
 from repro.fl.sampling import (SamplingConfig, gather_clients, pad_clients,
-                               sample_cohort, scatter_clients)
+                               sample_cohort, scatter_clients, stream_cohort)
 from repro.fl.scenarios import (SCENARIOS, Scenario, get_scenario,
                                 list_scenarios, register, run_scenario,
                                 validate_scenario)
@@ -38,8 +42,11 @@ __all__ = [
     "RoundIntake", "RoundScheduler", "ServerStep", "SyncScheduler", "Uplink",
     "EXECUTORS", "ClientExecutor", "SerialExecutor", "ShardedExecutor",
     "VmapExecutor", "make_executor",
+    "ClientStateStore", "InMemoryStore", "ShardedLazyStore", "SplitsView",
+    "StoreConfig", "TRAFFIC_PRESETS", "TrafficConfig", "TrafficModel",
+    "VirtualPopulationView", "make_store", "make_view",
     "SamplingConfig", "gather_clients", "pad_clients", "sample_cohort",
-    "scatter_clients",
+    "scatter_clients", "stream_cohort",
     "SCENARIOS", "Scenario", "get_scenario", "list_scenarios", "register",
     "run_scenario", "validate_scenario",
     "ServerOptConfig", "make_server_opt", "server_step", "server_update",

@@ -16,6 +16,8 @@ normalised over the buffer.  Client round latencies are heterogeneous
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Any, NamedTuple
 
 import jax
@@ -34,6 +36,53 @@ class AsyncConfig:
     # the earliest finisher are batched into ONE executor call (0.0 = one
     # completion at a time, the pre-batching behaviour — ties included)
     dispatch_window: float = 0.0
+    # adaptive windowing: instead of a fixed dispatch_window, keep merging
+    # the next finisher into the batch while the marginal simulated wait
+    # (gap to the previous finisher) does not exceed the measured per-call
+    # dispatch saving — so the window tracks the observed arrival
+    # distribution (dense diurnal peaks batch wide, sparse troughs dispatch
+    # immediately).  Mutually exclusive with dispatch_window > 0.
+    adaptive_window: bool = False
+    # measured saving of merging one executor call (simulated seconds);
+    # None = derive it from BENCH_cohort.json via load_call_saving()
+    call_saving_s: float | None = None
+
+
+def load_call_saving(path: str | None = None, default: float = 0.05) -> float:
+    """Per-executor-call dispatch saving measured by the cohort benchmark.
+
+    ``benchmarks/cohort_scaling.py`` times the same async workload with
+    one-completion-at-a-time dispatch (``serial_completions``) and with full
+    window batching (``windowed``); the aggregation-time difference divided
+    by the number of calls the window merged away is the simulated seconds
+    ONE merged call is worth:
+
+        saving = (T_serial_agg - T_windowed_agg) / B / (1 - 1/m)
+
+    with B completions per aggregation and m the mean windowed batch size
+    (a B-completion aggregation costs B calls serially and B/m windowed).
+    The adaptive window batches the next finisher exactly while the
+    marginal wait is below this number.  Falls back to ``default`` when no
+    benchmark file exists (fresh checkout).
+    """
+    if path is None:
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        path = os.path.join(root, "BENCH_cohort.json")
+    try:
+        with open(path) as f:
+            bench = json.load(f)["async"]
+        t_serial = float(bench["no_wire"]["serial_completions"]
+                         ["steady_agg_s"])
+        t_windowed = float(bench["no_wire"]["windowed"]["steady_agg_s"])
+        sizes = bench["no_wire"]["windowed"]["batch_sizes"]
+        m = float(np.mean(sizes)) if sizes else 1.0
+        b = float(bench["concurrency"])
+    except (OSError, KeyError, ValueError, json.JSONDecodeError):
+        return default
+    if m <= 1.0 or b <= 0.0 or t_serial <= t_windowed:
+        return default
+    return (t_serial - t_windowed) / b / (1.0 - 1.0 / m)
 
 
 class BufferEntry(NamedTuple):

@@ -71,6 +71,8 @@ from repro.core.protocol import ProtocolConfig, make_protocol
 from repro.data.federated import FederatedSplits
 from repro.fl.async_buffer import AsyncConfig
 from repro.fl.executors import EXECUTORS, make_executor
+from repro.fl.population import (StoreConfig, TrafficConfig, TrafficModel,
+                                 make_store, make_view)
 from repro.fl.rounds import (SCHEDULERS, Aggregate, CohortPlan, Downlink,
                              Evaluate, LocalTrain, RoundIntake, ServerStep,
                              Uplink, client_slice, raw_bytes_per_client)
@@ -139,6 +141,10 @@ class EngineConfig:
     uplink_batch: bool = False           # batch-API intake: <=W pool tasks
     executor: str = "vmap"               # cohort backend (fl.executors)
     mesh_shape: tuple[int, ...] | None = None  # sharded: 1-D cohort mesh
+    # --- population axes (repro.fl.population) ---
+    population: int | None = None        # virtual clients (None = splits')
+    store: StoreConfig = dataclasses.field(default_factory=StoreConfig)
+    traffic: TrafficConfig | None = None  # trace-driven arrivals/churn
 
     def validate(self, num_clients: int | None = None) -> None:
         """Reject conflicting axes up front (also run at Scenario
@@ -194,13 +200,40 @@ class EngineConfig:
                 "async completions; it has no meaning for mode="
                 f"{self.mode!r} — drop it or set mode='async'")
         if (self.mode == "async" and self.uplink_workers > 1
-                and self.async_cfg.dispatch_window <= 0.0):
+                and self.async_cfg.dispatch_window <= 0.0
+                and not self.async_cfg.adaptive_window):
             raise ValueError(
                 "uplink_workers parallelises a batch of wire round-trips; "
                 "with dispatch_window=0 the async scheduler transmits one "
                 "completion at a time, so a pool would be a silent no-op — "
-                "set AsyncConfig.dispatch_window > 0 (window batches flow "
-                "through the pooled intake) or leave uplink_workers unset")
+                "set AsyncConfig.dispatch_window > 0 or adaptive_window "
+                "(window batches flow through the pooled intake) or leave "
+                "uplink_workers unset")
+        if self.async_cfg.adaptive_window:
+            if self.mode != "async":
+                raise ValueError(
+                    "AsyncConfig.adaptive_window sizes async dispatch "
+                    f"batches; it has no meaning for mode={self.mode!r}")
+            if self.async_cfg.dispatch_window > 0.0:
+                raise ValueError(
+                    "adaptive_window and a fixed dispatch_window are "
+                    "mutually exclusive — drop one")
+            cs = self.async_cfg.call_saving_s
+            if cs is not None and cs < 0.0:
+                raise ValueError("AsyncConfig.call_saving_s must be >= 0 "
+                                 "(simulated seconds per merged call)")
+        if self.population is not None:
+            if self.population < 1:
+                raise ValueError(
+                    f"population must be >= 1, got {self.population}")
+            if self.mode == "sync" and self.sampling.cohort_size is None:
+                raise ValueError(
+                    "a population axis means full participation would "
+                    "materialize every virtual client — set "
+                    "SamplingConfig.cohort_size (K << population)")
+        self.store.validate()
+        if self.traffic is not None:
+            self.traffic.validate()
         if self.wire_schema not in (1, 2):
             raise ValueError(
                 f"unknown wire schema {self.wire_schema!r} (known: 1, 2)")
@@ -253,11 +286,14 @@ class FederatedEngine:
     def __init__(self, model, cfg: ProtocolConfig, splits: FederatedSplits,
                  key: jax.Array, engine_cfg: EngineConfig | None = None):
         engine_cfg = engine_cfg if engine_cfg is not None else EngineConfig()
-        engine_cfg.validate(splits.num_clients)
+        num_clients = (engine_cfg.population
+                       if engine_cfg.population is not None
+                       else splits.num_clients)
+        engine_cfg.validate(num_clients)
         self.engine_cfg = engine_cfg
         self.protocol_cfg = cfg
         self.config_name = cfg.name
-        self.num_clients = splits.num_clients
+        self.num_clients = num_clients
         self.transmit = engine_cfg.measure_bytes
 
         n_train = splits.client_x.shape[1]
@@ -266,17 +302,28 @@ class FederatedEngine:
                                                      steps_per_round)
         k_init, key = jax.random.split(key)
         server, persistent0 = init(k_init)
-        persistent = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (self.num_clients,) + x.shape),
-            persistent0)
 
         self.server = server
         self.version = 0   # aggregation counter (async staleness reference)
+        self.traffic = (TrafficModel(engine_cfg.traffic)
+                        if engine_cfg.traffic is not None else None)
 
         # ---- the stage pipeline (ONE instance each; schedulers share) ----
-        self.cohort = CohortPlan(engine_cfg.sampling, self.num_clients)
+        # population axes: per-client state lives in a ClientStateStore
+        # (eager in-memory by default — bit-for-bit the legacy stacked
+        # tree — or sharded+lazy for O(cohort) memory), data flows through
+        # a SplitsView (identity, or the hash-mapped virtual view), and
+        # cohort selection streams when a population/traffic axis is set
+        self.cohort = CohortPlan(
+            engine_cfg.sampling, self.num_clients,
+            streaming=engine_cfg.population is not None,
+            traffic=self.traffic)
         self.local_train = LocalTrain(
-            client_round, splits, persistent, cfg.batch_size,
+            client_round,
+            make_view(splits, engine_cfg.population,
+                      seed=engine_cfg.sampling.stream_seed),
+            make_store(engine_cfg.store, persistent0, self.num_clients),
+            cfg.batch_size,
             executor=make_executor(engine_cfg.executor,
                                    mesh_shape=engine_cfg.mesh_shape))
         self.uplink = Uplink(cfg, engine_cfg, server)

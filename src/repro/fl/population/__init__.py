@@ -1,0 +1,35 @@
+"""Population-scale client simulation (see README.md in this package).
+
+Three cooperating pieces let the engine run 10^5–10^6-client populations
+with O(cohort) memory:
+
+  * client-state **stores** (:mod:`.store`) — where per-client residuals /
+    optimizer state live: eager in-memory (legacy, bit-for-bit) or
+    sharded + lazy with LRU spill-to-disk,
+  * **virtual data views** (:mod:`.virtual`) — hash-map virtual client ids
+    onto the base data shards so the cohort's data gathers without the
+    population ever existing,
+  * **traffic models** (:mod:`.traffic`) — trace-driven availability
+    (diurnal curves, timezone spread), device-class latency mixes, and
+    mid-round churn feeding the schedulers' simulated clock.
+
+Cohort *selection* over the virtual population is the streaming sampler in
+:func:`repro.fl.sampling.stream_cohort`; per-client randomness shared by
+all three pieces is :mod:`repro.core.prand`.
+"""
+from repro.fl.population.store import (ClientStateStore, InMemoryStore,
+                                       ShardedLazyStore, StoreConfig, STORES,
+                                       make_store)
+from repro.fl.population.traffic import (DEVICE_MIX_DEFAULT, DIURNAL_DEFAULT,
+                                         DeviceClass, TRAFFIC_PRESETS,
+                                         TrafficConfig, TrafficModel)
+from repro.fl.population.virtual import (SplitsView, VirtualPopulationView,
+                                         make_view)
+
+__all__ = [
+    "ClientStateStore", "InMemoryStore", "ShardedLazyStore", "StoreConfig",
+    "STORES", "make_store",
+    "DeviceClass", "DEVICE_MIX_DEFAULT", "DIURNAL_DEFAULT",
+    "TRAFFIC_PRESETS", "TrafficConfig", "TrafficModel",
+    "SplitsView", "VirtualPopulationView", "make_view",
+]

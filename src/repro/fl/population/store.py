@@ -1,0 +1,289 @@
+"""Client-state stores: where a population's per-client FL state lives.
+
+Every client in the simulation owns persistent state across rounds — its
+error-feedback residual (Eq. 5), local/scale optimizer moments, schedule
+counters (:class:`repro.core.protocol.ClientPersistent`).  The engine used
+to materialize that state eagerly as one client-stacked pytree, which is
+O(population) memory and caps runs at toy client counts.  This module puts
+a :class:`ClientStateStore` protocol between ``rounds.LocalTrain`` and the
+state so the backend is an engine axis (``EngineConfig.store``):
+
+  * :class:`InMemoryStore` — the eager client-stacked tree, bit-for-bit
+    the pre-population behaviour (``jnp.broadcast_to`` of the init state,
+    device-resident, fancy-indexed gather/scatter).  The right backend for
+    small populations and the one every seed parity pin runs through.
+  * :class:`ShardedLazyStore` — clients partitioned into fixed-size shards
+    (``client_id // shard_size``); a shard materializes only when one of
+    its clients is *written*.  An LRU keeps at most ``max_hot_shards``
+    shards in memory; evicted shards spill to disk through the
+    ``repro.checkpoint.io`` msgpack serializer and reload on demand.
+    Clients that were never written cost nothing: a gather serves them
+    straight from the single init template row.  Peak memory is
+    O(max_hot_shards * shard_size), independent of the population — the
+    property ``benchmarks/population_scale.py`` guards in CI.
+
+Both backends expose the same gather/scatter contract over host/device
+client-stacked pytrees and are proven byte/accuracy-identical through the
+full engine in tests/test_population.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+import weakref
+from collections import OrderedDict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    """Client-state backend selection (``EngineConfig.store``).
+
+    ``spill_dir=None`` creates a private temp directory, removed when the
+    store is garbage-collected or explicitly ``close()``-d.  ``spill_level``
+    is the checkpoint compression level (1 = fast; residuals are sparse and
+    compress well even at low effort).
+    """
+    backend: str = "memory"        # "memory" | "sharded"
+    shard_size: int = 64           # clients per shard (sharded backend)
+    max_hot_shards: int = 16       # LRU capacity before spilling to disk
+    spill_dir: str | None = None   # None = private tempdir
+    spill_level: int = 1
+
+    def validate(self) -> None:
+        if self.backend not in STORES:
+            known = ", ".join(sorted(STORES))
+            raise ValueError(f"unknown store backend: {self.backend!r} "
+                             f"(known: {known})")
+        if self.shard_size < 1:
+            raise ValueError(f"shard_size must be >= 1, got {self.shard_size}")
+        if self.max_hot_shards < 1:
+            raise ValueError(
+                f"max_hot_shards must be >= 1, got {self.max_hot_shards}")
+
+
+class ClientStateStore:
+    """Protocol: client-stacked state keyed by client id.
+
+    ``gather(idx)`` returns the rows for ``idx`` stacked on a leading axis
+    (the layout the executors consume); ``scatter(idx, rows)`` writes a
+    cohort's updated rows back.  ``dense`` marks backends whose whole
+    stacked tree exists in memory — ``LocalTrain`` uses it to keep the
+    full-participation fast path (no gather copy) the parity pins rely on.
+    """
+
+    name: str = "?"
+    dense: bool = False
+    num_clients: int = 0
+
+    def gather(self, idx) -> Any:
+        raise NotImplementedError
+
+    def scatter(self, idx, rows: Any) -> None:
+        raise NotImplementedError
+
+    def stats(self) -> dict[str, int]:
+        return {}
+
+    def close(self) -> None:
+        pass
+
+
+class InMemoryStore(ClientStateStore):
+    """Eager client-stacked tree on device — the pre-population behaviour.
+
+    Construction broadcasts the single-client template to the population
+    (``jnp.broadcast_to``, zero-copy until written), gather is device fancy
+    indexing, scatter is ``.at[idx].set``.  ``state``/``set_state`` expose
+    the whole tree for the full-participation fast path.
+    """
+
+    name = "memory"
+    dense = True
+
+    def __init__(self, template: Any, num_clients: int):
+        self.num_clients = num_clients
+        self._state = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), template)
+
+    @property
+    def state(self) -> Any:
+        return self._state
+
+    def set_state(self, state: Any) -> None:
+        self._state = state
+
+    def gather(self, idx) -> Any:
+        idx = np.asarray(idx)
+        return jax.tree.map(lambda x: x[idx], self._state)
+
+    def scatter(self, idx, rows: Any) -> None:
+        idx = np.asarray(idx)
+        self._state = jax.tree.map(lambda f, c: f.at[idx].set(c),
+                                   self._state, rows)
+
+
+class ShardedLazyStore(ClientStateStore):
+    """Sharded, lazily-materialized client state with LRU spill-to-disk.
+
+    Shard ``s`` owns clients ``[s*shard_size, (s+1)*shard_size)`` as one
+    host-resident stacked pytree.  Lifecycle:
+
+      cold (never written)  --scatter-->  hot (LRU)  --evict-->  spilled
+                                             ^                      |
+                                             +-------- load --------+
+
+    Gathering a cold client returns the init template row without
+    materializing anything; gathering a spilled client reloads its shard
+    into the LRU (possibly evicting another).  Only *written* shards ever
+    occupy memory or disk, so a million-client population with a K-client
+    cohort per round costs O(rounds * K / shard_size) shards on disk and
+    O(max_hot_shards * shard_size) rows in memory, never O(population).
+    """
+
+    name = "sharded"
+    dense = False
+
+    def __init__(self, template: Any, num_clients: int,
+                 cfg: StoreConfig | None = None):
+        cfg = cfg if cfg is not None else StoreConfig(backend="sharded")
+        cfg.validate()
+        self.num_clients = num_clients
+        self.cfg = cfg
+        host = jax.tree.map(np.asarray, jax.device_get(template))
+        self._template_leaves, self._treedef = jax.tree.flatten(host)
+        self._hot: OrderedDict[int, list[np.ndarray]] = OrderedDict()
+        self._spilled: dict[int, str] = {}
+        if cfg.spill_dir is None:
+            self._dir = tempfile.mkdtemp(prefix="repro_client_store_")
+            self._cleanup = weakref.finalize(self, shutil.rmtree, self._dir,
+                                             ignore_errors=True)
+        else:
+            os.makedirs(cfg.spill_dir, exist_ok=True)
+            self._dir = cfg.spill_dir
+            self._cleanup = None
+        # observability: tests pin the lifecycle on these, the population
+        # benchmark asserts the O(cohort) bound through them
+        self.materializations = 0
+        self.spills = 0
+        self.loads = 0
+        self.cold_gathers = 0
+        self.max_hot_seen = 0
+
+    # -- shard plumbing ----------------------------------------------------
+
+    def _sid(self, client: int) -> int:
+        return client // self.cfg.shard_size
+
+    def _path(self, sid: int) -> str:
+        return os.path.join(self._dir, f"shard_{sid:08d}.msgpack")
+
+    def _touch(self, sid: int) -> list[np.ndarray] | None:
+        """Hot shard (LRU-touched) or reloaded spilled shard; None = cold."""
+        if sid in self._hot:
+            self._hot.move_to_end(sid)
+            return self._hot[sid]
+        if sid in self._spilled:
+            # restored leaves may view the msgpack read buffer (read-only);
+            # scatter writes rows in place, so force writable copies
+            leaves = []
+            for leaf in ckpt_io.restore(self._spilled[sid]):
+                arr = np.asarray(leaf)
+                leaves.append(arr if arr.flags.writeable else arr.copy())
+            self.loads += 1
+            self._insert(sid, leaves)
+            return leaves
+        return None
+
+    def _materialize(self, sid: int) -> list[np.ndarray]:
+        """First write into a cold shard: template rows, writable copies."""
+        rows = min(self.cfg.shard_size,
+                   self.num_clients - sid * self.cfg.shard_size)
+        leaves = [np.repeat(leaf[None], rows, axis=0)
+                  for leaf in self._template_leaves]
+        self.materializations += 1
+        self._insert(sid, leaves)
+        return leaves
+
+    def _insert(self, sid: int, leaves: list[np.ndarray]) -> None:
+        # evict BEFORE inserting so the hot set never exceeds the cap —
+        # max_hot_seen is the honest high-water mark the benchmark asserts
+        while len(self._hot) >= self.cfg.max_hot_shards:
+            old_sid, old_leaves = self._hot.popitem(last=False)
+            ckpt_io.save(self._path(old_sid), list(old_leaves),
+                         level=self.cfg.spill_level)
+            self._spilled[old_sid] = self._path(old_sid)
+            self.spills += 1
+        self._hot[sid] = leaves
+        self._hot.move_to_end(sid)
+        self.max_hot_seen = max(self.max_hot_seen, len(self._hot))
+
+    # -- the store contract ------------------------------------------------
+
+    def gather(self, idx) -> Any:
+        idx = np.asarray(idx)
+        rows: list[list[np.ndarray]] = []
+        for c in idx:
+            c = int(c)
+            shard = self._touch(self._sid(c))
+            if shard is None:
+                self.cold_gathers += 1
+                rows.append(self._template_leaves)
+            else:
+                pos = c - self._sid(c) * self.cfg.shard_size
+                rows.append([leaf[pos] for leaf in shard])
+        stacked = [np.stack([r[j] for r in rows])
+                   for j in range(len(self._template_leaves))]
+        return jax.tree.unflatten(self._treedef, stacked)
+
+    def scatter(self, idx, rows: Any) -> None:
+        idx = np.asarray(idx)
+        host = jax.device_get(rows)
+        leaves = [np.asarray(leaf) for leaf in jax.tree.leaves(host)]
+        for i, c in enumerate(idx):
+            c = int(c)
+            sid = self._sid(c)
+            shard = self._touch(sid)
+            if shard is None:
+                shard = self._materialize(sid)
+            pos = c - sid * self.cfg.shard_size
+            for j, leaf in enumerate(leaves):
+                shard[j][pos] = leaf[i]
+
+    def stats(self) -> dict[str, int]:
+        return {"hot_shards": len(self._hot),
+                "max_hot_seen": self.max_hot_seen,
+                "spilled_shards": len(self._spilled),
+                "materializations": self.materializations,
+                "spills": self.spills,
+                "loads": self.loads,
+                "cold_gathers": self.cold_gathers}
+
+    def close(self) -> None:
+        self._hot.clear()
+        self._spilled.clear()
+        if self._cleanup is not None:
+            self._cleanup()
+
+
+STORES: dict[str, type[ClientStateStore]] = {
+    "memory": InMemoryStore,
+    "sharded": ShardedLazyStore,
+}
+
+
+def make_store(cfg: StoreConfig, template: Any,
+               num_clients: int) -> ClientStateStore:
+    """Build a client-state backend from ``EngineConfig.store``."""
+    cfg.validate()
+    if cfg.backend == "memory":
+        return InMemoryStore(template, num_clients)
+    return ShardedLazyStore(template, num_clients, cfg)

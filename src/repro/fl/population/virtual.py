@@ -1,0 +1,122 @@
+"""Virtual-population data views: K cohort rows from C >> base clients.
+
+The stacked :class:`repro.data.federated.FederatedSplits` arrays hold one
+row per *base* client — a few dozen real shards.  A population run
+(``EngineConfig.population = 10^5..10^6``) needs per-client data for ids
+that will never all exist at once, so ``LocalTrain`` reads data through a
+view with one contract:
+
+    gather(idx) -> (cx, cy, cvx, cvy)   # cohort-stacked rows for idx
+    all()       -> the full stacked arrays (dense views only)
+
+:class:`SplitsView` is the identity view over the real splits (the legacy
+engine path, bit-for-bit).  :class:`VirtualPopulationView` maps each
+virtual client id to a base shard via a deterministic hash
+(``prand.randint(base, seed, TAG_DATA, id)``), so client 734_188 of a
+million-client run always trains on the same base shard, on any host, in
+any materialization order — the data analogue of the hash-keyed state
+store and traffic draws.  Virtual clients sharing a base shard model the
+realistic regime where the population is much larger than the number of
+distinct data distributions.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.core import prand
+from repro.data.federated import FederatedSplits
+
+
+class SplitsView:
+    """Identity data view over the real stacked splits (legacy path)."""
+
+    dense = True
+
+    def __init__(self, splits: FederatedSplits):
+        self._splits = splits
+        self.num_clients = splits.num_clients
+        self.n_train = splits.client_x.shape[1]
+
+    # passthrough for code (tests, stages) that reads the raw arrays
+    @property
+    def client_x(self):
+        return self._splits.client_x
+
+    @property
+    def client_y(self):
+        return self._splits.client_y
+
+    @property
+    def client_val_x(self):
+        return self._splits.client_val_x
+
+    @property
+    def client_val_y(self):
+        return self._splits.client_val_y
+
+    @property
+    def test_x(self):
+        return self._splits.test_x
+
+    @property
+    def test_y(self):
+        return self._splits.test_y
+
+    def base_index(self, idx) -> np.ndarray:
+        return np.asarray(idx)
+
+    def gather(self, idx) -> tuple[Any, Any, Any, Any]:
+        s, b = self._splits, np.asarray(idx)
+        return (s.client_x[b], s.client_y[b],
+                s.client_val_x[b], s.client_val_y[b])
+
+    def all(self) -> tuple[Any, Any, Any, Any]:
+        s = self._splits
+        return s.client_x, s.client_y, s.client_val_x, s.client_val_y
+
+
+class VirtualPopulationView(SplitsView):
+    """Hash-mapped view: ``population`` virtual clients over the base splits.
+
+    ``all()`` is forbidden — a virtual population exists only through
+    cohort gathers, which is the whole point.
+    """
+
+    dense = False
+
+    def __init__(self, splits: FederatedSplits, population: int,
+                 seed: int = 0):
+        super().__init__(splits)
+        if population < splits.num_clients:
+            raise ValueError(
+                f"population ({population}) must be >= the number of base "
+                f"data shards ({splits.num_clients}); shrink the splits or "
+                "drop the population axis")
+        self.num_clients = population
+        self.base = splits.num_clients
+        self.seed = seed
+
+    def base_index(self, idx) -> np.ndarray:
+        """Deterministic virtual-id -> base-shard map (uint64-hash keyed)."""
+        return prand.randint(self.base, self.seed, prand.TAG_DATA,
+                             np.asarray(idx)).astype(np.int64)
+
+    def gather(self, idx) -> tuple[Any, Any, Any, Any]:
+        s, b = self._splits, self.base_index(idx)
+        return (s.client_x[b], s.client_y[b],
+                s.client_val_x[b], s.client_val_y[b])
+
+    def all(self):
+        raise RuntimeError(
+            f"cannot materialize all {self.num_clients} virtual clients; "
+            "virtual populations are cohort-gather only")
+
+
+def make_view(splits: FederatedSplits, population: int | None,
+              seed: int = 0) -> SplitsView:
+    """Identity view, or a virtual view when a population axis is set."""
+    if population is None or population == splits.num_clients:
+        return SplitsView(splits)
+    return VirtualPopulationView(splits, population, seed)

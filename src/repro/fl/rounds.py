@@ -61,16 +61,17 @@ import numpy as np
 
 from repro import comms
 from repro.core import delta as delta_lib
+from repro.core import prand
 from repro.core import quant as quant_lib
 from repro.core import sparsify as sparsify_lib
 from repro.core.protocol import ProtocolConfig, ServerState
 from repro.data.federated import client_epoch_batches, epoch_batches
 from repro.fl.executors import ClientExecutor, VmapExecutor
-from repro.fl.async_buffer import (client_latencies,
+from repro.fl.async_buffer import (client_latencies, load_call_saving,
                                    normalized_staleness_weights,
                                    weighted_mean_trees)
-from repro.fl.sampling import (SamplingConfig, gather_clients, sample_available,
-                               sample_cohort, scatter_clients)
+from repro.fl.sampling import (SamplingConfig, sample_available,
+                               sample_cohort, stream_cohort)
 from repro.fl.server_opt import server_update
 from repro.optim import apply_updates
 
@@ -152,14 +153,26 @@ class RoundIntake:
 # ---------------------------------------------------------------- cohort plan
 
 class CohortPlan:
-    """Stage 1: who participates.  Wraps ``repro.fl.sampling`` with the
-    key-splitting discipline the parity pins rely on: full participation
-    consumes NO sampling randomness."""
+    """Stage 1: who participates.  Two selection regimes:
 
-    def __init__(self, sampling: SamplingConfig, num_clients: int):
+      * **materialized** (legacy) — jax.random draws over the explicit
+        index range, with the key-splitting discipline the parity pins rely
+        on: full participation consumes NO sampling randomness.
+      * **streaming** — active when the engine has a population axis or a
+        traffic model: cohorts come from the hash-based
+        :func:`repro.fl.sampling.stream_cohort` (a pure function of
+        ``(stream_seed, round)``), optionally availability-masked by the
+        traffic model's diurnal curve.  Consumes no jax keys at all, and
+        never enumerates the population.
+    """
+
+    def __init__(self, sampling: SamplingConfig, num_clients: int, *,
+                 streaming: bool = False, traffic=None):
         self.sampling = sampling
         self.num_clients = num_clients
         self.full = sampling.is_full(num_clients)
+        self.streaming = streaming or traffic is not None
+        self.traffic = traffic
 
     def select(self, key: jax.Array) -> tuple[np.ndarray, jax.Array]:
         """One sync round's cohort; returns (indices, advanced key)."""
@@ -167,6 +180,34 @@ class CohortPlan:
             return np.arange(self.num_clients), key
         key, ks = jax.random.split(key)
         return sample_cohort(ks, self.num_clients, self.sampling), key
+
+    def select_stream(self, round_idx: int, now: float) -> np.ndarray:
+        """Streaming-regime cohort: hash-drawn, availability-filtered.
+
+        With a traffic model the draw is non-strict — a thin availability
+        trough legitimately returns a short (possibly empty) cohort and the
+        scheduler advances its clock and retries.
+        """
+        accept = None
+        if self.traffic is not None:
+            traffic, t = self.traffic, now
+            accept = lambda ids: traffic.available(ids, t, round_idx)
+        if self.full:
+            ids = np.arange(self.num_clients, dtype=np.int64)
+            if accept is not None:
+                ids = ids[np.asarray(accept(ids), bool)]
+            return ids
+        weight_fn = None
+        if (self.sampling.strategy == "weighted"
+                and self.sampling.weights is not None):
+            w = np.asarray(self.sampling.weights, np.float64)
+            peak = w.max()
+            weight_fn = lambda ids: w[ids] / peak
+        return stream_cohort(
+            self.sampling.stream_seed, round_idx, self.num_clients,
+            self.sampling.effective_size(self.num_clients),
+            weight_fn=weight_fn, accept_fn=accept,
+            strict=accept is None)
 
     def select_available(self, key: jax.Array, available: np.ndarray,
                          k: int) -> tuple[np.ndarray, jax.Array]:
@@ -180,43 +221,55 @@ class CohortPlan:
 class LocalTrain:
     """Stage 2: run ``client_round`` over a batch of clients.
 
-    Owns the stacked per-client persistent state (residuals, optimizer
-    states, schedule counters) across rounds and the data plumbing
-    (gather/scatter of the stacked client arrays); HOW the batch executes
-    is delegated to the injected :class:`~repro.fl.executors.ClientExecutor`
-    (serial jit loop / vmapped / mesh-sharded — ``EngineConfig.executor``).
-    Channel-dropped decoded mass is re-injected here
-    (``reinject_residual``) so Eq. 5 holds across drops.
+    Per-client persistent state (residuals, optimizer states, schedule
+    counters) lives in an injected
+    :class:`repro.fl.population.ClientStateStore` — eager in-memory (the
+    legacy client-stacked tree, bit-for-bit) or sharded + lazy with
+    spill-to-disk for population-scale runs — and per-client data comes
+    through a :class:`repro.fl.population.SplitsView` (identity over the
+    real splits, or the hash-mapped virtual-population view).  HOW the
+    batch executes is delegated to the injected
+    :class:`~repro.fl.executors.ClientExecutor` (serial jit loop / vmapped
+    / mesh-sharded — ``EngineConfig.executor``).  Channel-dropped decoded
+    mass is re-injected here (``reinject_residual``) so Eq. 5 holds across
+    drops.
     """
 
-    def __init__(self, client_round, splits, persistent, batch_size: int,
+    def __init__(self, client_round, data, store, batch_size: int,
                  executor: ClientExecutor | None = None):
         self.executor = executor if executor is not None else VmapExecutor()
         self.executor.bind(client_round)
-        self.splits = splits
-        self.persistent = persistent
+        self.splits = data          # SplitsView (attr passthrough preserved)
+        self.store = store
         self.batch_size = batch_size
-        self.n_train = splits.client_x.shape[1]
+        self.n_train = data.n_train
+
+    @property
+    def persistent(self):
+        """The whole client-stacked state (dense backends only)."""
+        return self.store.state
+
+    @persistent.setter
+    def persistent(self, state) -> None:
+        self.store.set_state(state)
 
     def train_cohort(self, kb: jax.Array, idx: np.ndarray, server: ServerState,
                      full: bool):
         """One barrier round over the cohort ``idx``; returns RoundOutput."""
-        splits = self.splits
         batch_idx = client_epoch_batches(kb, len(idx), self.n_train,
                                          self.batch_size)
-        if full:
-            cx, cy = splits.client_x, splits.client_y
-            cvx, cvy = splits.client_val_x, splits.client_val_y
-            pers_c = self.persistent
+        if full and self.store.dense:
+            cx, cy, cvx, cvy = self.splits.all()
+            pers_c = self.store.state
+            out = self.executor.run_shared(server, pers_c, cx, cy, cvx, cvy,
+                                           batch_idx)
+            self.store.set_state(out.persistent)
         else:
-            cx, cy = splits.client_x[idx], splits.client_y[idx]
-            cvx, cvy = splits.client_val_x[idx], splits.client_val_y[idx]
-            pers_c = gather_clients(self.persistent, idx)
-        out = self.executor.run_shared(server, pers_c, cx, cy, cvx, cvy,
-                                       batch_idx)
-        self.persistent = (out.persistent if full else
-                           scatter_clients(self.persistent, out.persistent,
-                                           idx))
+            cx, cy, cvx, cvy = self.splits.gather(idx)
+            pers_c = self.store.gather(idx)
+            out = self.executor.run_shared(server, pers_c, cx, cy, cvx, cvy,
+                                           batch_idx)
+            self.store.scatter(idx, out.persistent)
         return out
 
     def train_window(self, kbs: list[jax.Array], clients: list[int],
@@ -233,28 +286,34 @@ class LocalTrain:
         Returns the client-stacked RoundOutput in ``clients`` order.
         """
         idx = np.asarray(clients)
-        splits = self.splits
         bidx = jnp.stack([epoch_batches(kb, self.n_train, self.batch_size)
                           for kb in kbs])
-        args = (gather_clients(self.persistent, idx),
-                splits.client_x[idx], splits.client_y[idx],
-                splits.client_val_x[idx], splits.client_val_y[idx], bidx)
+        cx, cy, cvx, cvy = self.splits.gather(idx)
+        args = (self.store.gather(idx), cx, cy, cvx, cvy, bidx)
         if all(s is servers[0] for s in servers[1:]):
             out = self.executor.run_shared(servers[0], *args)
         else:
             out = self.executor.run_stacked(stack_trees(servers), *args)
-        self.persistent = scatter_clients(self.persistent, out.persistent,
-                                          idx)
+        self.store.scatter(idx, out.persistent)
         return out
 
     def reinject_residual(self, client: int, delta: Any) -> None:
         """A dropped upload must not break Eq. 5: put the lost (decoded)
         delta back into that client's residual so its mass is retransmitted
         (the scale-delta section has no residual and stays lost)."""
-        self.persistent = self.persistent._replace(
+        if self.store.dense:
+            state = self.store.state
+            self.store.set_state(state._replace(
+                residual=jax.tree.map(
+                    lambda r, d: r.at[client].add(jnp.asarray(d)),
+                    state.residual, delta)))
+            return
+        idx = np.asarray([client])
+        row = self.store.gather(idx)
+        self.store.scatter(idx, row._replace(
             residual=jax.tree.map(
-                lambda r, d: r.at[client].add(jnp.asarray(d)),
-                self.persistent.residual, delta))
+                lambda r, d: r + np.asarray(d)[None].astype(r.dtype),
+                row.residual, delta)))
 
 
 # ---------------------------------------------------------------- uplink
@@ -645,7 +704,16 @@ class RoundScheduler:
 
 
 class SyncScheduler(RoundScheduler):
-    """Cohort barrier: one vmapped round per aggregation, channel drops."""
+    """Cohort barrier: one vmapped round per aggregation, channel drops.
+
+    With a traffic model the cohort is availability-filtered (empty
+    troughs advance the simulated clock and retry), per-dispatch churn
+    coins can lose a participant mid-round (timeout semantics: the server
+    still waits, the upload never arrives — treated exactly like a channel
+    drop, EF re-injection included, but its bytes are NOT charged), and
+    the round's duration gains each participant's simulated compute
+    latency.
+    """
 
     mode = "sync"
 
@@ -654,33 +722,76 @@ class SyncScheduler(RoundScheduler):
         self.key = key
         self.sim_clock = 0.0
         self.round_idx = 0
+        self.churned_total = 0
+
+    def _select_cohort(self) -> np.ndarray:
+        """Streaming-regime selection; spins the clock through empty
+        availability troughs (bounded)."""
+        eng = self.eng
+        day = (eng.traffic.cfg.day_s if eng.traffic is not None else 96.0)
+        for _ in range(1000):
+            idx = eng.cohort.select_stream(self.round_idx, self.sim_clock)
+            if len(idx):
+                return idx
+            self.sim_clock += day / 96.0
+        raise RuntimeError(
+            "sync scheduler stalled: no client passed the availability "
+            "filter after 1000 clock advances; the traffic trace is "
+            "pathologically thin")
 
     def next_round(self) -> RoundIntake:
         eng = self.eng
         self.round_idx += 1
         self.key, kb = jax.random.split(self.key)
-        idx, self.key = eng.cohort.select(self.key)
+        if eng.cohort.streaming:
+            idx = self._select_cohort()
+        else:
+            idx, self.key = eng.cohort.select(self.key)
         clients = [int(c) for c in idx]
         cohort = len(clients)
 
-        out = eng.local_train.train_cohort(kb, idx, eng.server,
-                                           full=eng.cohort.full)
+        out = eng.local_train.train_cohort(
+            kb, idx, eng.server,
+            full=eng.cohort.full and cohort == eng.num_clients)
         contribs = eng.uplink.intake(out, clients)
 
-        survivors = list(range(cohort))
+        traffic = eng.traffic
+        lost: list[int] = []
+        if traffic is not None and traffic.cfg.churn_rate > 0.0:
+            for i in range(cohort):
+                if traffic.churned(clients[i], self.round_idx):
+                    lost.append(i)
+                    contribs[i].payload_bytes = 0  # never uploaded
+            self.churned_total += len(lost)
+
         chan = eng.channel
         if eng.transmit and chan is not None:
-            self.sim_clock += chan.round_time(
-                clients, [c.payload_bytes for c in contribs],
-                eng.broadcast_ref_bytes())
-            survivors = [i for i in range(cohort)
-                         if not chan.dropped(self.round_idx, clients[i])]
-            if (eng.protocol_cfg.error_feedback
-                    and len(survivors) != cohort):
-                for i in range(cohort):
-                    if i not in survivors:
-                        eng.local_train.reinject_residual(
-                            clients[i], contribs[i].delta_params)
+            sizes = [c.payload_bytes for c in contribs]
+            ref = eng.broadcast_ref_bytes()
+            if traffic is None:
+                self.sim_clock += chan.round_time(clients, sizes, ref,
+                                                  self.round_idx)
+            else:
+                self.sim_clock += max(
+                    (chan.down_time(c, ref, self.round_idx)
+                     + traffic.latency(c)
+                     + chan.up_time(c, n, self.round_idx)
+                     for c, n in zip(clients, sizes)), default=0.0)
+            lost.extend(i for i in range(cohort)
+                        if i not in lost
+                        and chan.dropped(self.round_idx, clients[i]))
+        elif traffic is not None:
+            # no channel: the barrier waits for the slowest computer
+            self.sim_clock += max((traffic.latency(c) for c in clients),
+                                  default=0.0)
+
+        survivors = list(range(cohort))
+        if lost:
+            survivors = [i for i in range(cohort) if i not in lost]
+            if eng.protocol_cfg.error_feedback:
+                for i in lost:
+                    eng.local_train.reinject_residual(
+                        clients[i], contribs[i].delta_params)
         for c in contribs:
             c.arrival_time = self.sim_clock
         return RoundIntake(contribs, survivors, weights=None,
@@ -691,8 +802,10 @@ class SyncScheduler(RoundScheduler):
                 f"cohort={len(intake.survivors)}/{len(intake.contributions)} "
                 f"up={rec.up_bytes/1e6:.3f}MB "
                 f"sparsity={rec.update_sparsity:.3f}")
-        if self.eng.channel is not None:
+        if self.eng.channel is not None or self.eng.traffic is not None:
             line += f" t_sim={rec.sim_time_s:.2f}s"
+        if self.churned_total:
+            line += f" churned={self.churned_total}"
         return line
 
 
@@ -702,6 +815,8 @@ class _InFlight:
     start_version: int
     server: ServerState
     finish: float
+    seq: int = 0     # global dispatch counter (keys the churn coin, so a
+                     # re-dispatched client draws a fresh one)
 
 
 class BufferedAsyncScheduler(RoundScheduler):
@@ -728,20 +843,45 @@ class BufferedAsyncScheduler(RoundScheduler):
         self.eng = engine
         acfg = engine.engine_cfg.async_cfg
         self.acfg = acfg
+        self.traffic = engine.traffic
+        self.stream = engine.cohort.streaming
         key, kl = jax.random.split(key)
-        self.latency = client_latencies(kl, engine.num_clients, acfg)
         self.concurrency = min(acfg.concurrency, engine.num_clients)
-        self.available = set(range(engine.num_clients))
         self.now = 0.0
-        first, key = engine.cohort.select_available(
-            key, np.array(sorted(self.available)), self.concurrency)
+        self.seq = 0       # dispatches issued (churn-coin keying)
+        self.draws = 0     # stream_cohort invocations (sampling keying)
+        self.churned_total = 0
+        self.saving = 0.0
+        if acfg.adaptive_window:
+            self.saving = (acfg.call_saving_s
+                           if acfg.call_saving_s is not None
+                           else load_call_saving())
         self.in_flight: list[_InFlight] = []
-        for c in first:
-            self.available.discard(int(c))
-            self.in_flight.append(_InFlight(
-                int(c), 0, engine.server,
-                self._dispatch_delay(int(c)) + float(self.latency[c])))
-        self.key = key
+        if self.stream:
+            # streaming regime (population axis / traffic model): no
+            # per-client arrays — replacements come from the hash-based
+            # sampler excluding the in-flight set, latencies from the
+            # traffic model or a hash-keyed lognormal.  kl is consumed
+            # either way (it seeds the latency stream), keeping the key
+            # discipline uniform.
+            self.latency = None
+            self.lat_seed = int(jax.random.randint(kl, (), 0, 2 ** 31 - 1))
+            self.busy: set[int] = set()
+            self.key = key
+            for c in self._stream_draw(self.concurrency):
+                self._launch(int(c))
+        else:
+            self.latency = client_latencies(kl, engine.num_clients, acfg)
+            self.available = set(range(engine.num_clients))
+            first, key = engine.cohort.select_available(
+                key, np.array(sorted(self.available)), self.concurrency)
+            self.key = key
+            for c in first:
+                self.available.discard(int(c))
+                self.in_flight.append(_InFlight(
+                    int(c), 0, engine.server,
+                    self._dispatch_delay(int(c)) + float(self.latency[c]),
+                    seq=self._next_seq()))
         # replacements for the window that triggered the last aggregation
         # are deferred until after the server step, so they train from the
         # newest version (otherwise every buffer-filling dispatch starts
@@ -751,12 +891,57 @@ class BufferedAsyncScheduler(RoundScheduler):
         # this for the async batch-fill ratio)
         self.batch_sizes: list[int] = []
 
+    # -- dispatch plumbing -------------------------------------------------
+
+    def _next_seq(self) -> int:
+        s = self.seq
+        self.seq += 1
+        return s
+
     def _dispatch_delay(self, client: int) -> float:
         """Model-download leg of a dispatch (channel mode only)."""
         if self.eng.channel is None:
             return 0.0
         return self.eng.channel.down_time(client,
                                           self.eng.broadcast_ref_bytes())
+
+    def _lat(self, client: int) -> float:
+        """Simulated compute seconds for one dispatch of ``client``."""
+        if self.traffic is not None:
+            return self.traffic.latency(client)
+        if self.latency is not None:
+            return float(self.latency[client])
+        # streaming without traffic: the AsyncConfig lognormal, hash-keyed
+        # per client so it never depends on population size or order
+        if self.acfg.latency_sigma == 0.0:
+            return self.acfg.latency_mean
+        z = float(prand.normal(self.lat_seed, prand.TAG_LATENCY, client))
+        return self.acfg.latency_mean * float(np.exp(
+            self.acfg.latency_sigma * z))
+
+    def _stream_draw(self, k: int) -> np.ndarray:
+        """One streaming replacement draw (non-strict: an availability
+        trough may return fewer than ``k``; the caller re-queues)."""
+        if k <= 0:
+            return np.empty(0, np.int64)
+        eng = self.eng
+        accept = None
+        if self.traffic is not None:
+            traffic, now, rd = self.traffic, self.now, self.draws
+            accept = lambda ids: traffic.available(ids, now, rd)
+        idx = stream_cohort(
+            eng.engine_cfg.sampling.stream_seed, self.draws,
+            eng.num_clients, k, accept_fn=accept, exclude=self.busy,
+            strict=False)
+        self.draws += 1
+        return idx
+
+    def _launch(self, client: int) -> None:
+        self.busy.add(client)
+        self.in_flight.append(_InFlight(
+            client, self.eng.version, self.eng.server,
+            self.now + self._dispatch_delay(client) + self._lat(client),
+            seq=self._next_seq()))
 
     def _dispatch_one(self) -> None:
         eng = self.eng
@@ -766,7 +951,28 @@ class BufferedAsyncScheduler(RoundScheduler):
         self.available.discard(nxt)
         self.in_flight.append(_InFlight(
             nxt, eng.version, eng.server,
-            self.now + self._dispatch_delay(nxt) + float(self.latency[nxt])))
+            self.now + self._dispatch_delay(nxt) + float(self.latency[nxt]),
+            seq=self._next_seq()))
+
+    def _dispatch(self, n: int) -> int:
+        """Dispatch up to ``n`` replacements; returns how many launched
+        (the legacy path always launches all ``n``)."""
+        if n <= 0:
+            return 0
+        if not self.stream:
+            for _ in range(n):
+                self._dispatch_one()
+            return n
+        idx = self._stream_draw(n)
+        for c in idx:
+            self._launch(int(c))
+        return len(idx)
+
+    def _free(self, client: int) -> None:
+        if self.stream:
+            self.busy.discard(client)
+        else:
+            self.available.add(client)
 
     def _pop_window(self) -> list[_InFlight]:
         """Every in-flight client finishing within ``dispatch_window`` of
@@ -776,7 +982,24 @@ class BufferedAsyncScheduler(RoundScheduler):
         pre-batching FedBuff behaviour (buffer_size updates per
         aggregation) even when latencies tie exactly (latency_sigma=0
         would otherwise batch the whole in-flight set and silently bypass
-        the buffer size); ties break deterministically by client id."""
+        the buffer size); ties break deterministically by client id.
+
+        ``adaptive_window`` replaces the fixed cutoff with greedy merging
+        against the measured per-call saving: take finishers in (finish,
+        client) order and keep extending the batch while the NEXT
+        finisher's marginal wait (gap to the previous finisher) costs less
+        simulated time than the executor call it saves — so the window
+        tracks the observed arrival density instead of a constant."""
+        if self.acfg.adaptive_window:
+            order = sorted(self.in_flight, key=lambda f: (f.finish, f.client))
+            window = [order[0]]
+            for e in order[1:]:
+                if e.finish - window[-1].finish > self.saving:
+                    break
+                window.append(e)
+            for e in window:
+                self.in_flight.remove(e)
+            return window
         if self.acfg.dispatch_window <= 0.0:
             e = min(self.in_flight, key=lambda f: (f.finish, f.client))
             self.in_flight.remove(e)
@@ -793,14 +1016,40 @@ class BufferedAsyncScheduler(RoundScheduler):
     def next_round(self) -> RoundIntake:
         eng = self.eng
         buffer: list[Contribution] = []
+        stalls = 0
         while True:
-            while self.pending_dispatch:
-                self._dispatch_one()
-                self.pending_dispatch -= 1
+            self.pending_dispatch -= self._dispatch(self.pending_dispatch)
+            if not self.in_flight:
+                # every slot is waiting out an availability trough (only
+                # reachable in the traffic-gated streaming regime):
+                # advance the clock one curve step and redraw
+                stalls += 1
+                if stalls > 1000:
+                    raise RuntimeError(
+                        "async scheduler stalled: no client passed the "
+                        "availability filter after 1000 clock advances")
+                self.now += (self.traffic.cfg.day_s / 96.0
+                             if self.traffic is not None else 1.0)
+                continue
+            stalls = 0
             # with a channel the upload leg is appended at pop time, so
             # arrival order approximates compute-finish order (documented
             # simplification)
             window = self._pop_window()
+            if self.traffic is not None and self.traffic.cfg.churn_rate > 0.0:
+                kept = []
+                for e in window:
+                    if self.traffic.churned(e.client, e.seq):
+                        # mid-round churn: the dispatch vanishes without
+                        # uploading — free the slot, re-queue a replacement
+                        self.churned_total += 1
+                        self._free(e.client)
+                        self.pending_dispatch += 1
+                    else:
+                        kept.append(e)
+                window = kept
+                if not window:
+                    continue
             kbs = []
             for _ in window:
                 self.key, kb = jax.random.split(self.key)
@@ -814,7 +1063,7 @@ class BufferedAsyncScheduler(RoundScheduler):
                 c.arrival_time = e.finish + (
                     eng.channel.up_time(e.client, c.payload_bytes)
                     if eng.channel is not None else 0.0)
-                self.available.add(e.client)
+                self._free(e.client)
             # deterministic intake order: (arrival_time, client_id) is a
             # total order, so ties (homogeneous latencies) cannot reorder
             # across runs or executor backends; the clock clamp keeps
@@ -826,22 +1075,26 @@ class BufferedAsyncScheduler(RoundScheduler):
                 c.arrival_time = self.now
             buffer.extend(contribs)
 
+            # replacements are deferred to the loop top (legacy: so the
+            # post-aggregation batch trains from the newest version; the
+            # streaming regime additionally re-tries short draws there)
+            self.pending_dispatch += len(window)
             if len(buffer) >= self.acfg.buffer_size:
-                self.pending_dispatch = len(window)
                 w = normalized_staleness_weights(
                     [b.staleness for b in buffer],
                     self.acfg.staleness_exponent)
                 return RoundIntake(buffer, list(range(len(buffer))),
                                    weights=w, sim_time=self.now,
                                    receivers=self.concurrency)
-            for _ in window:
-                self._dispatch_one()
 
     def log_line(self, rec, intake: RoundIntake) -> str:
         stale = [c.staleness for c in intake.contributions]
-        return (f"agg {rec.round:3d} acc={rec.test_acc:.3f} "
+        line = (f"agg {rec.round:3d} acc={rec.test_acc:.3f} "
                 f"t_sim={rec.sim_time_s:.2f}s staleness={stale} "
                 f"up={rec.up_bytes/1e6:.3f}MB")
+        if self.churned_total:
+            line += f" churned={self.churned_total}"
+        return line
 
 
 SCHEDULERS: dict[str, type[RoundScheduler]] = {

@@ -6,17 +6,30 @@ engine gathers the cohort's slices out of the stacked client arrays in
 ``data/federated.py`` so the vmapped ``client_round`` only runs over the
 cohort, then scatters the per-client persistent state back.
 
-Sampling is driven by an explicit PRNG key so cohort sequences are exactly
-reproducible (tested in tests/test_fl_engine.py).
+Two sampling regimes coexist:
+
+  * **materialized** (:func:`sample_cohort` / :func:`sample_available`) —
+    jax.random draws over an explicit index range; used whenever the
+    population fits in memory.  Driven by an explicit PRNG key so cohort
+    sequences are exactly reproducible (tested in tests/test_fl_engine.py).
+  * **streaming** (:func:`stream_cohort`) — deterministic hash-based draws
+    over a *virtual* population that never exists as an array: candidate
+    ids come from a counter-based splitmix64 stream keyed on
+    ``(seed, round, counter)``, filtered by optional weight / availability
+    acceptance functions and an exclusion set.  Cost is O(k) in the cohort
+    size and O(1) in the population, which is what lets the engine sample
+    K=32 of 10^6 (``EngineConfig.population``, repro.fl.population).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import prand
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,10 +39,15 @@ class SamplingConfig:
     cohort_size None (or >= num_clients) means full participation — the
     engine then consumes no sampling randomness, which keeps the key
     sequence identical to the seed's all-clients loop (compat guarantee).
+
+    ``stream_seed`` seeds the hash-based streaming draws used when the
+    engine runs a virtual population (``EngineConfig.population``) or a
+    traffic model; it is ignored on the materialized jax.random paths.
     """
     cohort_size: int | None = None
     strategy: str = "uniform"            # "uniform" | "weighted"
     weights: tuple[float, ...] | None = None  # required for "weighted"
+    stream_seed: int = 0                 # streaming (hash-based) draws only
 
     def effective_size(self, num_clients: int) -> int:
         if self.cohort_size is None:
@@ -75,6 +93,77 @@ def sample_available(key: jax.Array, available: np.ndarray, k: int,
         p = None
     idx = jax.random.choice(key, len(available), (k,), replace=False, p=p)
     return np.sort(available[np.asarray(idx)])
+
+
+# ---------------------------------------------------------------- streaming
+
+def stream_cohort(seed: int, round_idx: int, num_clients: int, k: int, *,
+                  weight_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+                  accept_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+                  exclude=(), strict: bool = True,
+                  max_blocks: int = 256) -> np.ndarray:
+    """Deterministic hash-based cohort draw over a virtual population.
+
+    Draws candidate client ids from the counter-based stream
+    ``splitmix64(seed, round_idx, counter) % num_clients`` in vectorized
+    blocks, deduplicates, and filters until ``k`` distinct accepted ids are
+    found — without ever materializing an array of the population.  The
+    result is a pure function of ``(seed, round_idx)`` plus the filters, so
+    a cohort is reproducible regardless of store backend, materialization
+    order, or host count.
+
+      * ``weight_fn(ids) -> p`` — weighted sampling by rejection: each
+        candidate is accepted with probability ``p`` (relative weights,
+        scaled by the caller so the maximum is 1.0; acceptance coins come
+        from an independent substream keyed per draw counter).
+      * ``accept_fn(ids) -> bool`` — availability masking (e.g. a
+        :class:`repro.fl.population.TrafficModel` diurnal curve).
+      * ``exclude`` — ids never drawn (async in-flight clients).
+
+    ``strict=False`` returns however many ids were found after the draw
+    budget (possibly zero) instead of raising — the mode traffic-gated
+    sync cohorts use, where a thin availability trough legitimately
+    shrinks the cohort.  ``k >= num_clients`` falls back to the full range
+    minus exclusions (only sensible for small populations).
+    """
+    if k <= 0:
+        return np.empty(0, np.int64)
+    if k >= num_clients:
+        ids = np.arange(num_clients, dtype=np.int64)
+        if exclude:
+            ids = ids[~np.isin(ids, np.fromiter(exclude, np.int64,
+                                                len(exclude)))]
+        if accept_fn is not None:
+            ids = ids[np.asarray(accept_fn(ids), bool)]
+        return ids
+    chosen: list[int] = []
+    seen = set(int(c) for c in exclude)
+    block = max(4 * k, 64)
+    counter = 0
+    for _ in range(max_blocks):
+        ctr = np.arange(counter, counter + block, dtype=np.int64)
+        counter += block
+        cand = prand.randint(num_clients, seed, prand.TAG_SAMPLE,
+                             round_idx, ctr).astype(np.int64)
+        if weight_fn is not None:
+            p = np.asarray(weight_fn(cand), np.float64)
+            coin = prand.uniform(seed, prand.TAG_WEIGHT, round_idx, ctr)
+            cand = cand[coin < p]
+        if accept_fn is not None and len(cand):
+            cand = cand[np.asarray(accept_fn(cand), bool)]
+        for c in cand:
+            ci = int(c)
+            if ci not in seen:
+                seen.add(ci)
+                chosen.append(ci)
+                if len(chosen) == k:
+                    return np.sort(np.asarray(chosen, np.int64))
+    if strict:
+        raise RuntimeError(
+            f"stream_cohort found only {len(chosen)}/{k} acceptable clients "
+            f"after {max_blocks * block} draws (population {num_clients}); "
+            "availability/weights too thin for the requested cohort")
+    return np.sort(np.asarray(chosen, np.int64))
 
 
 # ---------------------------------------------------------------- gather

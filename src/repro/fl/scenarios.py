@@ -28,6 +28,7 @@ from repro.core.protocol import ProtocolConfig, baseline_configs
 from repro.data import federated, synthetic
 from repro.fl.async_buffer import AsyncConfig
 from repro.fl.engine import EngineConfig, RunResult, run_simulation
+from repro.fl.population import (DIURNAL_DEFAULT, StoreConfig, TrafficConfig)
 from repro.fl.sampling import SamplingConfig
 from repro.fl.server_opt import ServerOptConfig
 from repro.models import cnn
@@ -42,10 +43,17 @@ class Scenario:
     protocol_overrides: tuple[tuple[str, Any], ...] = ()
     partial_updates: bool = False   # classifier-only differential updates
     # --- population / sampling ---
-    num_clients: int = 8
+    num_clients: int = 8            # base data shards (default_setting)
     cohort_size: int | None = None  # None = full participation
     sampling_strategy: str = "uniform"
     sampling_weights: tuple[float, ...] | None = None
+    # --- population scale (repro.fl.population) ---
+    population: int | None = None   # virtual clients over the base shards
+    store: str = "memory"           # client-state backend ("memory"|"sharded")
+    store_shard_size: int = 64
+    store_hot_shards: int = 16
+    traffic: TrafficConfig | None = None  # trace-driven arrivals/churn
+    adaptive_window: bool = False   # async: arrival-adaptive dispatch batch
     # --- server optimizer ---
     server_opt: str = "fedavg"
     server_lr: float = 1.0
@@ -100,7 +108,12 @@ def build_engine(s: Scenario) -> EngineConfig:
         async_cfg=AsyncConfig(buffer_size=s.buffer_size,
                               concurrency=s.concurrency,
                               staleness_exponent=s.staleness_exponent,
-                              dispatch_window=s.dispatch_window),
+                              dispatch_window=s.dispatch_window,
+                              adaptive_window=s.adaptive_window),
+        population=s.population,
+        store=StoreConfig(backend=s.store, shard_size=s.store_shard_size,
+                          max_hot_shards=s.store_hot_shards),
+        traffic=s.traffic,
         executor=s.executor,
         mesh_shape=s.mesh_shape,
         bidirectional=s.bidirectional,
@@ -279,6 +292,30 @@ for _s in [
              "finishing clients train as ONE vmapped executor call",
              mode="async", buffer_size=4, concurrency=4,
              dispatch_window=0.5),
+    # ---- population scale (repro.fl.population) ----
+    Scenario("pop_100k_diurnal",
+             "10^5 virtual clients over 8 data shards, K=32 cohorts "
+             "streamed through the sharded lazy store, diurnal "
+             "availability with timezone spread gating every cohort",
+             population=100_000, cohort_size=32, store="sharded",
+             store_shard_size=16, store_hot_shards=8,
+             traffic=TrafficConfig(diurnal=DIURNAL_DEFAULT, day_s=240.0,
+                                   timezone_spread=0.25, latency_mean=2.0)),
+    Scenario("pop_1m_lazy_k32",
+             "a million-client population, K=32: peak memory stays "
+             "O(cohort) — only touched shards ever materialize, the LRU "
+             "spills the rest to disk",
+             population=1_000_000, cohort_size=32, store="sharded",
+             store_shard_size=16, store_hot_shards=8),
+    Scenario("churn_midround_async",
+             "buffered async over 10^4 clients with 15% mid-round churn "
+             "and an arrival-adaptive dispatch window (batch while the "
+             "marginal wait beats the measured per-call saving)",
+             mode="async", buffer_size=4, concurrency=8,
+             population=10_000, store="sharded",
+             store_shard_size=16, store_hot_shards=8,
+             adaptive_window=True,
+             traffic=TrafficConfig(churn_rate=0.15, latency_mean=2.0)),
 ]:
     register(_s)
 del _s

@@ -1,0 +1,373 @@
+"""Behavioural contract of the population subsystem (repro.fl.population):
+
+* store parity — the seed-pinned byte totals and accuracies (727/712,
+  561/566, 3439/3429) reproduce through the ShardedLazyStore with shard
+  sizes forced small enough that spill/reload actually happens, and
+  memory-vs-sharded runs of small-K sync and async scenarios produce
+  identical round records,
+* store lifecycle — spill/reload round-trips, LRU high-water bound, cold
+  clients served from the template, writable reloads,
+* streaming sampling — deterministic, distinct, availability/weight/
+  exclude-aware, never enumerates the population,
+* traffic — counter-hashed determinism, device-class proportions,
+  availability extremes, per-dispatch churn coins,
+* channel — latency draws keyed per (client, round), independent of the
+  advisory num_clients,
+* adaptive dispatch window — per-call saving derived from
+  BENCH_cohort.json, validation of the config axis.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import ChannelConfig, ChannelModel
+from repro.core import prand
+from repro.core.protocol import ProtocolConfig
+from repro.data import federated, synthetic
+from repro.fl import (AsyncConfig, EngineConfig, FederatedEngine,
+                      InMemoryStore, SamplingConfig, ShardedLazyStore,
+                      StoreConfig, TrafficConfig, TrafficModel,
+                      VirtualPopulationView, make_view, run_simulation,
+                      stream_cohort)
+from repro.fl.async_buffer import load_call_saving
+from repro.fl.population import DIURNAL_DEFAULT
+from repro.models import cnn
+
+# ------------------------------------------------------------- fixtures
+
+_PINS = {
+    "fsfl": dict(cfg=dict(method="sparse", fixed_sparsity=0.9),
+                 up_bytes=[727, 712], acc=[0.166667, 0.208333]),
+    "stc": dict(cfg=dict(method="ternary", error_feedback=True,
+                         fixed_sparsity=0.9, structured=False),
+                up_bytes=[561, 566], acc=None),
+    "fedavg_nnc": dict(cfg=dict(method="none"),
+                       up_bytes=[3439, 3429], acc=[0.25, 0.25]),
+}
+
+
+def _tiny_setting(num_clients):
+    task = synthetic.ImageTask("t", num_classes=4, channels=3, size=32,
+                               prototypes_per_class=2, noise=0.25)
+    x, y = synthetic.make_image_dataset(jax.random.PRNGKey(0), task, 480)
+    splits = federated.split_federated(jax.random.PRNGKey(1), x, y,
+                                       num_clients=num_clients)
+    model = cnn.make_vgg("vgg_tiny_comms", [8, 16], 4, 3,
+                         dense_width=16, pool_after=(0, 1))
+    return model, splits
+
+
+@pytest.fixture(scope="module")
+def tiny2():
+    return _tiny_setting(2)
+
+
+@pytest.fixture(scope="module")
+def tiny4():
+    return _tiny_setting(4)
+
+
+def _template(key=0):
+    """A small fake per-client persistent pytree."""
+    k = jax.random.PRNGKey(key)
+    return {"residual": jax.random.normal(k, (3, 4)).astype(jnp.float32),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _rows(template, ids):
+    """Distinct per-client rows derived from the ids (host numpy)."""
+    ids = np.asarray(ids)
+    return {
+        "residual": (np.asarray(template["residual"])[None]
+                     + ids[:, None, None].astype(np.float32)),
+        "step": ids.astype(np.int32),
+    }
+
+
+# ------------------------------------------------------------- store units
+
+def test_sharded_spill_reload_roundtrip():
+    tpl = _template()
+    store = ShardedLazyStore(tpl, 64, StoreConfig(
+        backend="sharded", shard_size=4, max_hot_shards=2))
+    ids = np.arange(0, 64, 2)  # touches all 16 shards -> forced spills
+    store.scatter(ids, _rows(tpl, ids))
+    stats = store.stats()
+    assert stats["spills"] > 0 and stats["max_hot_seen"] <= 2
+    got = store.gather(ids)  # reloads spilled shards through the LRU
+    want = _rows(tpl, ids)
+    np.testing.assert_array_equal(np.asarray(got["step"]), want["step"])
+    np.testing.assert_allclose(np.asarray(got["residual"]),
+                               want["residual"], rtol=0, atol=0)
+    assert store.stats()["loads"] > 0
+    store.close()
+
+
+def test_sharded_reloaded_shards_are_writable():
+    """Scatter into a shard that went to disk and came back — restored
+    leaves must be writable copies, not msgpack buffer views."""
+    tpl = _template()
+    store = ShardedLazyStore(tpl, 32, StoreConfig(
+        backend="sharded", shard_size=4, max_hot_shards=1))
+    store.scatter([0], _rows(tpl, [0]))
+    store.scatter([10], _rows(tpl, [10]))   # evicts shard 0 to disk
+    store.scatter([1], _rows(tpl, [1]))     # reload shard 0, write in place
+    got = store.gather([0, 1])
+    np.testing.assert_array_equal(np.asarray(got["step"]), [0, 1])
+    store.close()
+
+
+def test_sharded_cold_clients_serve_template():
+    tpl = _template()
+    store = ShardedLazyStore(tpl, 1000, StoreConfig(
+        backend="sharded", shard_size=8, max_hot_shards=2))
+    got = store.gather([3, 977])
+    for leaf, tleaf in zip(jax.tree.leaves(got), jax.tree.leaves(tpl)):
+        for row in np.asarray(leaf):
+            np.testing.assert_array_equal(row, np.asarray(tleaf))
+    stats = store.stats()
+    assert stats["cold_gathers"] == 2 and stats["materializations"] == 0
+    store.close()
+
+
+def test_memory_vs_sharded_random_op_sequence():
+    """Same random gather/scatter sequence through both backends."""
+    tpl = _template()
+    mem = InMemoryStore(tpl, 48)
+    shd = ShardedLazyStore(tpl, 48, StoreConfig(
+        backend="sharded", shard_size=4, max_hot_shards=2))
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        ids = rng.choice(48, size=5, replace=False)
+        if rng.random() < 0.6:
+            rows = _rows(tpl, ids + rng.integers(0, 100))
+            mem.scatter(ids, rows)
+            shd.scatter(ids, rows)
+        a, b = mem.gather(ids), shd.gather(ids)
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert shd.stats()["spills"] > 0  # the sequence actually exercised disk
+    shd.close()
+
+
+# ------------------------------------------------------------- streaming
+
+def test_stream_cohort_deterministic_and_distinct():
+    a = stream_cohort(7, 3, 10**6, 32)
+    b = stream_cohort(7, 3, 10**6, 32)
+    np.testing.assert_array_equal(a, b)
+    assert len(set(a.tolist())) == 32
+    assert a.min() >= 0 and a.max() < 10**6
+    c = stream_cohort(7, 4, 10**6, 32)
+    assert set(a.tolist()) != set(c.tolist())
+
+
+def test_stream_cohort_exclude_and_accept():
+    busy = set(range(0, 10**5, 2))  # all even ids busy
+    got = stream_cohort(1, 0, 10**5, 16, exclude=busy)
+    assert all(g % 2 == 1 for g in got.tolist())
+    avail = stream_cohort(1, 0, 10**5, 16,
+                          accept_fn=lambda ids: np.asarray(ids) % 3 == 0)
+    assert all(g % 3 == 0 for g in avail.tolist())
+
+
+def test_stream_cohort_weight_bias():
+    def weight_fn(ids):
+        ids = np.asarray(ids)
+        return np.where(ids < 500, 1.0, 0.02)  # favor the first 500 of 10^4
+    hits = np.concatenate([
+        stream_cohort(5, r, 10**4, 16, weight_fn=weight_fn)
+        for r in range(20)])
+    frac_low = np.mean(hits < 500)
+    assert frac_low > 0.5  # 500/10^4 uniform would give ~5%
+
+
+def test_stream_cohort_small_population_full_draw():
+    got = stream_cohort(2, 0, 8, 8)
+    assert sorted(got.tolist()) == list(range(8))
+
+
+# ------------------------------------------------------------- traffic
+
+def test_traffic_deterministic_and_bounded():
+    tm = TrafficModel(TrafficConfig(diurnal=DIURNAL_DEFAULT, day_s=240.0,
+                                    timezone_spread=0.3, availability=0.8,
+                                    seed=11))
+    ids = np.arange(64)
+    r1, r2 = tm.rate(37.0, ids), tm.rate(37.0, ids)
+    np.testing.assert_array_equal(r1, r2)
+    assert (r1 >= 0).all() and (r1 <= 1).all()
+    a1 = tm.available(ids, 37.0, round_idx=3)
+    a2 = tm.available(ids, 37.0, round_idx=3)
+    np.testing.assert_array_equal(a1, a2)
+    # latency: per-client, deterministic, positive
+    lats = [tm.latency(c) for c in range(8)]
+    assert lats == [tm.latency(c) for c in range(8)]
+    assert all(v > 0 for v in lats) and len(set(lats)) > 1
+
+
+def test_traffic_device_class_proportions():
+    tm = TrafficModel(TrafficConfig(seed=4))
+    cls = tm.device_class(np.arange(20_000))
+    fracs = np.bincount(cls, minlength=3) / 20_000
+    for got, want in zip(fracs, [c.fraction for c in tm.cfg.classes]):
+        assert abs(got - want) < 0.02
+    np.testing.assert_array_equal(cls, tm.device_class(np.arange(20_000)))
+
+
+def test_traffic_availability_extremes_and_churn():
+    always = TrafficModel(TrafficConfig(availability=1.0, seed=1))
+    assert always.available(np.arange(100), 0.0, 0).all()
+    tm = TrafficModel(TrafficConfig(churn_rate=0.3, seed=9))
+    coins = [tm.churned(5, seq) for seq in range(50)]
+    assert coins == [tm.churned(5, seq) for seq in range(50)]
+    assert any(coins) and not all(coins)
+    no_churn = TrafficModel(TrafficConfig(churn_rate=0.0, seed=9))
+    assert not any(no_churn.churned(c, 0) for c in range(100))
+
+
+# ------------------------------------------------------------- channel
+
+def test_channel_independent_of_num_clients():
+    cfg = ChannelConfig(up_mbps=1.0, latency_s=0.1, latency_sigma=0.5,
+                        bandwidth_sigma=0.4, seed=3)
+    small, big = ChannelModel(cfg, 8), ChannelModel(cfg, 10**6)
+    for c in [0, 3, 7]:
+        assert small.up_time(c, 10_000, round_idx=2) == \
+            big.up_time(c, 10_000, round_idx=2)
+
+
+def test_channel_latency_keyed_per_client_round():
+    cfg = ChannelConfig(up_mbps=1.0, latency_s=0.1, latency_sigma=0.5, seed=3)
+    ch = ChannelModel(cfg, 8)
+    a = ch.up_time(1, 10_000, round_idx=0)
+    assert a == ch.up_time(1, 10_000, round_idx=0)   # deterministic
+    assert a != ch.up_time(1, 10_000, round_idx=1)   # varies by round
+    assert a != ch.up_time(2, 10_000, round_idx=0)   # varies by client
+    # sigma=0 reproduces the legacy fixed latency exactly
+    flat = ChannelModel(dataclasses.replace(cfg, latency_sigma=0.0), 8)
+    base = 10_000 * 8 / (1.0e6 * flat._bw_factor(prand.TAG_BW_UP, 1))
+    assert flat.up_time(1, 10_000, round_idx=5) == pytest.approx(
+        base + 0.1)
+
+
+# ------------------------------------------------------------- adaptive
+
+def test_load_call_saving_from_bench_and_default(tmp_path):
+    repo_bench = os.path.join(os.path.dirname(__file__), "..",
+                              "BENCH_cohort.json")
+    if os.path.exists(repo_bench):
+        s = load_call_saving(repo_bench)
+        assert 0 < s < 10.0
+    assert load_call_saving(str(tmp_path / "missing.json"),
+                            default=0.123) == 0.123
+
+
+def test_adaptive_window_config_validation(tiny2):
+    model, splits = tiny2
+    with pytest.raises(ValueError):  # adaptive is an async-only axis
+        EngineConfig(async_cfg=AsyncConfig(adaptive_window=True)).validate(2)
+    with pytest.raises(ValueError):  # fixed + adaptive windows conflict
+        EngineConfig(mode="async", async_cfg=AsyncConfig(
+            adaptive_window=True, dispatch_window=0.5)).validate(2)
+
+
+# ------------------------------------------------------------- virtual
+
+def test_virtual_view_maps_into_base_shards(tiny2):
+    _, splits = tiny2
+    view = VirtualPopulationView(splits, 1000, seed=3)
+    idx = np.array([0, 17, 999])
+    base = view.base_index(idx)
+    assert base.shape == (3,) and (base >= 0).all() and (base < 2).all()
+    np.testing.assert_array_equal(base, view.base_index(idx))
+    cx, cy, vx, vy = view.gather(idx)
+    assert cx.shape[0] == 3 and cy.shape[0] == 3
+    # make_view: population None or == num_clients stays a plain view
+    assert make_view(splits, None).dense
+    assert not make_view(splits, 1000).dense
+
+
+# ------------------------------------------------------------- engine parity
+
+@pytest.mark.parametrize("name", ["fsfl", "stc", "fedavg_nnc"])
+def test_seed_pins_reproduce_through_sharded_store(tiny2, name):
+    """Byte totals and accuracies pinned on the eager engine must
+    reproduce when every client's state lives in the lazy store —
+    shard_size=1, max_hot_shards=1 forces spill+reload every round."""
+    model, splits = tiny2
+    pin = _PINS[name]
+    cfg = ProtocolConfig(name=name, batch_size=32, local_lr=2e-3,
+                         **pin["cfg"])
+    res = run_simulation(
+        model, cfg, splits, 2, jax.random.PRNGKey(7),
+        engine=EngineConfig(store=StoreConfig(
+            backend="sharded", shard_size=1, max_hot_shards=1)))
+    assert [r.up_bytes for r in res.records] == pin["up_bytes"]
+    if pin["acc"] is not None:
+        assert [round(r.test_acc, 6) for r in res.records] == pin["acc"]
+
+
+def _records(res):
+    return [(r.up_bytes, round(r.test_acc, 6), tuple(r.participants))
+            for r in res.records]
+
+
+def test_memory_vs_sharded_identical_sync_cohort(tiny4):
+    model, splits = tiny4
+    cfg = ProtocolConfig(name="eqs23", method="sparse", error_feedback=True,
+                         fixed_sparsity=0.9, structured=False,
+                         batch_size=32, local_lr=2e-3)
+    runs = {}
+    for backend in ("memory", "sharded"):
+        res = run_simulation(
+            model, cfg, splits, 3, jax.random.PRNGKey(5),
+            engine=EngineConfig(
+                sampling=SamplingConfig(cohort_size=2),
+                store=StoreConfig(backend=backend, shard_size=1,
+                                  max_hot_shards=1)))
+        runs[backend] = _records(res)
+    assert runs["memory"] == runs["sharded"]
+
+
+def test_memory_vs_sharded_identical_async(tiny4):
+    model, splits = tiny4
+    cfg = ProtocolConfig(name="eqs23", method="sparse", error_feedback=True,
+                         fixed_sparsity=0.9, structured=False,
+                         batch_size=32, local_lr=2e-3)
+    runs = {}
+    for backend in ("memory", "sharded"):
+        res = run_simulation(
+            model, cfg, splits, 2, jax.random.PRNGKey(5),
+            engine=EngineConfig(
+                mode="async",
+                async_cfg=AsyncConfig(buffer_size=2, concurrency=3),
+                store=StoreConfig(backend=backend, shard_size=1,
+                                  max_hot_shards=1)))
+        runs[backend] = _records(res)
+    assert runs["memory"] == runs["sharded"]
+
+
+def test_population_run_end_to_end(tiny2):
+    """A virtual population larger than the data shards streams cohorts
+    through the lazy store; participants are virtual ids."""
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="eqs23", method="sparse", error_feedback=True,
+                         fixed_sparsity=0.9, structured=False,
+                         batch_size=32, local_lr=2e-3)
+    res = run_simulation(
+        model, cfg, splits, 2, jax.random.PRNGKey(5),
+        engine=EngineConfig(
+            sampling=SamplingConfig(cohort_size=4),
+            population=64,
+            store=StoreConfig(backend="sharded", shard_size=4,
+                              max_hot_shards=2),
+            traffic=TrafficConfig(day_s=240.0, availability=0.9, seed=2)))
+    assert len(res.records) == 2
+    parts = {c for r in res.records for c in r.participants}
+    assert len(parts) > 2 and max(parts) >= 2  # virtual ids beyond shards
+    assert all(len(r.participants) == 4 for r in res.records)

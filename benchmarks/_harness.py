@@ -1,0 +1,61 @@
+"""Shared benchmark plumbing: timing + steady-state + report writing.
+
+Every benchmark in this directory used to hand-roll the same three pieces;
+they live here now so the BENCH_*.json contract and the steady-round
+definition cannot drift between files:
+
+  * :func:`time_best` — best-of-N wall seconds for a callable, timed
+    through an ``repro.obs`` SpanRecorder (the identical monotonic clock
+    the engine's stage spans use, so benchmark numbers and trace numbers
+    are directly comparable).
+  * :func:`steady_round_s` — the steady-state seconds/round of a
+    RunResult's records: best post-first round, robust to the jit compile
+    (round 1) AND the secondary retrace/eager-op compiles that can land in
+    round 2 (weak-type promotion of the persistent state, global op-cache
+    warmup).
+  * :func:`write_report` — the one place that writes the ``BENCH_*.json``
+    schema (indented object + trailing newline, optionally echoed to
+    stdout for CI logs).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Callable
+
+from repro.obs import trace as obs_trace
+
+
+def time_best(fn: Callable[[], Any], repeats: int = 2,
+              label: str = "bench") -> tuple[float, Any]:
+    """Best-of-``repeats`` wall seconds for ``fn()``.
+
+    Runs under a private SpanRecorder so the measurement is the span
+    machinery's own interval (perf_counter_ns at entry/exit) — and so any
+    instrumented code inside ``fn`` records into this recorder instead of
+    polluting an outer one.  Returns ``(best_s, last_result)``.
+    """
+    rec = obs_trace.SpanRecorder(ring=max(2, repeats + 1))
+    result = None
+    with obs_trace.use_recorder(rec):
+        for _ in range(repeats):
+            with rec.span(label):
+                result = fn()
+    outer = [s for s in rec.drain() if s.name == label]
+    return min(s.dur_ns for s in outer) / 1e9, result
+
+
+def steady_round_s(records) -> float:
+    """Steady-state seconds/round from engine RoundRecords (see module
+    docstring for why this is min over the post-first rounds)."""
+    walls = [r.wall_s for r in records]
+    return float(min(walls[1:])) if len(walls) > 1 else float(walls[0])
+
+
+def write_report(path: str, report: dict, *, echo: bool = True) -> None:
+    """Write one BENCH_*.json report (the shared schema: 2-space indent,
+    trailing newline) and optionally echo it for the CI log."""
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    if echo:
+        print(json.dumps(report, indent=2))

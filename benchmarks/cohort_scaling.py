@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import argparse
 import gc
-import json
 import sys
 
 import jax
@@ -33,6 +32,8 @@ from repro.core.protocol import ProtocolConfig
 from repro.data import federated, synthetic
 from repro.fl import AsyncConfig, EngineConfig, FederatedEngine
 from repro.models import cnn
+
+from _harness import steady_round_s as _steady_s, write_report
 
 _PROTO = dict(method="sparse", fixed_sparsity=0.9, batch_size=32,
               local_lr=2e-3)
@@ -48,14 +49,6 @@ def _setting(num_clients: int, n_samples: int = 480):
     model = cnn.make_vgg("vgg_cohort_bench", [8, 16], 4, 3,
                          dense_width=16, pool_after=(0, 1))
     return model, splits
-
-
-def _steady_s(records) -> float:
-    """Best post-first round: robust to the jit compile (round 1) AND the
-    secondary retrace/eager-op compiles that can land in round 2 (weak-type
-    promotion of the persistent state, global op-cache warmup)."""
-    walls = [r.wall_s for r in records]
-    return float(min(walls[1:])) if len(walls) > 1 else walls[0]
 
 
 # ------------------------------------------------------------- sync ladder
@@ -164,10 +157,7 @@ def main():
                              concurrency=8 if args.smoke else 16,
                              aggregations=3 if args.smoke else 4),
     }
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
-    print(json.dumps(report, indent=2))
+    write_report(args.out, report)
     if report["async"]["batched_calls"] == 0:
         print("WARNING: async scheduler issued no batched executor calls",
               file=sys.stderr)

@@ -21,10 +21,8 @@ realistic few-MB model update.  Scale knob: REPRO_BENCH_SCALE.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
-import time
 
 import numpy as np
 
@@ -32,6 +30,8 @@ from repro.core.protocol import ProtocolConfig, ServerState
 from repro.core import quant as quant_lib
 from repro.fl import EngineConfig, Uplink, run_scenario
 from repro.comms import ClientUpdate
+
+from _harness import time_best, write_report
 
 
 # ------------------------------------------------------------- uplink bench
@@ -97,11 +97,8 @@ def _make_uplink(server, codec: str, workers: int, executor: str,
 
 
 def _time_roundtrips(uplink: Uplink, upds, repeats: int):
-    best, results = float("inf"), None
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        results = uplink.roundtrip_all(upds)
-        best = min(best, time.perf_counter() - t0)
+    best, results = time_best(lambda: uplink.roundtrip_all(upds),
+                              repeats=repeats, label="uplink.bench")
     assert all(n > 0 for n, _ in results)
     return best, results
 
@@ -191,10 +188,7 @@ def main():
                                  "speedup": best_proc["process_speedup"]},
         "rounds": bench_rounds(rounds),
     }
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
-    print(json.dumps(report, indent=2))
+    write_report(args.out, report)
     if not args.smoke and report["best_thread_speedup"]["speedup"] < 1.5:
         print("WARNING: thread-pooled uplink under 1.5x serial",
               file=sys.stderr)

@@ -62,12 +62,13 @@ def _child(population: int, rounds: int) -> None:
             population=population,
             store=StoreConfig(backend="sharded", shard_size=SHARD_SIZE,
                               max_hot_shards=HOT_SHARDS)))
+    from _harness import steady_round_s
+
     res = eng.run(rounds)
     stats = eng.local_train.store.stats()
     # the store-level O(cohort) bound, independent of the RSS guard
     assert stats["max_hot_seen"] <= HOT_SHARDS, stats
-    walls = [r.wall_s for r in res.records]
-    steady = min(walls[1:]) if len(walls) > 1 else walls[0]
+    steady = steady_round_s(res.records)
     peak_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss  # KB (linux)
     print(json.dumps({
         "population": population,
@@ -132,9 +133,9 @@ def main() -> None:
         "rss_ratio_hi_over_lo": round(ratio, 3),
         "rss_growth_mb": round(growth_mb, 1),
     }
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    from _harness import write_report
+
+    write_report(args.out, report, echo=False)
     print(f"wrote {args.out}")
 
     if args.guard:

@@ -18,6 +18,9 @@ the final server model.
                               cohort streams through the client-state store)
     [--store memory|sharded] (eager vs. lazy/spill client-state backend)
     [--traffic PRESET]       (diurnal / churn traffic trace presets)
+    [--telemetry MODE]       (off | metrics | trace round telemetry)
+    [--trace-out FILE]       (Chrome trace-event JSON for Perfetto)
+    [--metrics-out FILE]     (per-round metrics snapshots as JSONL)
 """
 import argparse
 import dataclasses
@@ -73,6 +76,18 @@ def main():
                     help="trace-driven traffic preset: diurnal availability "
                          "curves / device-class latency / mid-round churn "
                          "(scenario runs only)")
+    ap.add_argument("--telemetry", choices=("off", "metrics", "trace"),
+                    default=None,
+                    help="round-lifecycle telemetry: per-round metrics "
+                         "snapshots, or full span tracing (scenario runs "
+                         "only)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the recorded spans as Chrome trace-event "
+                         "JSON (open at https://ui.perfetto.dev; implies "
+                         "--telemetry trace)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream per-round metrics snapshots to this JSONL "
+                         "file (implies --telemetry metrics)")
     ap.add_argument("--out", default="/tmp/fsfl_server.ckpt")
     args = ap.parse_args()
 
@@ -83,9 +98,17 @@ def main():
                              or args.executor is not None
                              or args.population is not None
                              or args.store is not None
-                             or args.traffic is not None):
+                             or args.traffic is not None
+                             or args.telemetry is not None
+                             or args.trace_out is not None
+                             or args.metrics_out is not None):
         ap.error("--wire-schema/--uplink-workers/--uplink-batch/--executor/"
-                 "--population/--store/--traffic need --scenario")
+                 "--population/--store/--traffic/--telemetry/--trace-out/"
+                 "--metrics-out need --scenario")
+    if args.trace_out is not None:
+        args.telemetry = "trace"
+    elif args.metrics_out is not None and args.telemetry is None:
+        args.telemetry = "metrics"
     if args.clients is None:
         args.clients = scenario.num_clients if scenario else 4
     if args.rounds is None and scenario is None:
@@ -120,8 +143,16 @@ def main():
         if args.traffic is not None:
             scenario = dataclasses.replace(
                 scenario, traffic=TRAFFIC_PRESETS[args.traffic])
+        if args.telemetry is not None:
+            scenario = dataclasses.replace(scenario,
+                                           telemetry=args.telemetry,
+                                           metrics_out=args.metrics_out)
         res = run_scenario(scenario, rounds=args.rounds,
                            model=model, splits=splits, verbose=True)
+        if args.trace_out is not None:
+            n = res.telemetry.export_chrome_trace(args.trace_out)
+            print(f"trace: {args.trace_out} ({n} events; open at "
+                  "https://ui.perfetto.dev)")
     else:
         cfg = ProtocolConfig(
             name="fsfl", method="sparse", scaling=True, error_feedback=True,

@@ -34,6 +34,10 @@ if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
   python benchmarks/population_scale.py --smoke --guard \
     --out /tmp/BENCH_population_smoke.json
 
+  echo "== trace smoke: 2-round traced run, Perfetto export + byte =="
+  echo "== equality + telemetry-off overhead guard (< 2%) =="
+  python scripts/trace_smoke.py
+
   echo "== engine smoke: 2 rounds, K=4 of C=8, FedAdam, tiny CNN =="
   python - <<'PY'
 import jax

@@ -1,0 +1,151 @@
+"""CI trace smoke: a short traced run must produce a valid Perfetto trace.
+
+Three checks, all against the REAL engine (no mocked stages):
+
+1. **Traced run + export validity** — two rounds of ``chan_slow_cabac``
+   (slow uplink, nnc-cabac codec) with the client-state store swapped to
+   the sharded backend with a one-shard LRU, so spill/reload events
+   actually happen.  The exported Chrome trace must be valid JSON whose
+   "X" events carry pid/tid/ts/dur, sort to a monotone timeline, and
+   include every round-lifecycle stage (cohort_plan, local_train, uplink,
+   aggregate, server_step, downlink, evaluate) plus the codec
+   encode/decode spans, the CABAC two-pass spans, and a store spill.
+   Nesting is structural: each round span's interval must contain its
+   stage spans.
+
+2. **Byte equality** — each round's metrics snapshot counters must equal
+   the engine's own ``RoundRecord.up_bytes``/``down_bytes`` EXACTLY (the
+   telemetry is recorded from the same values, and this guards that wiring).
+
+3. **Telemetry-off overhead < 2%** — the off switch must stay near zero
+   cost.  A PR-baseline A/B of full runs is too noisy for a shared CI box
+   (jit compile variance dwarfs the effect), so the guard measures the
+   actual cost directly: the per-call price of a no-op span site times the
+   number of span sites one traced round actually hit, compared against
+   the telemetry-off steady round wall time measured in this same process.
+
+    PYTHONPATH=src python scripts/trace_smoke.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+
+ROUNDS = 2
+STAGES = ("cohort_plan", "local_train", "uplink", "aggregate",
+          "server_step", "downlink", "evaluate")
+OVERHEAD_LIMIT = 0.02
+
+
+def _contains(parent, child) -> bool:
+    return (parent["ts"] <= child["ts"] + 1e-9
+            and parent["ts"] + parent["dur"]
+            >= child["ts"] + child["dur"] - 1e-9)
+
+
+def main() -> int:
+    from repro.fl import scenarios as sc
+    from repro.obs import trace as obs_trace
+
+    base = sc.get_scenario("chan_slow_cabac")
+    # a one-hot-shard sharded store forces spill/reload traffic even in a
+    # 2-round smoke (the memory backend never spills)
+    traced = dataclasses.replace(base, telemetry="trace", store="sharded",
+                                 store_shard_size=2, store_hot_shards=1)
+
+    print(f"== traced run: {traced.name} ({ROUNDS} rounds, sharded store)")
+    res = sc.run_scenario(traced, rounds=ROUNDS)
+
+    # -- check 2: metrics counters == RoundRecord bytes, exactly ----------
+    for rec in res.records:
+        snap = rec.telemetry
+        assert snap is not None, "traced run produced no telemetry snapshot"
+        up = snap["counters"].get("uplink.bytes")
+        down = snap["counters"].get("downlink.bytes")
+        assert up == rec.up_bytes, (
+            f"round {rec.round}: counter uplink.bytes={up} != "
+            f"RoundRecord.up_bytes={rec.up_bytes}")
+        assert down == rec.down_bytes, (
+            f"round {rec.round}: counter downlink.bytes={down} != "
+            f"RoundRecord.down_bytes={rec.down_bytes}")
+    print(f"byte equality OK: {[r.up_bytes for r in res.records]}")
+
+    # -- check 1: export validity + stage/codec/store coverage ------------
+    out = "/tmp/trace_smoke.trace.json"
+    n_spans = len(res.telemetry.recorder)
+    n_events = res.telemetry.export_chrome_trace(out)
+    with open(out) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    assert n_events == len(events) >= n_spans
+    xs = [e for e in events if e["ph"] == "X"]
+    for e in xs:
+        for k in ("pid", "tid", "ts", "dur", "name"):
+            assert k in e, f"trace event missing {k!r}: {e}"
+        assert e["ts"] >= 0 and e["dur"] >= 0
+    ts = [e["ts"] for e in sorted(xs, key=lambda e: e["ts"])]
+    assert ts == sorted(ts) and ts[0] == 0.0, "timeline must start at 0"
+
+    names = {e["name"] for e in xs}
+    roots = {n.split(".")[0] for n in names}
+    missing = [s for s in STAGES if s not in roots]
+    assert not missing, f"stage spans missing from trace: {missing}"
+    for required in ("codec.encode", "codec.decode", "nnc.encode",
+                     "nnc.decode", "cabac.pass1.state_scan",
+                     "cabac.pass2.range_encode", "store.spill",
+                     "store.load", "round"):
+        assert required in names, f"span {required!r} missing from trace"
+
+    # nesting: every stage-root span lies inside one round span
+    rounds = [e for e in xs if e["name"] == "round"]
+    assert len(rounds) == ROUNDS
+    for stage in ("local_train.cohort", "uplink.intake", "aggregate",
+                  "server_step", "evaluate"):
+        spans = [e for e in xs if e["name"] == stage]
+        assert spans, f"no {stage!r} spans"
+        for s in spans:
+            assert any(_contains(r, s) for r in rounds), (
+                f"{stage!r} span not nested inside any round span")
+    counter_tracks = {e["name"] for e in events if e["ph"] == "C"}
+    assert "uplink.bytes" in counter_tracks, "no uplink.bytes counter track"
+    print(f"trace OK: {out} ({n_events} events, "
+          f"{len(names)} span names, {len(rounds)} rounds)")
+
+    # -- check 3: telemetry-off overhead ----------------------------------
+    off = dataclasses.replace(traced, telemetry="off")
+    res_off = sc.run_scenario(off, rounds=ROUNDS)
+    walls = [r.wall_s for r in res_off.records]
+    steady = min(walls[1:]) if len(walls) > 1 else walls[0]
+
+    # per-call cost of a dormant span site (the exact off-mode code path)
+    reps = 200_000
+    t0 = time.perf_counter_ns()
+    for _ in range(reps):
+        with obs_trace.span("noop"):
+            pass
+    per_site_s = (time.perf_counter_ns() - t0) / reps / 1e9
+    sites_per_round = n_spans / ROUNDS
+    overhead = per_site_s * sites_per_round / steady
+    print(f"overhead: {per_site_s * 1e9:.0f} ns/site x "
+          f"{sites_per_round:.0f} sites/round = "
+          f"{100 * overhead:.4f}% of the {steady:.3f}s steady round")
+    assert overhead < OVERHEAD_LIMIT, (
+        f"telemetry-off overhead {100 * overhead:.2f}% exceeds "
+        f"{100 * OVERHEAD_LIMIT:.0f}%")
+
+    # determinism: the off run's records must match the traced run's
+    for a, b in zip(res.records, res_off.records):
+        assert (a.up_bytes, a.down_bytes, a.test_acc) == \
+               (b.up_bytes, b.down_bytes, b.test_acc), (
+            f"telemetry changed round {a.round}: "
+            f"{(a.up_bytes, a.down_bytes, a.test_acc)} vs "
+            f"{(b.up_bytes, b.down_bytes, b.test_acc)}")
+    print("telemetry on/off determinism OK")
+    print("trace smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

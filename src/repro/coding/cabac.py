@@ -30,6 +30,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.coding.errors import CorruptPayloadError
+from repro.obs import trace as obs_trace
 
 _TOP = 1 << 24
 _BOT = 1 << 11  # probability scale (2048)
@@ -329,8 +330,10 @@ def encode_context_bins(ctx_ids: np.ndarray, bits: np.ndarray,
     if ctx_ids.shape != bits.shape:
         raise ValueError("ctx_ids and bits must be parallel arrays")
     probs = np.empty(bits.size, np.int32)
-    for c in range(num_ctx):
-        sel = ctx_ids == c
-        if sel.any():
-            probs[sel] = context_state_sequence(bits[sel])
-    return range_encode_bins(bits, probs)
+    with obs_trace.span("cabac.pass1.state_scan", bins=int(bits.size)):
+        for c in range(num_ctx):
+            sel = ctx_ids == c
+            if sel.any():
+                probs[sel] = context_state_sequence(bits[sel])
+    with obs_trace.span("cabac.pass2.range_encode", bins=int(bits.size)):
+        return range_encode_bins(bits, probs)

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.coding import golomb
 from repro.coding.bitstream import BitReader, BitWriter
+from repro.obs import trace as obs_trace
 from repro.coding.cabac import (ContextSet, Decoder, Encoder,
                                 encode_context_bins)
 from repro.coding.errors import CorruptPayloadError
@@ -222,23 +223,24 @@ def _plan_tensor(levels: np.ndarray, bypass: BitWriter,
 
 def _encode_leaves(leaves: Sequence[np.ndarray]) -> bytes:
     """Two-pass encode of ordered level tensors into one NNC message."""
-    bypass = BitWriter()
-    bin_chunks: list[tuple[int, np.ndarray]] = []
-    for leaf in leaves:
-        _plan_tensor(np.asarray(leaf), bypass, bin_chunks)
-    total = sum(c.size for _, c in bin_chunks)
-    ctx_ids = np.empty(total, np.uint8)
-    bits = np.empty(total, np.uint8)
-    off = 0
-    for c, chunk in bin_chunks:
-        n = chunk.size
-        ctx_ids[off:off + n] = c
-        bits[off:off + n] = chunk
-        off += n
-    cab = encode_context_bins(ctx_ids, bits, NUM_CTX)
-    byp = bypass.to_bytes()
-    header = len(cab).to_bytes(8, "big") + len(byp).to_bytes(8, "big")
-    return header + cab + byp
+    with obs_trace.span("nnc.encode", leaves=len(leaves)):
+        bypass = BitWriter()
+        bin_chunks: list[tuple[int, np.ndarray]] = []
+        for leaf in leaves:
+            _plan_tensor(np.asarray(leaf), bypass, bin_chunks)
+        total = sum(c.size for _, c in bin_chunks)
+        ctx_ids = np.empty(total, np.uint8)
+        bits = np.empty(total, np.uint8)
+        off = 0
+        for c, chunk in bin_chunks:
+            n = chunk.size
+            ctx_ids[off:off + n] = c
+            bits[off:off + n] = chunk
+            off += n
+        cab = encode_context_bins(ctx_ids, bits, NUM_CTX)
+        byp = bypass.to_bytes()
+        header = len(cab).to_bytes(8, "big") + len(byp).to_bytes(8, "big")
+        return header + cab + byp
 
 
 def decode_tensor(shape: tuple, enc_dec: Decoder, ctx: ContextSet,
@@ -354,6 +356,12 @@ _DECODE_ERRORS = (EOFError, IndexError, ValueError, ZeroDivisionError,
 def _decode_sections(data: bytes, path_shapes: list[tuple[str, tuple]],
                      engine: str) -> dict[str, np.ndarray]:
     """Decode one message into {path: int32 array} with frame validation."""
+    with obs_trace.span("nnc.decode", nbytes=len(data)):
+        return _decode_sections_inner(data, path_shapes, engine)
+
+
+def _decode_sections_inner(data: bytes, path_shapes: list[tuple[str, tuple]],
+                           engine: str) -> dict[str, np.ndarray]:
     cab, byp = _split_frame(data)
     dec = Decoder(cab, strict=True)
     ctx = ContextSet(NUM_CTX)

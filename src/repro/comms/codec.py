@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import quant as quant_lib
 from repro.core import scaling as scaling_lib
+from repro.obs import trace as obs_trace
 
 # ---------------------------------------------------------------- pytree utils
 
@@ -283,14 +284,37 @@ class Codec:
     # -- per-message entry points -------------------------------------------
 
     def encode(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
-        return self._frame(self._encode_body(upd, spec), upd, spec)
+        with obs_trace.span("codec.encode", codec=self.name):
+            return self._frame(self._encode_body(upd, spec), upd, spec)
 
     def decode(self, payload: bytes, spec: WireSpec) -> Decoded:
-        body, tail = self._deframe(payload, spec)
-        dec = self._decode_body(body, spec)
+        with obs_trace.span("codec.decode", codec=self.name,
+                            nbytes=len(payload)):
+            body, tail = self._deframe(payload, spec)
+            dec = self._decode_body(body, spec)
+            if spec.version == 1:
+                return dec
+            return dec._replace(bn=_decode_bn(tail, spec))
+
+    # -- payload anatomy ----------------------------------------------------
+
+    def payload_sections(self, payload: bytes,
+                         spec: WireSpec) -> dict[str, int]:
+        """Byte count per wire section of ONE payload (telemetry hook).
+
+        The section names are codec-specific but the values always sum to
+        ``len(payload)`` (property-tested in tests/test_obs.py).  The base
+        split knows only the versioned framing: the whole body under v1,
+        ``frame.header`` / body / ``frame.bn`` under v2.  Codecs with
+        internal structure (the nnc frame's CABAC/bypass split) override
+        this with a real parse.
+        """
         if spec.version == 1:
-            return dec
-        return dec._replace(bn=_decode_bn(tail, spec))
+            return {"body": len(payload)}
+        tail = spec.bn_nbytes
+        return {"frame.header": 1,
+                "body": len(payload) - 1 - tail,
+                "frame.bn": tail}
 
     # -- batch entry points -------------------------------------------------
 

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.coding import nnc
 from repro.coding import golomb as golomb_lib
+from repro.obs import trace as obs_trace
 from repro.coding.bitstream import BitReader, BitWriter
 from repro.comms.codec import (ClientUpdate, Codec, Decoded, WireSpec,
                                check_batch_clients, rebuild_tree,
@@ -278,30 +279,60 @@ class NncCabacCodec(LevelCodec):
 
     def encode_batch(self, upds, spec, *, clients=None):
         check_batch_clients(clients, len(upds), "updates")
-        pieces = [self._level_items(u, spec) for u in upds]
-        bodies = nnc.encode_tree_batch([self._msg(p, s) for p, s in pieces])
-        return [self._frame(body + self._ternary_tail(u, spec), u, spec)
-                for body, u in zip(bodies, upds)]
+        with obs_trace.span("codec.encode_batch", codec=self.name,
+                            n=len(upds)):
+            pieces = [self._level_items(u, spec) for u in upds]
+            bodies = nnc.encode_tree_batch(
+                [self._msg(p, s) for p, s in pieces])
+            return [self._frame(body + self._ternary_tail(u, spec), u, spec)
+                    for body, u in zip(bodies, upds)]
 
     def decode_batch(self, payloads, spec, *, clients=None):
         check_batch_clients(clients, len(payloads), "payloads")
         if not payloads:
             return []
-        p_shapes = [(p, tuple(s.shape)) for p, s in spec.param_items()]
-        s_shapes = [(p, tuple(s.shape)) for p, s in spec.scale_items()]
-        frames = [self._deframe(p, spec) for p in payloads]
-        split = [self._split_ternary(body, spec, len(p_shapes))
-                 for body, _ in frames]
-        trees = nnc.decode_tree_batch([body for body, _ in split],
-                                      self._msg_shapes(p_shapes, s_shapes))
-        out = []
-        for tree, (_, mags), (_, bn_tail) in zip(trees, split, frames):
-            dec = self._dequantize(tree["p"], tree.get("s", {}), mags, spec,
-                                   p_shapes, s_shapes)
-            if spec.version != 1:
-                dec = dec._replace(bn=decode_bn_tail(bn_tail, spec))
-            out.append(dec)
-        return out
+        with obs_trace.span("codec.decode_batch", codec=self.name,
+                            n=len(payloads)):
+            p_shapes = [(p, tuple(s.shape)) for p, s in spec.param_items()]
+            s_shapes = [(p, tuple(s.shape)) for p, s in spec.scale_items()]
+            frames = [self._deframe(p, spec) for p in payloads]
+            split = [self._split_ternary(body, spec, len(p_shapes))
+                     for body, _ in frames]
+            trees = nnc.decode_tree_batch([body for body, _ in split],
+                                          self._msg_shapes(p_shapes,
+                                                           s_shapes))
+            out = []
+            for tree, (_, mags), (_, bn_tail) in zip(trees, split, frames):
+                dec = self._dequantize(tree["p"], tree.get("s", {}), mags,
+                                       spec, p_shapes, s_shapes)
+                if spec.version != 1:
+                    dec = dec._replace(bn=decode_bn_tail(bn_tail, spec))
+                out.append(dec)
+            return out
+
+    def payload_sections(self, payload, spec):
+        """Real anatomy of one nnc payload: the 16-byte length header, the
+        CABAC and bypass streams, plus (when present) the ternary magnitude
+        tail and the schema-v2 frame sections.  Sums to ``len(payload)``."""
+        sections: dict[str, int] = {}
+        body = payload
+        bn_tail = 0
+        if spec.version != 1:
+            sections["frame.header"] = 1
+            bn_tail = spec.bn_nbytes
+            body = payload[1:len(payload) - bn_tail]
+        n_params = len(spec.param_items())
+        mag_tail = 4 * n_params if (spec.ternary and n_params) else 0
+        if mag_tail:
+            body = body[:len(body) - mag_tail]
+        sections["nnc.header"] = 16
+        sections["nnc.cabac"] = int.from_bytes(body[:8], "big")
+        sections["nnc.bypass"] = int.from_bytes(body[8:16], "big")
+        if mag_tail:
+            sections["ternary.mags"] = mag_tail
+        if spec.version != 1:
+            sections["frame.bn"] = bn_tail
+        return sections
 
 
 def jax_sds(shape):

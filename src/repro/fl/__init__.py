@@ -30,8 +30,10 @@ from repro.fl.scenarios import (SCENARIOS, Scenario, get_scenario,
                                 validate_scenario)
 from repro.fl.server_opt import (ServerOptConfig, make_server_opt,
                                  server_step, server_update)
+from repro.obs import Telemetry, make_telemetry
 
 __all__ = [
+    "Telemetry", "make_telemetry",
     "ChannelConfig",
     "AsyncConfig", "BufferEntry", "aggregate_buffer", "client_latencies",
     "normalized_staleness_weights", "staleness_weight", "weighted_mean_trees",

@@ -64,7 +64,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.coding import nnc
+from repro.obs import trace as obs_trace
 from repro.comms.channel import ChannelConfig, ChannelModel
 from repro.core import quant as quant_lib
 from repro.core.protocol import ProtocolConfig, make_protocol
@@ -93,6 +95,12 @@ class RoundRecord:
     wall_s: float
     participants: tuple[int, ...] = ()
     sim_time_s: float = 0.0   # simulated wall-clock (async / channel; else 0)
+    # per-round metrics snapshot (obs.MetricsRegistry.snapshot_round):
+    # counter deltas / gauges / histogram summaries.  None when the engine
+    # runs with telemetry off — and ALWAYS excluded from parity comparisons
+    # (telemetry is observational; the simulation fields above are bitwise
+    # identical with telemetry on or off).
+    telemetry: dict | None = None
 
 
 @dataclasses.dataclass
@@ -100,6 +108,7 @@ class RunResult:
     config_name: str
     records: list[RoundRecord]
     server: Any = None   # final ServerState (params/scales/bn_state)
+    telemetry: Any = None  # the run's obs.Telemetry bundle (trace export)
 
     @property
     def final_acc(self) -> float:
@@ -119,6 +128,29 @@ class RunResult:
             if r.test_acc >= target:
                 return r.cum_bytes
         return None
+
+    # -- tolerant metric helpers ------------------------------------------
+    # Async aggregations can legitimately produce rounds with NO usable
+    # client metrics (every window member churned before uploading), so a
+    # record's mean_val_acc/train_loss/... may be NaN.  These helpers skip
+    # such rounds instead of propagating NaN into run-level summaries.
+
+    def metric_series(self, name: str) -> list[tuple[int, float]]:
+        """(round, value) pairs for a RoundRecord field, skipping rounds
+        where the metric is absent (None or NaN)."""
+        out = []
+        for r in self.records:
+            v = getattr(r, name, None)
+            if v is None or (isinstance(v, float) and np.isnan(v)):
+                continue
+            out.append((r.round, float(v)))
+        return out
+
+    def mean_metric(self, name: str) -> float:
+        """Run-level mean of a RoundRecord field over the rounds that
+        carry it; NaN when no round does."""
+        vals = [v for _, v in self.metric_series(name)]
+        return float(np.mean(vals)) if vals else float("nan")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +177,9 @@ class EngineConfig:
     population: int | None = None        # virtual clients (None = splits')
     store: StoreConfig = dataclasses.field(default_factory=StoreConfig)
     traffic: TrafficConfig | None = None  # trace-driven arrivals/churn
+    # --- observability (repro.obs) ---
+    telemetry: str = "off"               # "off" | "metrics" | "trace"
+    metrics_out: str | None = None       # per-round snapshot JSONL stream
 
     def validate(self, num_clients: int | None = None) -> None:
         """Reject conflicting axes up front (also run at Scenario
@@ -242,6 +277,13 @@ class EngineConfig:
                              f"got {self.uplink_executor!r}")
         if self.uplink_workers < 0:
             raise ValueError("uplink_workers must be >= 0")
+        if self.telemetry not in obs.TELEMETRY_MODES:
+            known = ", ".join(obs.TELEMETRY_MODES)
+            raise ValueError(f"unknown telemetry mode: {self.telemetry!r} "
+                             f"(known: {known})")
+        if self.metrics_out is not None and self.telemetry == "off":
+            raise ValueError("metrics_out streams per-round snapshots; it "
+                             "needs telemetry='metrics' or 'trace'")
 
 
 # ------------------------------------------------------------- byte helpers
@@ -307,6 +349,11 @@ class FederatedEngine:
         self.version = 0   # aggregation counter (async staleness reference)
         self.traffic = (TrafficModel(engine_cfg.traffic)
                         if engine_cfg.traffic is not None else None)
+        # observability: the run's span recorder + metrics registry; made
+        # ambient for the duration of run() so every stage, codec, store
+        # and executor reports without plumbing (off = shared no-op bundle)
+        self.telemetry = obs.make_telemetry(engine_cfg.telemetry,
+                                            metrics_out=engine_cfg.metrics_out)
 
         # ---- the stage pipeline (ONE instance each; schedulers share) ----
         # population axes: per-client state lives in a ClientStateStore
@@ -354,46 +401,81 @@ class FederatedEngine:
 
     @staticmethod
     def _mean_metric(intake: RoundIntake, name: str) -> float:
-        return float(np.mean([c.metrics[name]
-                              for c in intake.contributions]))
+        """Cohort mean of a per-client training metric; NaN (not a raise)
+        when no contribution carries it — async windows can aggregate
+        rounds with zero usable intake (every member churned)."""
+        vals = [c.metrics[name] for c in intake.contributions
+                if c.metrics is not None and name in c.metrics]
+        return float(np.mean(vals)) if vals else float("nan")
+
+    def _record_round_metrics(self, rec: RoundRecord, intake: RoundIntake,
+                              run_t0: float) -> None:
+        """Per-round registry updates, recorded from the SAME values that
+        build the RoundRecord — the snapshot's byte counters therefore
+        equal ``rec.up_bytes``/``rec.down_bytes`` exactly (the acceptance
+        criterion tests/test_obs.py pins on the three parity scenarios)."""
+        m = self.telemetry.metrics
+        m.count("uplink.bytes", rec.up_bytes)
+        m.count("downlink.bytes", rec.down_bytes)
+        m.count("rounds", 1)
+        m.gauge("round.wall_s", rec.wall_s)
+        m.gauge("round.sim_time_s", rec.sim_time_s)
+        # simulated-vs-wall clock skew: how far the simulated clock has run
+        # ahead of (positive) or behind (negative) real execution time
+        m.gauge("clock.skew_s", rec.sim_time_s - (time.time() - run_t0))
+        m.gauge("round.cohort", len(intake.contributions))
+        m.gauge("round.survivors", len(intake.survivors))
+        m.gauge("uplink.pool_tasks", self.uplink.pool_tasks)
+        for k, v in self.local_train.store.stats().items():
+            m.gauge(f"store.{k}", v)
 
     def run(self, rounds: int, *, verbose: bool = False) -> RunResult:
         records: list[RoundRecord] = []
         cum = 0
+        tel = self.telemetry
+        run_t0 = time.time()
         try:
-            while len(records) < rounds:
-                t0 = time.time()
-                intake = self.scheduler.next_round()
-                survivors = [intake.contributions[i]
-                             for i in intake.survivors]
-                up_bytes = sum(c.payload_bytes
-                               for c in intake.contributions)
-                down_bytes = 0
-                if survivors:
-                    agg = self.aggregate(survivors, intake.weights)
-                    self.server, down_bytes = self.server_step(
-                        self.server, agg, self.downlink, intake.receivers,
-                        self.transmit)
-                    self.version += 1
-                cum += up_bytes + down_bytes
-                acc = self.evaluate(self.server)
-                rec = RoundRecord(
-                    round=len(records) + 1, test_acc=acc, up_bytes=up_bytes,
-                    down_bytes=down_bytes, cum_bytes=cum,
-                    mean_val_acc=self._mean_metric(intake, "val_acc"),
-                    update_sparsity=self._mean_metric(intake,
-                                                      "update_sparsity"),
-                    train_loss=self._mean_metric(intake, "train_loss"),
-                    wall_s=time.time() - t0,
-                    participants=tuple(c.client for c in survivors),
-                    sim_time_s=intake.sim_time)
-                records.append(rec)
-                if verbose:
-                    print(f"[{self.config_name}] "
-                          + self.scheduler.log_line(rec, intake))
+            with tel.activate():
+                while len(records) < rounds:
+                    t0 = time.time()
+                    with obs_trace.span("round", n=len(records) + 1):
+                        intake = self.scheduler.next_round()
+                        survivors = [intake.contributions[i]
+                                     for i in intake.survivors]
+                        up_bytes = sum(c.payload_bytes
+                                       for c in intake.contributions)
+                        down_bytes = 0
+                        if survivors:
+                            agg = self.aggregate(survivors, intake.weights)
+                            self.server, down_bytes = self.server_step(
+                                self.server, agg, self.downlink,
+                                intake.receivers, self.transmit)
+                            self.version += 1
+                        cum += up_bytes + down_bytes
+                        acc = self.evaluate(self.server)
+                    rec = RoundRecord(
+                        round=len(records) + 1, test_acc=acc,
+                        up_bytes=up_bytes,
+                        down_bytes=down_bytes, cum_bytes=cum,
+                        mean_val_acc=self._mean_metric(intake, "val_acc"),
+                        update_sparsity=self._mean_metric(intake,
+                                                          "update_sparsity"),
+                        train_loss=self._mean_metric(intake, "train_loss"),
+                        wall_s=time.time() - t0,
+                        participants=tuple(c.client for c in survivors),
+                        sim_time_s=intake.sim_time)
+                    if tel.on:
+                        self._record_round_metrics(rec, intake, run_t0)
+                        rec.telemetry = tel.round_snapshot(rec.round)
+                    records.append(rec)
+                    if verbose:
+                        print(f"[{self.config_name}] "
+                              + self.scheduler.log_line(rec, intake))
         finally:
             self.uplink.close()
-        return RunResult(self.config_name, records, server=self.server)
+            tel.close()
+        return RunResult(self.config_name, records, server=self.server,
+                         telemetry=tel)
 
 
 # ---------------------------------------------------------------- entry

@@ -42,6 +42,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.fl.sampling import pad_clients
 from repro.launch.mesh import make_cohort_mesh
+from repro.obs import trace as obs_trace
 
 COHORT_AXIS = "clients"
 
@@ -55,6 +56,17 @@ def _row(tree: Any, i: int) -> Any:
 
 def _stack(outs: list[Any]) -> Any:
     return jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+
+
+def _named(client_round):
+    """Wrap ``client_round`` in ``jax.named_scope`` at bind time so the
+    compiled HLO (and any device profile) carries the stage name.  Pure
+    trace-time metadata — numerically a no-op, so the seed-parity pins
+    are unaffected."""
+    def named_client_round(*args):
+        with jax.named_scope("fl.client_round"):
+            return client_round(*args)
+    return named_client_round
 
 
 class ClientExecutor:
@@ -92,17 +104,21 @@ class SerialExecutor(ClientExecutor):
     name = "serial"
 
     def bind(self, client_round) -> None:
-        self.jround = jax.jit(client_round)
+        self.jround = jax.jit(_named(client_round))
 
     def run_shared(self, server, pers, cx, cy, cvx, cvy, bidx):
-        return _stack([self.jround(server, _row(pers, i), cx[i], cy[i],
-                                   cvx[i], cvy[i], bidx[i])
-                       for i in range(cx.shape[0])])
+        with obs_trace.device_span("executor.run_shared", backend=self.name,
+                                   n=int(cx.shape[0])):
+            return _stack([self.jround(server, _row(pers, i), cx[i], cy[i],
+                                       cvx[i], cvy[i], bidx[i])
+                           for i in range(cx.shape[0])])
 
     def run_stacked(self, servers, pers, cx, cy, cvx, cvy, bidx):
-        return _stack([self.jround(_row(servers, i), _row(pers, i), cx[i],
-                                   cy[i], cvx[i], cvy[i], bidx[i])
-                       for i in range(cx.shape[0])])
+        with obs_trace.device_span("executor.run_stacked", backend=self.name,
+                                   n=int(cx.shape[0])):
+            return _stack([self.jround(_row(servers, i), _row(pers, i),
+                                       cx[i], cy[i], cvx[i], cvy[i], bidx[i])
+                           for i in range(cx.shape[0])])
 
 
 class VmapExecutor(ClientExecutor):
@@ -117,14 +133,19 @@ class VmapExecutor(ClientExecutor):
     name = "vmap"
 
     def bind(self, client_round) -> None:
-        self.vround = jax.jit(jax.vmap(client_round, **_VMAP_AXES))
-        self.vround_stacked = jax.jit(jax.vmap(client_round, **_STACKED_AXES))
+        named = _named(client_round)
+        self.vround = jax.jit(jax.vmap(named, **_VMAP_AXES))
+        self.vround_stacked = jax.jit(jax.vmap(named, **_STACKED_AXES))
 
     def run_shared(self, server, pers, cx, cy, cvx, cvy, bidx):
-        return self.vround(server, pers, cx, cy, cvx, cvy, bidx)
+        with obs_trace.device_span("executor.run_shared", backend=self.name,
+                                   n=int(cx.shape[0])):
+            return self.vround(server, pers, cx, cy, cvx, cvy, bidx)
 
     def run_stacked(self, servers, pers, cx, cy, cvx, cvy, bidx):
-        return self.vround_stacked(servers, pers, cx, cy, cvx, cvy, bidx)
+        with obs_trace.device_span("executor.run_stacked", backend=self.name,
+                                   n=int(cx.shape[0])):
+            return self.vround_stacked(servers, pers, cx, cy, cvx, cvy, bidx)
 
 
 class ShardedExecutor(VmapExecutor):
@@ -163,16 +184,20 @@ class ShardedExecutor(VmapExecutor):
 
     def run_shared(self, server, pers, cx, cy, cvx, cvy, bidx):
         n = cx.shape[0]
-        batch = self._padded((pers, cx, cy, cvx, cvy, bidx), n)
-        out = self.vround(self._place(server, self._replicated), *batch)
-        return _row(out, slice(0, n))
+        with obs_trace.device_span("executor.run_shared", backend=self.name,
+                                   n=int(n)):
+            batch = self._padded((pers, cx, cy, cvx, cvy, bidx), n)
+            out = self.vround(self._place(server, self._replicated), *batch)
+            return _row(out, slice(0, n))
 
     def run_stacked(self, servers, pers, cx, cy, cvx, cvy, bidx):
         n = cx.shape[0]
-        servers, *batch = self._padded(
-            (servers, pers, cx, cy, cvx, cvy, bidx), n)
-        out = self.vround_stacked(servers, *batch)
-        return _row(out, slice(0, n))
+        with obs_trace.device_span("executor.run_stacked", backend=self.name,
+                                   n=int(n)):
+            servers, *batch = self._padded(
+                (servers, pers, cx, cy, cvx, cvy, bidx), n)
+            out = self.vround_stacked(servers, *batch)
+            return _row(out, slice(0, n))
 
 
 EXECUTORS: dict[str, type[ClientExecutor]] = {

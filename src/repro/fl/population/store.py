@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import io as ckpt_io
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,32 +195,35 @@ class ShardedLazyStore(ClientStateStore):
         if sid in self._spilled:
             # restored leaves may view the msgpack read buffer (read-only);
             # scatter writes rows in place, so force writable copies
-            leaves = []
-            for leaf in ckpt_io.restore(self._spilled[sid]):
-                arr = np.asarray(leaf)
-                leaves.append(arr if arr.flags.writeable else arr.copy())
-            self.loads += 1
-            self._insert(sid, leaves)
-            return leaves
+            with obs_trace.span("store.load", shard=sid):
+                leaves = []
+                for leaf in ckpt_io.restore(self._spilled[sid]):
+                    arr = np.asarray(leaf)
+                    leaves.append(arr if arr.flags.writeable else arr.copy())
+                self.loads += 1
+                self._insert(sid, leaves)
+                return leaves
         return None
 
     def _materialize(self, sid: int) -> list[np.ndarray]:
         """First write into a cold shard: template rows, writable copies."""
-        rows = min(self.cfg.shard_size,
-                   self.num_clients - sid * self.cfg.shard_size)
-        leaves = [np.repeat(leaf[None], rows, axis=0)
-                  for leaf in self._template_leaves]
-        self.materializations += 1
-        self._insert(sid, leaves)
-        return leaves
+        with obs_trace.span("store.materialize", shard=sid):
+            rows = min(self.cfg.shard_size,
+                       self.num_clients - sid * self.cfg.shard_size)
+            leaves = [np.repeat(leaf[None], rows, axis=0)
+                      for leaf in self._template_leaves]
+            self.materializations += 1
+            self._insert(sid, leaves)
+            return leaves
 
     def _insert(self, sid: int, leaves: list[np.ndarray]) -> None:
         # evict BEFORE inserting so the hot set never exceeds the cap —
         # max_hot_seen is the honest high-water mark the benchmark asserts
         while len(self._hot) >= self.cfg.max_hot_shards:
             old_sid, old_leaves = self._hot.popitem(last=False)
-            ckpt_io.save(self._path(old_sid), list(old_leaves),
-                         level=self.cfg.spill_level)
+            with obs_trace.span("store.spill", shard=old_sid):
+                ckpt_io.save(self._path(old_sid), list(old_leaves),
+                             level=self.cfg.spill_level)
             self._spilled[old_sid] = self._path(old_sid)
             self.spills += 1
         self._hot[sid] = leaves

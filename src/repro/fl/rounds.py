@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import comms
+from repro.coding.nnc import leaves_with_paths
 from repro.core import delta as delta_lib
 from repro.core import prand
 from repro.core import quant as quant_lib
@@ -73,6 +74,8 @@ from repro.fl.async_buffer import (client_latencies, load_call_saving,
 from repro.fl.sampling import (SamplingConfig, sample_available,
                                sample_cohort, stream_cohort)
 from repro.fl.server_opt import server_update
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import apply_updates
 
 # ---------------------------------------------------------------- tree utils
@@ -176,10 +179,11 @@ class CohortPlan:
 
     def select(self, key: jax.Array) -> tuple[np.ndarray, jax.Array]:
         """One sync round's cohort; returns (indices, advanced key)."""
-        if self.full:
-            return np.arange(self.num_clients), key
-        key, ks = jax.random.split(key)
-        return sample_cohort(ks, self.num_clients, self.sampling), key
+        with obs_trace.span("cohort_plan.select", full=self.full):
+            if self.full:
+                return np.arange(self.num_clients), key
+            key, ks = jax.random.split(key)
+            return sample_cohort(ks, self.num_clients, self.sampling), key
 
     def select_stream(self, round_idx: int, now: float) -> np.ndarray:
         """Streaming-regime cohort: hash-drawn, availability-filtered.
@@ -188,32 +192,34 @@ class CohortPlan:
         trough legitimately returns a short (possibly empty) cohort and the
         scheduler advances its clock and retries.
         """
-        accept = None
-        if self.traffic is not None:
-            traffic, t = self.traffic, now
-            accept = lambda ids: traffic.available(ids, t, round_idx)
-        if self.full:
-            ids = np.arange(self.num_clients, dtype=np.int64)
-            if accept is not None:
-                ids = ids[np.asarray(accept(ids), bool)]
-            return ids
-        weight_fn = None
-        if (self.sampling.strategy == "weighted"
-                and self.sampling.weights is not None):
-            w = np.asarray(self.sampling.weights, np.float64)
-            peak = w.max()
-            weight_fn = lambda ids: w[ids] / peak
-        return stream_cohort(
-            self.sampling.stream_seed, round_idx, self.num_clients,
-            self.sampling.effective_size(self.num_clients),
-            weight_fn=weight_fn, accept_fn=accept,
-            strict=accept is None)
+        with obs_trace.span("cohort_plan.select_stream", round=round_idx):
+            accept = None
+            if self.traffic is not None:
+                traffic, t = self.traffic, now
+                accept = lambda ids: traffic.available(ids, t, round_idx)
+            if self.full:
+                ids = np.arange(self.num_clients, dtype=np.int64)
+                if accept is not None:
+                    ids = ids[np.asarray(accept(ids), bool)]
+                return ids
+            weight_fn = None
+            if (self.sampling.strategy == "weighted"
+                    and self.sampling.weights is not None):
+                w = np.asarray(self.sampling.weights, np.float64)
+                peak = w.max()
+                weight_fn = lambda ids: w[ids] / peak
+            return stream_cohort(
+                self.sampling.stream_seed, round_idx, self.num_clients,
+                self.sampling.effective_size(self.num_clients),
+                weight_fn=weight_fn, accept_fn=accept,
+                strict=accept is None)
 
     def select_available(self, key: jax.Array, available: np.ndarray,
                          k: int) -> tuple[np.ndarray, jax.Array]:
         """Async dispatch draw from the idle set (always consumes a split)."""
-        key, ks = jax.random.split(key)
-        return sample_available(ks, available, k, self.sampling), key
+        with obs_trace.span("cohort_plan.select_available", k=k):
+            key, ks = jax.random.split(key)
+            return sample_available(ks, available, k, self.sampling), key
 
 
 # ---------------------------------------------------------------- local train
@@ -256,21 +262,23 @@ class LocalTrain:
     def train_cohort(self, kb: jax.Array, idx: np.ndarray, server: ServerState,
                      full: bool):
         """One barrier round over the cohort ``idx``; returns RoundOutput."""
-        batch_idx = client_epoch_batches(kb, len(idx), self.n_train,
-                                         self.batch_size)
-        if full and self.store.dense:
-            cx, cy, cvx, cvy = self.splits.all()
-            pers_c = self.store.state
-            out = self.executor.run_shared(server, pers_c, cx, cy, cvx, cvy,
-                                           batch_idx)
-            self.store.set_state(out.persistent)
-        else:
-            cx, cy, cvx, cvy = self.splits.gather(idx)
-            pers_c = self.store.gather(idx)
-            out = self.executor.run_shared(server, pers_c, cx, cy, cvx, cvy,
-                                           batch_idx)
-            self.store.scatter(idx, out.persistent)
-        return out
+        with obs_trace.span("local_train.cohort", n=len(idx)):
+            batch_idx = client_epoch_batches(kb, len(idx), self.n_train,
+                                             self.batch_size)
+            if full and self.store.dense:
+                cx, cy, cvx, cvy = self.splits.all()
+                pers_c = self.store.state
+                out = self.executor.run_shared(server, pers_c, cx, cy,
+                                               cvx, cvy, batch_idx)
+                self.store.set_state(out.persistent)
+            else:
+                cx, cy, cvx, cvy = self.splits.gather(idx)
+                pers_c = self.store.gather(idx)
+                out = self.executor.run_shared(server, pers_c, cx, cy,
+                                               cvx, cvy, batch_idx)
+                self.store.scatter(idx, out.persistent)
+            self._record_update_metrics(out)
+            return out
 
     def train_window(self, kbs: list[jax.Array], clients: list[int],
                      servers: list[ServerState]):
@@ -285,17 +293,44 @@ class LocalTrain:
         broadcast path avoids materialising one server copy per client.
         Returns the client-stacked RoundOutput in ``clients`` order.
         """
-        idx = np.asarray(clients)
-        bidx = jnp.stack([epoch_batches(kb, self.n_train, self.batch_size)
-                          for kb in kbs])
-        cx, cy, cvx, cvy = self.splits.gather(idx)
-        args = (self.store.gather(idx), cx, cy, cvx, cvy, bidx)
-        if all(s is servers[0] for s in servers[1:]):
-            out = self.executor.run_shared(servers[0], *args)
-        else:
-            out = self.executor.run_stacked(stack_trees(servers), *args)
-        self.store.scatter(idx, out.persistent)
-        return out
+        with obs_trace.span("local_train.window", n=len(clients)):
+            idx = np.asarray(clients)
+            bidx = jnp.stack([epoch_batches(kb, self.n_train, self.batch_size)
+                              for kb in kbs])
+            cx, cy, cvx, cvy = self.splits.gather(idx)
+            args = (self.store.gather(idx), cx, cy, cvx, cvy, bidx)
+            if all(s is servers[0] for s in servers[1:]):
+                out = self.executor.run_shared(servers[0], *args)
+            else:
+                out = self.executor.run_stacked(stack_trees(servers), *args)
+            self.store.scatter(idx, out.persistent)
+            self._record_update_metrics(out)
+            return out
+
+    def _record_update_metrics(self, out) -> None:
+        """Per-layer sparsity of the decoded cohort update and Eq.-5
+        residual norms — gauges only; a no-op (and no device fetch) unless
+        a metrics registry is active."""
+        m = obs_metrics.get_registry()
+        if not m.enabled:
+            return
+        with obs_trace.span("local_train.metrics"):
+            pers = getattr(out, "persistent", None)
+            recon, resid = jax.device_get((
+                getattr(out, "recon_delta_params", None),
+                getattr(pers, "residual", None) if pers is not None
+                else None))
+            if recon is not None:
+                for path, leaf in leaves_with_paths(recon):
+                    arr = np.asarray(leaf)
+                    m.gauge(f"update.sparsity.{path}",
+                            float(np.mean(arr == 0.0)))
+            if resid is not None:
+                for path, leaf in leaves_with_paths(resid):
+                    arr = np.asarray(leaf, np.float64)
+                    flat = arr.reshape(arr.shape[0], -1)
+                    m.gauge(f"residual.norm.{path}",
+                            float(np.mean(np.linalg.norm(flat, axis=1))))
 
     def reinject_residual(self, client: int, delta: Any) -> None:
         """A dropped upload must not break Eq. 5: put the lost (decoded)
@@ -426,6 +461,10 @@ class Uplink:
         it stays on device (contributions carry device rows and the BN
         mean never syncs to host, like the pre-redesign engine).  The
         scalar metrics ride along for the Contribution metadata."""
+        with obs_trace.span("uplink.fetch"):
+            return self._fetch(out)
+
+    def _fetch(self, out):
         need_levels = "levels" in self.codec.needs
         need_recon = "recon" in self.codec.needs or self.spec.ternary
         lp, ls, rp, rs, bn, metrics = jax.device_get((
@@ -440,15 +479,43 @@ class Uplink:
 
     # -- wire round-trips --------------------------------------------------
 
+    def _account_payload(self, payload: bytes) -> None:
+        """Per-section uplink byte counters (``uplink.section.<name>.bytes``)
+        via the codec's :meth:`~repro.comms.Codec.payload_sections` parse.
+        Registry-gated: telemetry off never re-parses the payload."""
+        m = obs_metrics.get_registry()
+        if not m.enabled:
+            return
+        m.count("uplink.payloads", 1)
+        for sec, n in self.codec.payload_sections(payload, self.spec).items():
+            m.count(f"uplink.section.{sec}.bytes", n)
+
+    def _account_opaque(self, sizes: list[int]) -> None:
+        """Process-pool results: workers live in another process and never
+        see the parent registry, so only payload totals are accounted here
+        (section splits would need a payload re-parse the hot path skips)."""
+        m = obs_metrics.get_registry()
+        if not m.enabled:
+            return
+        m.count("uplink.payloads", len(sizes))
+        m.count("uplink.section.opaque.bytes", sum(sizes))
+
     def _roundtrip(self, upd: comms.ClientUpdate):
-        payload = self.codec.encode(upd, self.spec)
-        return len(payload), self.codec.decode(payload, self.spec)
+        with obs_trace.span("uplink.roundtrip"):
+            payload = self.codec.encode(upd, self.spec)
+            self._account_payload(payload)
+            return len(payload), self.codec.decode(payload, self.spec)
 
     def _roundtrip_batch(self, chunk: list[comms.ClientUpdate],
                          clients: list[int] | None):
-        payloads = self.codec.encode_batch(chunk, self.spec, clients=clients)
-        decs = self.codec.decode_batch(payloads, self.spec, clients=clients)
-        return [(len(p), d) for p, d in zip(payloads, decs)]
+        with obs_trace.span("uplink.roundtrip_batch", n=len(chunk)):
+            payloads = self.codec.encode_batch(chunk, self.spec,
+                                               clients=clients)
+            for p in payloads:
+                self._account_payload(p)
+            decs = self.codec.decode_batch(payloads, self.spec,
+                                           clients=clients)
+            return [(len(p), d) for p, d in zip(payloads, decs)]
 
     def _executor(self):
         if self._ex is None:
@@ -485,7 +552,10 @@ class Uplink:
             fn = (self._roundtrip if self.executor_kind == "thread"
                   else _pool_roundtrip)
             self.pool_tasks += len(upds)
-            return list(self._executor().map(fn, upds))
+            results = list(self._executor().map(fn, upds))
+            if self.executor_kind != "thread":
+                self._account_opaque([n for n, _ in results])
+            return results
         # enforce the cohort contract on the WHOLE batch: chunking must not
         # weaken the no-duplicate check (a duplicate pair could otherwise
         # land in different chunks and pass per-chunk validation)
@@ -504,8 +574,10 @@ class Uplink:
                     for ch, cl in chunks]
             return [r for f in futs for r in f.result()]
         futs = [ex.submit(_pool_roundtrip_chunk, ch, cl) for ch, cl in chunks]
-        return [(nbytes, comms.unflatten_decoded(flat, self.spec))
-                for f in futs for nbytes, flat in f.result()]
+        results = [(nbytes, comms.unflatten_decoded(flat, self.spec))
+                   for f in futs for nbytes, flat in f.result()]
+        self._account_opaque([n for n, _ in results])
+        return results
 
     def close(self) -> None:
         if self._ex is not None:
@@ -520,6 +592,11 @@ class Uplink:
 
     def intake(self, out, clients: list[int]) -> list[Contribution]:
         """Stacked cohort RoundOutput -> one Contribution per client."""
+        with obs_trace.span("uplink.intake", n=len(clients),
+                            transmit=self.transmit):
+            return self._intake(out, clients)
+
+    def _intake(self, out, clients: list[int]) -> list[Contribution]:
         if not self.transmit:
             # no-wire fast path: contributions carry DEVICE rows (lazy
             # slices), so aggregation stays on device with zero host
@@ -565,6 +642,12 @@ class Aggregate:
                  weights: np.ndarray | None = None) -> AggregatedRound:
         if not contribs:
             raise ValueError("cannot aggregate zero contributions")
+        with obs_trace.span("aggregate", n=len(contribs),
+                            weighted=weights is not None):
+            return self._aggregate(contribs, weights)
+
+    def _aggregate(self, contribs: list[Contribution],
+                   weights: np.ndarray | None) -> AggregatedRound:
         if weights is None:
             mdp = tree_mean0(stack_trees([c.delta_params for c in contribs]))
             mds = tree_mean0(stack_trees([c.delta_scales for c in contribs]))
@@ -600,17 +683,23 @@ class ServerStep:
     def __call__(self, server: ServerState, agg: AggregatedRound,
                  downlink: "Downlink", receivers: int,
                  transmit: bool) -> tuple[ServerState, int]:
-        updates, self.state = server_update(self.opt, self.state,
-                                            agg.delta_params, server.params)
-        down_bytes = 0
-        if downlink.active:
-            updates, down_bytes = downlink.compress(updates, receivers,
-                                                    transmit)
-        server = ServerState(
-            params=apply_updates(server.params, updates),
-            scales=delta_lib.tree_add(server.scales, agg.delta_scales),
-            bn_state=agg.bn_state)
-        return server, down_bytes
+        with obs_trace.span("server_step"):
+            updates, self.state = server_update(
+                self.opt, self.state, agg.delta_params, server.params)
+            down_bytes = 0
+            # the downlink stage span fires even when broadcast compression
+            # is inactive — the lifecycle always HAS a downlink leg, and the
+            # trace should show all seven stages regardless of config
+            with obs_trace.span("downlink", active=downlink.active):
+                if downlink.active:
+                    updates, down_bytes = downlink.compress(updates,
+                                                            receivers,
+                                                            transmit)
+            server = ServerState(
+                params=apply_updates(server.params, updates),
+                scales=delta_lib.tree_add(server.scales, agg.delta_scales),
+                bn_state=agg.bn_state)
+            return server, down_bytes
 
 
 # ---------------------------------------------------------------- downlink
@@ -646,24 +735,36 @@ class Downlink:
 
     def compress(self, updates: Any, receivers: int,
                  transmit: bool) -> tuple[Any, int]:
-        carried = delta_lib.tree_add(updates, self.residual)
-        sparse = sparsify_lib.sparsify_tree(carried, self.spars)
-        lv = quant_lib.quantize_tree(sparse, self.q)
-        if transmit:
-            upd = comms.ClientUpdate(
-                levels_params=jax.tree.map(np.asarray, lv),
-                levels_scales=None,
-                recon_params=quant_lib.dequantize_tree(lv, self.q),
-                recon_scales=None)
-            payload = self.codec.encode(upd, self.spec)
-            recon = self.codec.decode(payload, self.spec).params
-            self.last_payload_bytes = len(payload)
-            down = receivers * len(payload)
-        else:
-            recon = quant_lib.dequantize_tree(lv, self.q)
-            down = 0
-        self.residual = delta_lib.tree_sub(carried, recon)
-        return recon, down
+        with obs_trace.span("downlink.compress", receivers=receivers):
+            carried = delta_lib.tree_add(updates, self.residual)
+            sparse = sparsify_lib.sparsify_tree(carried, self.spars)
+            lv = quant_lib.quantize_tree(sparse, self.q)
+            if transmit:
+                upd = comms.ClientUpdate(
+                    levels_params=jax.tree.map(np.asarray, lv),
+                    levels_scales=None,
+                    recon_params=quant_lib.dequantize_tree(lv, self.q),
+                    recon_scales=None)
+                payload = self.codec.encode(upd, self.spec)
+                recon = self.codec.decode(payload, self.spec).params
+                self.last_payload_bytes = len(payload)
+                down = receivers * len(payload)
+                self._account_payload(payload)
+            else:
+                recon = quant_lib.dequantize_tree(lv, self.q)
+                down = 0
+            self.residual = delta_lib.tree_sub(carried, recon)
+            return recon, down
+
+    def _account_payload(self, payload: bytes) -> None:
+        """Per-section broadcast bytes (one payload, before the receiver
+        fan-out the engine's ``downlink.bytes`` counter applies)."""
+        m = obs_metrics.get_registry()
+        if not m.enabled:
+            return
+        m.count("downlink.payloads", 1)
+        for sec, n in self.codec.payload_sections(payload, self.spec).items():
+            m.count(f"downlink.section.{sec}.bytes", n)
 
 
 # ---------------------------------------------------------------- evaluate
@@ -676,7 +777,8 @@ class Evaluate:
         self.test_x, self.test_y = test_x, test_y
 
     def __call__(self, server: ServerState) -> float:
-        return float(self._eval(server, self.test_x, self.test_y))
+        with obs_trace.span("evaluate"):
+            return float(self._eval(server, self.test_x, self.test_y))
 
 
 # ---------------------------------------------------------------- schedulers
@@ -699,7 +801,18 @@ class RoundScheduler:
     def next_round(self) -> RoundIntake:
         raise NotImplementedError
 
+    def log_fields(self, rec, intake: RoundIntake) -> dict[str, Any]:
+        """Structured per-round log record.  Every value is sourced from
+        the RoundRecord / intake the orchestrator just built, so the log
+        can never disagree with the run's records (the satellite contract:
+        byte and accuracy values match ``RoundRecord`` exactly)."""
+        raise NotImplementedError
+
     def log_line(self, rec, intake: RoundIntake) -> str:
+        """Human-readable formatting over :meth:`log_fields`."""
+        return self._format(self.log_fields(rec, intake))
+
+    def _format(self, fields: dict[str, Any]) -> str:
         raise NotImplementedError
 
 
@@ -797,15 +910,32 @@ class SyncScheduler(RoundScheduler):
         return RoundIntake(contribs, survivors, weights=None,
                            sim_time=self.sim_clock, receivers=cohort)
 
-    def log_line(self, rec, intake: RoundIntake) -> str:
-        line = (f"round {rec.round:3d} acc={rec.test_acc:.3f} "
-                f"cohort={len(intake.survivors)}/{len(intake.contributions)} "
-                f"up={rec.up_bytes/1e6:.3f}MB "
-                f"sparsity={rec.update_sparsity:.3f}")
+    def log_fields(self, rec, intake: RoundIntake) -> dict[str, Any]:
+        fields: dict[str, Any] = {
+            "mode": self.mode,
+            "round": rec.round,
+            "test_acc": rec.test_acc,
+            "survivors": len(intake.survivors),
+            "cohort": len(intake.contributions),
+            "up_bytes": rec.up_bytes,
+            "down_bytes": rec.down_bytes,
+            "update_sparsity": rec.update_sparsity,
+        }
         if self.eng.channel is not None or self.eng.traffic is not None:
-            line += f" t_sim={rec.sim_time_s:.2f}s"
+            fields["sim_time_s"] = rec.sim_time_s
         if self.churned_total:
-            line += f" churned={self.churned_total}"
+            fields["churned_total"] = self.churned_total
+        return fields
+
+    def _format(self, f: dict[str, Any]) -> str:
+        line = (f"round {f['round']:3d} acc={f['test_acc']:.3f} "
+                f"cohort={f['survivors']}/{f['cohort']} "
+                f"up={f['up_bytes']/1e6:.3f}MB "
+                f"sparsity={f['update_sparsity']:.3f}")
+        if "sim_time_s" in f:
+            line += f" t_sim={f['sim_time_s']:.2f}s"
+        if "churned_total" in f:
+            line += f" churned={f['churned_total']}"
         return line
 
 
@@ -1057,6 +1187,7 @@ class BufferedAsyncScheduler(RoundScheduler):
             out = eng.local_train.train_window(
                 kbs, [e.client for e in window], [e.server for e in window])
             self.batch_sizes.append(len(window))
+            obs_metrics.observe("async.batch_size", len(window))
             contribs = eng.uplink.intake(out, [e.client for e in window])
             for e, c in zip(window, contribs):
                 c.staleness = eng.version - e.start_version
@@ -1087,13 +1218,26 @@ class BufferedAsyncScheduler(RoundScheduler):
                                    weights=w, sim_time=self.now,
                                    receivers=self.concurrency)
 
-    def log_line(self, rec, intake: RoundIntake) -> str:
-        stale = [c.staleness for c in intake.contributions]
-        line = (f"agg {rec.round:3d} acc={rec.test_acc:.3f} "
-                f"t_sim={rec.sim_time_s:.2f}s staleness={stale} "
-                f"up={rec.up_bytes/1e6:.3f}MB")
+    def log_fields(self, rec, intake: RoundIntake) -> dict[str, Any]:
+        fields: dict[str, Any] = {
+            "mode": self.mode,
+            "round": rec.round,
+            "test_acc": rec.test_acc,
+            "sim_time_s": rec.sim_time_s,
+            "staleness": [c.staleness for c in intake.contributions],
+            "up_bytes": rec.up_bytes,
+            "down_bytes": rec.down_bytes,
+        }
         if self.churned_total:
-            line += f" churned={self.churned_total}"
+            fields["churned_total"] = self.churned_total
+        return fields
+
+    def _format(self, f: dict[str, Any]) -> str:
+        line = (f"agg {f['round']:3d} acc={f['test_acc']:.3f} "
+                f"t_sim={f['sim_time_s']:.2f}s staleness={f['staleness']} "
+                f"up={f['up_bytes']/1e6:.3f}MB")
+        if "churned_total" in f:
+            line += f" churned={f['churned_total']}"
         return line
 
 

@@ -76,6 +76,9 @@ class Scenario:
     uplink_workers: int = 0         # >1: parallel per-client encode+decode
     uplink_executor: str = "thread"  # "thread" | "process"
     uplink_batch: bool = False      # codec batch API: <=W pool tasks/cohort
+    # --- telemetry (repro.obs) ---
+    telemetry: str = "off"          # "off" | "metrics" | "trace"
+    metrics_out: str | None = None  # per-round metrics JSONL stream
     # --- data heterogeneity (default task only) ---
     dirichlet_alpha: float | None = None   # None = IID random partition
 
@@ -123,6 +126,8 @@ def build_engine(s: Scenario) -> EngineConfig:
         uplink_workers=s.uplink_workers,
         uplink_executor=s.uplink_executor,
         uplink_batch=s.uplink_batch,
+        telemetry=s.telemetry,
+        metrics_out=s.metrics_out,
         # partial updates never have non-classifier deltas, so the wire
         # drops those leaves entirely (layer-selective payloads)
         up_predicate=_fc_only if s.partial_updates else None)

@@ -1,10 +1,15 @@
 """Serving launcher: batched prefill + decode for any `--arch <id>`.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --steps 8
+    [--trace-out FILE]   (span-trace the prefill/decode loop; Chrome
+                          trace-event JSON, opens at https://ui.perfetto.dev)
 """
 import argparse
 
 import jax
+
+from repro import obs
+from repro.obs import trace as obs_trace
 
 
 def main():
@@ -13,6 +18,9 @@ def main():
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--trace-out", default=None,
+                    help="write prefill/decode spans as Chrome trace-event "
+                         "JSON")
     args = ap.parse_args()
 
     from repro.configs import get, make_inputs
@@ -21,6 +29,7 @@ def main():
     from repro.models.common import UNSHARDED
     from repro.models.transformer import SINGLE
 
+    tel = obs.make_telemetry("trace" if args.trace_out else "off")
     cfg = get(args.arch).reduced()
     params = transformer.init_params(jax.random.PRNGKey(0), cfg, SINGLE)
     extras = {}
@@ -30,16 +39,26 @@ def main():
                                            )["enc_embeds"]
     prompts = jax.random.randint(jax.random.PRNGKey(2),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
-    nxt, cache = decode_lib.prefill(params, prompts, cfg, SINGLE, UNSHARDED,
-                                    args.prompt_len + args.steps, **extras)
-    step = jax.jit(lambda c, t: decode_lib.decode_step(
-        params, c, t, cfg, SINGLE, UNSHARDED))
-    toks = [nxt]
-    for _ in range(args.steps - 1):
-        nxt, cache = step(cache, nxt)
-        toks.append(nxt)
+    with tel.activate():
+        with obs_trace.device_span("serve.prefill", arch=args.arch,
+                                   batch=args.batch,
+                                   prompt_len=args.prompt_len):
+            nxt, cache = decode_lib.prefill(params, prompts, cfg, SINGLE,
+                                            UNSHARDED,
+                                            args.prompt_len + args.steps,
+                                            **extras)
+        step = jax.jit(lambda c, t: decode_lib.decode_step(
+            params, c, t, cfg, SINGLE, UNSHARDED))
+        toks = [nxt]
+        for i in range(args.steps - 1):
+            with obs_trace.device_span("serve.decode_step", step=i):
+                nxt, cache = step(cache, nxt)
+            toks.append(nxt)
     for b in range(args.batch):
         print(f"seq{b}:", [int(t[b]) for t in toks])
+    if args.trace_out:
+        n = tel.export_chrome_trace(args.trace_out)
+        print(f"trace: {args.trace_out} ({n} events)")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,11 @@ if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
   echo "== cohort scaling smoke: executor backends + async window batching =="
   python benchmarks/cohort_scaling.py --smoke --out /tmp/BENCH_cohort_smoke.json >/dev/null
 
+  echo "== ingest smoke: streaming decode-and-accumulate rate guard =="
+  echo "== (streaming+speculative >=1.5x gather block-decode at K=32) =="
+  python benchmarks/ingest_rate.py --smoke --guard \
+    --out /tmp/BENCH_ingest_smoke.json
+
   echo "== population smoke: sharded lazy store, peak-RSS O(cohort) guard =="
   python benchmarks/population_scale.py --smoke --guard \
     --out /tmp/BENCH_population_smoke.json

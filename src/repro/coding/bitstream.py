@@ -58,6 +58,11 @@ class BitReader:
         self._pos = 0
         self._ones: np.ndarray | None = None
         self._csum: np.ndarray | None = None
+        self._jump: np.ndarray | None = None
+        # composed exp-Golomb jump tables, keyed by order k: a multi-section
+        # message reuses section 1's doubled table for every later section
+        # with the same k (see golomb.decode_egk_jump)
+        self.jump_pow: dict[int, tuple[int, np.ndarray]] = {}
 
     def get_bit(self) -> int:
         b = int(self._bits[self._pos])
@@ -99,6 +104,32 @@ class BitReader:
             np.cumsum(self._bits, out=csum[1:])
             self._csum = csum
         return self._ones, self._csum
+
+    def jump_base(self) -> np.ndarray:
+        """k-independent exp-Golomb boundary-jump base, built once per reader.
+
+        ``base[q] = 2 * next_one(q) - q`` for every bit position ``q``: a
+        codeword starting at ``q`` ends at ``base[q] + k + 1`` (prefix zeros
+        up to the first set bit, then as many value bits again plus ``k``).
+        Positions with no remaining set bit — including the two sentinel
+        slots ``q in (n, n+1)`` — hold ``n + 2`` so any order-k jump table
+        derived from the base clamps them to the ``n + 1`` EOF fixed point.
+        Shared by every exp-Golomb section of a message (the base does not
+        depend on the section's ``k``)."""
+        if self._jump is None:
+            n = self._bits.size
+            ones, csum = self.ones_index()
+            base = np.full(n + 2, n + 2, np.int64)
+            if ones.size:
+                # positions past the last set bit have no next one — a
+                # contiguous dead tail, so no masking is needed up to it
+                live = int(ones[-1]) + 1
+                t = ones[csum[:live]]
+                t += t
+                t -= np.arange(live, dtype=np.int64)
+                base[:live] = t
+            self._jump = base
+        return self._jump
 
     def tell(self) -> int:
         return self._pos

@@ -24,6 +24,29 @@ state), but :meth:`Decoder.decode_bits` decodes a whole same-context block
 per call with local-variable state — bit-exactly the repeated
 ``decode_bit`` — which is what makes the fast NNC decode path
 (`repro.coding.nnc`) competitive with the vectorized encoder.
+
+A third path, **speculative multi-symbol decode**
+(``Decoder(..., speculative=True)``), goes beyond the per-bin walk by
+betting on the most-probable symbol (MPS).  While a context sits in
+MPS=0 territory (``p >= 1024``), a run of zero bits has three properties
+the serial loop pays for but never uses:
+
+* ``code`` is untouched (bit 0 only shrinks ``range`` to ``bound``);
+* the bounds are strictly decreasing, so "this bin is 0" is just
+  ``bound > code``;
+* the probability states walk the precomputed bit-0 transition orbit
+  (:func:`_orbit_tables`) — no per-bin adaptation arithmetic.
+
+So the speculative hit loop verifies one bin with a single multiply and a
+single compare against the constant ``lim = max(code + 1, TOP)``: a bound
+above ``lim`` simultaneously proves the bit is 0 AND that no
+renormalisation is due.  On a miss (the compare fails: either the bit is
+really 1, or a renorm must feed bytes first) it falls back to the exact
+serial step for that one bin, then re-speculates.  Every committed bit
+replays the reference update on identical state, so the stream walk —
+probabilities, range, code, byte positions, strict-mode overrun errors —
+is bit-exactly :meth:`Decoder.decode_bits` (differentially fuzzed in
+tests/test_cabac_differential.py, forced misses included).
 """
 from __future__ import annotations
 
@@ -36,6 +59,13 @@ _TOP = 1 << 24
 _BOT = 1 << 11  # probability scale (2048)
 _INIT_P = _BOT // 2
 _ADAPT_SHIFT = 5
+# speculation engages when P(bit=0) >= _SPEC_MIN/2048: the expected MPS
+# run (p/(2048-p) ~ 16 bins) then amortises the per-attempt setup; below
+# it the serial step is cheaper than a likely-failed bet.  Tuned on the
+# sparse regime the engine exists for (p1 <= ~2% wins up to ~2.5x; the
+# moderate-density band pays ~10-15% — which is why "speculative" is an
+# opt-in engine, not the default)
+_SPEC_MIN = 1927
 
 
 class ContextSet:
@@ -95,10 +125,12 @@ class Decoder:
     emits every byte the decoder's init+renormalisations will read), so any
     overrun proves truncation or a corrupted length header."""
 
-    def __init__(self, data: bytes, strict: bool = False) -> None:
+    def __init__(self, data: bytes, strict: bool = False,
+                 speculative: bool = False) -> None:
         self.data = data
         self.pos = 0
         self.strict = strict
+        self.speculative = speculative
         self.range = 0xFFFFFFFF
         self.code = 0
         for _ in range(5):
@@ -145,6 +177,8 @@ class Decoder:
         """
         if n <= 0:
             return np.zeros(0, np.uint8)
+        if self.speculative:
+            return self._decode_bits_spec(ctxs, idx, n)
         out = bytearray(n)
         p = int(ctxs.p[idx])
         rng = self.range
@@ -177,6 +211,165 @@ class Decoder:
                     b = 0
                 pos += 1
                 code = ((code << 8) | b) & m32
+        ctxs.p[idx] = p
+        self.range = rng
+        self.code = code
+        self.pos = pos
+        return np.frombuffer(bytes(out), np.uint8)
+
+    def _decode_bits_spec(self, ctxs: ContextSet, idx: int,
+                          n: int) -> np.ndarray:
+        """Speculative multi-symbol decode of ``n`` same-context bins.
+
+        Speculates that upcoming bins are the most-probable symbol.  For
+        MPS=0 (``p >= 1024``) a hit costs one multiply and one compare:
+        bit 0 leaves ``code`` and the byte stream untouched, so
+        ``bound > max(code, TOP - 1)`` verifies the bit AND rules out a
+        renorm in one go, with the probability trajectory read off the
+        precomputed bit-0 orbit (:func:`_orbit_tables`) instead of being
+        recomputed per bin.  Deeply-adapted contexts (sparse NNC streams
+        drive ``p`` to its ~2017 fixed point) renorm only every ~360 bins,
+        so almost every bin takes the two-op path.  A failed compare — a
+        true 1-bit or a pending renorm — resolves the boundary bin with
+        the exact serial step before re-speculating, and states below
+        ``_SPEC_MIN`` run the reference per-bin walk until they adapt
+        back into speculation range.
+
+        Bit-exactly :meth:`decode_bits` on every stream (see the module
+        docstring for the commit/verify argument).
+        """
+        out = bytearray(n)
+        p = int(ctxs.p[idx])
+        rng = self.range
+        code = self.code
+        data = self.data
+        pos = self.pos
+        dlen = len(data)
+        strict = self.strict
+        top, m32, bot = _TOP, 0xFFFFFFFF, _BOT
+        spec = _spec_rows()
+        i = 0
+        while i < n:
+            if p < _SPEC_MIN:
+                # -- serial regime: the reference per-bin walk (identical
+                # loop shape and cost to :meth:`decode_bits`, plus one
+                # threshold compare) until the state crosses into
+                # speculation range
+                ran_out = True
+                for j in range(i, n):
+                    bound = (rng >> 11) * p
+                    if code < bound:
+                        rng = bound
+                        p += (bot - p) >> 5
+                    else:
+                        out[j] = 1
+                        code -= bound
+                        rng -= bound
+                        p -= p >> 5
+                    while rng < top:
+                        rng = (rng << 8) & m32
+                        if pos < dlen:
+                            b = data[pos]
+                        elif strict:
+                            self.pos = pos
+                            raise CorruptPayloadError(
+                                f"cabac stream exhausted at byte {pos} "
+                                f"(stream is {dlen} bytes)")
+                        else:
+                            b = 0
+                        pos += 1
+                        code = ((code << 8) | b) & m32
+                    if p >= _SPEC_MIN:
+                        i = j + 1
+                        ran_out = False
+                        break
+                if ran_out:
+                    i = n
+                    break
+                continue
+            # -- speculate: the next bins are all 0 (the MPS).  Bounds
+            # decrease strictly within a 0-run, so each unrolled block is
+            # verified by ONE compare on its LAST bound; a clearing block
+            # simultaneously proves every bit is 0 and that no renorm was
+            # due (code and the byte stream are untouched).
+            row, nfix = spec[p]
+            lim = code + 1 if code >= top else top
+            t = 0
+            tmax = n - i
+            # orbit phase, 4-wide: p still adapting along the bit-0 orbit
+            # (the padding entries ARE the fixed point, so every row[t]
+            # read is the exact per-bin state)
+            stop = tmax - 4 if tmax - 4 < nfix else nfix
+            while t <= stop:
+                a = (rng >> 11) * row[t]
+                a = (a >> 11) * row[t + 1]
+                a = (a >> 11) * row[t + 2]
+                a = (a >> 11) * row[t + 3]
+                if a < lim:
+                    break
+                rng = a
+                t += 4
+            # single-step the orbit remainder — and, after a failed block,
+            # walk to the exact boundary bin inside THIS attempt (the
+            # failing block proves only that one of its four bins misses)
+            bound1 = tmax if tmax < nfix + 4 else nfix + 4
+            run = True
+            while t < bound1:
+                nxt = (rng >> 11) * row[t]
+                if nxt < lim:
+                    run = False
+                    break
+                rng = nxt
+                t += 1
+            if run and t < tmax:
+                # fixed-point phase: constant probability, pure range
+                # decay at ~2 interpreter ops per bin
+                fp = row[nfix]
+                while t + 8 <= tmax:
+                    a = ((rng >> 11) * fp >> 11) * fp
+                    a = ((a >> 11) * fp >> 11) * fp
+                    a = ((a >> 11) * fp >> 11) * fp
+                    a = ((a >> 11) * fp >> 11) * fp
+                    if a < lim:
+                        break
+                    rng = a
+                    t += 8
+                while t < tmax:
+                    nxt = (rng >> 11) * fp
+                    if nxt < lim:
+                        break
+                    rng = nxt
+                    t += 1
+            if t:
+                i += t
+                p = row[t] if t < nfix else row[nfix]
+                if i == n:
+                    break
+            # -- exact serial step for the boundary bin: a true 1-bit, or
+            # a 0-bit whose commit owes a renormalisation ------------------
+            bound = (rng >> 11) * p
+            if code < bound:
+                rng = bound
+                p += (bot - p) >> 5
+            else:
+                out[i] = 1
+                code -= bound
+                rng -= bound
+                p -= p >> 5
+            while rng < top:
+                rng = (rng << 8) & m32
+                if pos < dlen:
+                    b = data[pos]
+                elif strict:
+                    self.pos = pos
+                    raise CorruptPayloadError(
+                        f"cabac stream exhausted at byte {pos} "
+                        f"(stream is {dlen} bytes)")
+                else:
+                    b = 0
+                pos += 1
+                code = ((code << 8) | b) & m32
+            i += 1
         ctxs.p[idx] = p
         self.range = rng
         self.code = code
@@ -228,6 +421,34 @@ def _orbit_end() -> list:
     if _ORBIT_END is None:
         _ORBIT_END = _orbit_tables()[0].tolist()
     return _ORBIT_END
+
+
+_SPEC: list | None = None
+
+
+def _spec_rows() -> list:
+    """The speculation table: for every probability state ``p``, the exact
+    per-bin state trajectory of an all-zeros (MPS=0) run, trimmed at ITS
+    OWN fixed point rather than the global orbit cap.
+
+    Entry ``p`` is ``(row, nfix)``: ``row[t]`` is the state bin ``t`` of
+    the speculative run is coded with (the bit-0 adaptation is strictly
+    increasing until it pins at 2017, so the first fixed-point index is
+    the trim point), padded with 7 extra fixed-point copies so the
+    4-wide unrolled verify loop can read past ``nfix`` without bounds
+    checks — the padding values ARE the true states there.  Built lazily
+    from :func:`_orbit_tables` once per process.
+    """
+    global _SPEC
+    if _SPEC is None:
+        rows = _orbit_tables()[0][0].tolist()
+        spec = []
+        for r in rows:
+            fp = r[-1]
+            nfix = r.index(fp)
+            spec.append((r[:nfix + 1] + [fp] * 7, nfix))
+        _SPEC = spec
+    return _SPEC
 
 
 def context_state_sequence(bits: np.ndarray) -> np.ndarray:

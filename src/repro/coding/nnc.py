@@ -28,6 +28,14 @@ Two engines produce THE SAME bytes:
   * ``engine="serial"``: the original one-call-per-bin reference coder.  It
     is the ORACLE the vectorized engine is differentially tested against
     (tests/test_cabac_differential.py) — kept runnable, never dead code.
+  * ``engine="speculative"``: the vectorized engine with both speculative
+    decode paths enabled — ``cabac.Decoder(speculative=True)`` (MPS-run
+    bets verified against the range coder in one compare per bin, serial
+    fallback on miss) for the context bins, and the pointer-doubling
+    exp-Golomb boundary walk (``golomb.decode_egk_jump``) for large bypass
+    sections.  Encoding is byte-identical to ``"vectorized"``; decoding is
+    bit-exact but faster on the deeply-adapted contexts and long position
+    runs sparse updates produce.
 
 Decoding validates the frame: truncated payloads, inconsistent length
 headers, range-decoder overrun, and framing-invariant violations raise
@@ -56,7 +64,7 @@ CTX_GT2 = 2
 NUM_CTX = 3
 
 DEFAULT_ENGINE = "vectorized"
-_ENGINES = ("vectorized", "serial")
+_ENGINES = ("vectorized", "serial", "speculative")
 
 
 def _check_engine(engine: str) -> str:
@@ -244,10 +252,12 @@ def _encode_leaves(leaves: Sequence[np.ndarray]) -> bytes:
 
 
 def decode_tensor(shape: tuple, enc_dec: Decoder, ctx: ContextSet,
-                  bypass: BitReader) -> np.ndarray:
+                  bypass: BitReader, jump: bool = False) -> np.ndarray:
     """Fast decode of one tensor: same-context bin blocks decode through
     ``Decoder.decode_bits`` (bit-exactly the reference per-bin walk) and
-    the exp-Golomb sections parse vectorised."""
+    the exp-Golomb sections parse vectorised — under ``jump=True`` (the
+    speculative engine) via the pointer-doubling boundary walk."""
+    egk = golomb.decode_egk_jump if jump else golomb.decode_egk
     ndim = len(shape)
     size = int(np.prod(shape)) if shape else 1
     m = shape[0] if ndim >= 2 else 1
@@ -264,7 +274,7 @@ def decode_tensor(shape: tuple, enc_dec: Decoder, ctx: ContextSet,
     kept = np.zeros(kept_len, np.int64)
     if nnz > 0:
         k_run = bypass.get_uint(4)
-        gaps = golomb.decode_egk(bypass, nnz, k_run)
+        gaps = egk(bypass, nnz, k_run)
         idx = np.cumsum(gaps + 1) - 1
         _check_positions(idx, kept_len)
         signs = bypass.get_bits(nnz).astype(np.int64)
@@ -277,7 +287,7 @@ def decode_tensor(shape: tuple, enc_dec: Decoder, ctx: ContextSet,
         k_rem = bypass.get_uint(4)  # always framed when nnz>0
         _check_k_rem(k_rem, n2)
         if n2:
-            rem = golomb.decode_egk(bypass, n2, k_rem)
+            rem = egk(bypass, n2, k_rem)
             mg1[gt2] = rem + 3
         mags[gt1] = mg1
         kept[idx] = np.where(signs == 1, -mags, mags)
@@ -309,10 +319,10 @@ def _check_k_rem(k_rem: int, n2: int) -> None:
 
 def _reassemble(shape: tuple, m: int, row_len: int, nz_rows: np.ndarray,
                 kept: np.ndarray) -> np.ndarray:
-    out = np.zeros((m, row_len), np.int64)
+    out = np.zeros((m, row_len), np.int32)
     if kept.size:
         out[nz_rows] = kept.reshape(-1, row_len)
-    return out.reshape(shape).astype(np.int32)
+    return out.reshape(shape)
 
 
 # ===========================================================================
@@ -322,7 +332,7 @@ def _reassemble(shape: tuple, m: int, row_len: int, nz_rows: np.ndarray,
 def encode_tree(levels_tree: Any, engine: str = DEFAULT_ENGINE) -> bytes:
     """Encode a pytree of int32 level tensors into one NNC message."""
     items = _leaves_with_paths(levels_tree)
-    if _check_engine(engine) == "vectorized":
+    if _check_engine(engine) != "serial":   # speculation is decode-side
         return _encode_leaves([np.asarray(l) for _, l in items])
     enc = Encoder()
     ctx = ContextSet(NUM_CTX)
@@ -363,10 +373,16 @@ def _decode_sections(data: bytes, path_shapes: list[tuple[str, tuple]],
 def _decode_sections_inner(data: bytes, path_shapes: list[tuple[str, tuple]],
                            engine: str) -> dict[str, np.ndarray]:
     cab, byp = _split_frame(data)
-    dec = Decoder(cab, strict=True)
+    dec = Decoder(cab, strict=True, speculative=(engine == "speculative"))
     ctx = ContextSet(NUM_CTX)
     bypass = BitReader(byp)
-    one = decode_tensor if engine == "vectorized" else _decode_tensor_ref
+    if engine == "serial":
+        one = _decode_tensor_ref
+    elif engine == "speculative":
+        def one(shape, d, c, b):
+            return decode_tensor(shape, d, c, b, jump=True)
+    else:
+        one = decode_tensor
     try:
         decoded = {path: one(shape, dec, ctx, bypass)
                    for path, shape in path_shapes}
@@ -447,7 +463,7 @@ def encode_tree_batch(trees: Sequence[Any],
                 "encode_tree_batch needs structurally identical trees; got "
                 f"{treedef} vs {treedef0}")
         ordered = [np.asarray(leaves[i]) for i in order]
-        if engine == "vectorized":
+        if engine != "serial":              # speculation is decode-side
             out.append(_encode_leaves(ordered))
         else:
             enc = Encoder()

@@ -263,6 +263,19 @@ class Codec:
     # refuses the fork-based process executor for this codec
     fork_safe: bool = True
 
+    def with_decode_engine(self, engine: str) -> "Codec":
+        """Return a codec variant decoding with the given engine.
+
+        Registry instances are shared, so codecs with engine choices return
+        a COPY (never mutate ``get_codec`` state); codecs without engine
+        choices accept only the default and return themselves — callers can
+        pass the streaming-ingest engine knob to any codec uniformly.
+        """
+        if engine != "vectorized":
+            raise ValueError(
+                f"codec {self.name!r} has no {engine!r} decode engine")
+        return self
+
     # -- framing (shared by the per-message and batch paths) ----------------
 
     def _frame(self, body: bytes, upd: ClientUpdate, spec: WireSpec) -> bytes:

@@ -255,6 +255,19 @@ class NncCabacCodec(LevelCodec):
     """
 
     name = "nnc-cabac"
+    # decode-side engine (see coding/nnc.py): encode bytes are identical
+    # across engines, so variants interoperate freely on the wire
+    decode_engine = nnc.DEFAULT_ENGINE
+
+    def with_decode_engine(self, engine: str) -> "NncCabacCodec":
+        import copy
+
+        nnc._check_engine(engine)
+        if engine == self.decode_engine:
+            return self
+        dup = copy.copy(self)
+        dup.decode_engine = engine
+        return dup
 
     @staticmethod
     def _msg(p_items, s_items) -> dict:
@@ -274,7 +287,8 @@ class NncCabacCodec(LevelCodec):
         return nnc.encode_tree(self._msg(p_items, s_items))
 
     def _decode_levels(self, body, p_shapes, s_shapes):
-        decoded = nnc.decode_tree(body, self._msg_shapes(p_shapes, s_shapes))
+        decoded = nnc.decode_tree(body, self._msg_shapes(p_shapes, s_shapes),
+                                  engine=self.decode_engine)
         return decoded["p"], decoded.get("s", {})
 
     def encode_batch(self, upds, spec, *, clients=None):
@@ -300,7 +314,8 @@ class NncCabacCodec(LevelCodec):
                      for body, _ in frames]
             trees = nnc.decode_tree_batch([body for body, _ in split],
                                           self._msg_shapes(p_shapes,
-                                                           s_shapes))
+                                                           s_shapes),
+                                          engine=self.decode_engine)
             out = []
             for tree, (_, mags), (_, bn_tail) in zip(trees, split, frames):
                 dec = self._dequantize(tree["p"], tree.get("s", {}), mags,
@@ -350,6 +365,19 @@ class GolombCodec(LevelCodec):
     """
 
     name = "golomb"
+    decode_engine = "vectorized"
+
+    def with_decode_engine(self, engine: str) -> "GolombCodec":
+        import copy
+
+        if engine not in ("vectorized", "speculative"):
+            raise ValueError(
+                f"codec {self.name!r} has no {engine!r} decode engine")
+        if engine == self.decode_engine:
+            return self
+        dup = copy.copy(self)
+        dup.decode_engine = engine
+        return dup
 
     @staticmethod
     def _zigzag(x: np.ndarray) -> np.ndarray:
@@ -371,13 +399,16 @@ class GolombCodec(LevelCodec):
 
     def _decode_levels(self, body, p_shapes, s_shapes):
         r = BitReader(body)
+        egk = (golomb_lib.decode_egk_jump
+               if self.decode_engine == "speculative"
+               else golomb_lib.decode_egk)
 
         def section(shapes):
             out = {}
             for path, shape in shapes:
                 n = int(np.prod(shape)) if shape else 1
                 k = r.get_uint(4)
-                vals = golomb_lib.decode_egk(r, n, k)
+                vals = egk(r, n, k)
                 out[path] = (self._unzigzag(vals).astype(np.int32)
                              .reshape(shape))
             return out

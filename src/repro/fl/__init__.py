@@ -5,8 +5,8 @@ layout and the scenario registry, and tests/test_fl_engine.py for the
 behavioural contract.
 """
 from repro.comms import ChannelConfig
-from repro.fl.async_buffer import (AsyncConfig, BufferEntry, aggregate_buffer,
-                                   client_latencies,
+from repro.fl.async_buffer import (AsyncConfig, BufferEntry, TreeAccumulator,
+                                   aggregate_buffer, client_latencies,
                                    normalized_staleness_weights,
                                    staleness_weight, weighted_mean_trees)
 from repro.fl.engine import (EngineConfig, FederatedEngine, RoundRecord,
@@ -14,6 +14,8 @@ from repro.fl.engine import (EngineConfig, FederatedEngine, RoundRecord,
                              measure_update_bytes, run_simulation)
 from repro.fl.executors import (EXECUTORS, ClientExecutor, SerialExecutor,
                                 ShardedExecutor, VmapExecutor, make_executor)
+from repro.fl.ingest import (IngestConfig, IngestResult, IngestStats,
+                             RejectedPayload, StreamingIngest)
 from repro.fl.rounds import (SCHEDULERS, Aggregate, AggregatedRound,
                              BufferedAsyncScheduler, CohortPlan, Contribution,
                              Downlink, Evaluate, LocalTrain, RoundIntake,
@@ -35,7 +37,8 @@ from repro.obs import Telemetry, make_telemetry
 __all__ = [
     "Telemetry", "make_telemetry",
     "ChannelConfig",
-    "AsyncConfig", "BufferEntry", "aggregate_buffer", "client_latencies",
+    "AsyncConfig", "BufferEntry", "TreeAccumulator",
+    "aggregate_buffer", "client_latencies",
     "normalized_staleness_weights", "staleness_weight", "weighted_mean_trees",
     "EngineConfig", "FederatedEngine", "RoundRecord", "RunResult",
     "encode_client_bytes", "measure_update_bytes", "run_simulation",
@@ -44,6 +47,8 @@ __all__ = [
     "RoundIntake", "RoundScheduler", "ServerStep", "SyncScheduler", "Uplink",
     "EXECUTORS", "ClientExecutor", "SerialExecutor", "ShardedExecutor",
     "VmapExecutor", "make_executor",
+    "IngestConfig", "IngestResult", "IngestStats", "RejectedPayload",
+    "StreamingIngest",
     "ClientStateStore", "InMemoryStore", "ShardedLazyStore", "SplitsView",
     "StoreConfig", "TRAFFIC_PRESETS", "TrafficConfig", "TrafficModel",
     "VirtualPopulationView", "make_store", "make_view",

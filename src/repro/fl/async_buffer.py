@@ -114,18 +114,93 @@ def normalized_staleness_weights(staleness, exponent: float) -> np.ndarray:
     return raw / raw.sum()
 
 
+class TreeAccumulator:
+    """Single-pass running weighted mean over a stream of pytrees.
+
+    THE shared fold under :func:`weighted_mean_trees` (host trees) and the
+    streaming-ingest accumulator (``repro.fl.ingest``): one decoded
+    contribution folds in at a time, so server memory stays O(1) in cohort
+    size — no per-client pytree list ever materialises.
+
+    Numerics contract (what the parity tests pin):
+
+    * **Fold order is arrival order.**  ``add`` number *i* performs
+      ``acc += w_i * x_i`` leaf-wise with the product and sum taken in
+      float64; ``mean()`` divides by ``sum(w_i)`` (same order) in float64
+      and casts to the output dtype once, at the end.
+    * float64 carries 29 extra mantissa bits over the float32 leaves, so
+      the running sum is stable against the cancellation a float32
+      left-fold suffers, and a fold of unit-weight integer-valued updates
+      reproduces the float64 batch mean EXACTLY (integer sums are exact in
+      float64; the single division matches).
+    * The accumulator is host-side by design: device reductions are free
+      to reassociate, which would make "same weights, same order" runs
+      irreproducible across backends.
+    """
+
+    def __init__(self) -> None:
+        self._sum: Any = None
+        self._wsum = 0.0
+        self.count = 0
+
+    def add(self, tree: Any, weight: float = 1.0) -> None:
+        w = float(weight)
+        if self.count == 0:
+            self._sum = jax.tree.map(
+                lambda l: np.asarray(l, np.float64) * w, tree)
+        else:
+            def fold(acc, l):
+                acc += np.asarray(l, np.float64) * w
+                return acc
+            self._sum = jax.tree.map(fold, self._sum, tree)
+        self._wsum += w
+        self.count += 1
+
+    @property
+    def weight_sum(self) -> float:
+        return self._wsum
+
+    def mean(self, dtype=np.float32) -> Any:
+        """``sum_i(w_i * x_i) / sum_i(w_i)``, cast to ``dtype`` leaf-wise."""
+        if self.count == 0:
+            raise ValueError("mean() of an empty TreeAccumulator")
+        if self._wsum == 0.0:
+            raise ZeroDivisionError("mean() with zero total weight")
+        return jax.tree.map(
+            lambda l: (l / self._wsum).astype(dtype), self._sum)
+
+
+def _any_device_leaf(trees: list[Any]) -> bool:
+    for t in trees:
+        for l in jax.tree.leaves(t):
+            if isinstance(l, jax.Array):
+                return True
+    return False
+
+
 def weighted_mean_trees(trees: list[Any], w: np.ndarray) -> Any:
     """Convex combination of pytrees with per-tree weights ``w``.
 
     THE weighted-aggregation kernel: ``repro.fl.rounds.Aggregate`` (the
     engine's single aggregation stage) and :func:`aggregate_buffer` both
     reduce to this, so sync and async cannot drift numerically.
+
+    Host trees (decoded wire payloads) fold through :class:`TreeAccumulator`
+    in list order — bit-identical to the streaming-ingest fold over the
+    same contributions, which is what lets ``ingest="streaming"`` hold the
+    async seed pins.  Trees with device leaves keep the jnp sum (the
+    no-wire zero-transfer fast path must not force a host round-trip).
     """
     if len(trees) != len(w):
         # a silent zip-truncation here would scale the aggregate by
         # sum(w[:M]) < 1 instead of renormalising — e.g. weights computed
         # over a full buffer paired with a survivor subset
         raise ValueError(f"{len(trees)} trees but {len(w)} weights")
+    if trees and not _any_device_leaf(trees):
+        acc = TreeAccumulator()
+        for wi, t in zip(w, trees):
+            acc.add(t, wi)
+        return acc.mean()
     return jax.tree.map(
         lambda *leaves: sum(jnp.asarray(wi, l.dtype) * l
                             for wi, l in zip(w, leaves)),

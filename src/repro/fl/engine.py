@@ -38,6 +38,13 @@ Orthogonal axes (all composable through :class:`EngineConfig`):
     encode+decode round-trips across a thread or process pool — for the
     sync cohort and for async windows alike
     (``benchmarks/engine_throughput.py`` measures the speedup),
+  * **server ingest** — ``ingest="gather"`` (decode every payload into a
+    per-client pytree, average the list) or ``"streaming"``
+    (decode-and-accumulate through ``repro.fl.ingest``: payloads fold
+    into running accumulators, O(1) server memory in cohort size, same
+    aggregation bits; ``IngestConfig.decode_engine="speculative"``
+    additionally enables the multi-symbol CABAC decoder —
+    ``benchmarks/ingest_rate.py`` measures payloads/s),
   * **channel** — an optional ``repro.comms.ChannelModel`` converts payload
     sizes into transfer times on the simulated clock (and can drop sync
     uploads), so compression ratio trades against round time.
@@ -73,6 +80,7 @@ from repro.core.protocol import ProtocolConfig, make_protocol
 from repro.data.federated import FederatedSplits
 from repro.fl.async_buffer import AsyncConfig
 from repro.fl.executors import EXECUTORS, make_executor
+from repro.fl.ingest import IngestConfig, StreamingIngest
 from repro.fl.population import (StoreConfig, TrafficConfig, TrafficModel,
                                  make_store, make_view)
 from repro.fl.rounds import (SCHEDULERS, Aggregate, CohortPlan, Downlink,
@@ -171,6 +179,13 @@ class EngineConfig:
     uplink_workers: int = 0              # >1: parallel encode+decode
     uplink_executor: str = "thread"      # "thread" | "process"
     uplink_batch: bool = False           # batch-API intake: <=W pool tasks
+    # --- server ingest (repro.fl.ingest) ---
+    # "gather" decodes every payload into a per-client pytree and averages
+    # the list (O(K) memory); "streaming" folds each decoded payload into
+    # running accumulators as it arrives (O(1) memory, same bits)
+    ingest: str = "gather"               # "gather" | "streaming"
+    ingest_opts: IngestConfig = dataclasses.field(
+        default_factory=IngestConfig)    # chunk/queue/workers/decode engine
     executor: str = "vmap"               # cohort backend (fl.executors)
     mesh_shape: tuple[int, ...] | None = None  # sharded: 1-D cohort mesh
     # --- population axes (repro.fl.population) ---
@@ -277,6 +292,26 @@ class EngineConfig:
                              f"got {self.uplink_executor!r}")
         if self.uplink_workers < 0:
             raise ValueError("uplink_workers must be >= 0")
+        if self.ingest not in ("gather", "streaming"):
+            raise ValueError(f"unknown ingest mode: {self.ingest!r} "
+                             "(known: gather, streaming)")
+        if self.ingest == "streaming":
+            if not self.measure_bytes:
+                raise ValueError(
+                    "streaming ingest decodes real payloads; set "
+                    "measure_bytes=True or use ingest='gather'")
+            if self.uplink_workers > 1:
+                raise ValueError(
+                    "uplink_workers pools the gather encode+decode "
+                    "round-trip; with ingest='streaming' decode "
+                    "parallelism lives in IngestConfig.workers — drop "
+                    "uplink_workers or use ingest='gather'")
+            self.ingest_opts.validate()
+        elif self.ingest_opts != IngestConfig():
+            raise ValueError(
+                "ingest_opts configures the streaming ingest stage; it has "
+                f"no meaning for ingest={self.ingest!r} — drop it or set "
+                "ingest='streaming'")
         if self.telemetry not in obs.TELEMETRY_MODES:
             known = ", ".join(obs.TELEMETRY_MODES)
             raise ValueError(f"unknown telemetry mode: {self.telemetry!r} "
@@ -384,6 +419,12 @@ class FederatedEngine:
         self.channel = (ChannelModel(engine_cfg.channel, self.num_clients)
                         if engine_cfg.channel is not None else None)
         self._raw_model_bytes = raw_bytes_per_client(server.params)
+        self.streaming_ingest = engine_cfg.ingest == "streaming"
+        if self.streaming_ingest:
+            # resolve the decode engine ONCE: an unsupported codec/engine
+            # pair fails at engine construction, not mid-round
+            self._ingest_codec = self.uplink.codec.with_decode_engine(
+                engine_cfg.ingest_opts.decode_engine)
 
         self.scheduler = SCHEDULERS[engine_cfg.mode]()
         self.scheduler.bind(self, key)
@@ -396,6 +437,12 @@ class FederatedEngine:
                 and self.downlink.last_payload_bytes):
             return self.downlink.last_payload_bytes
         return self._raw_model_bytes
+
+    def make_ingest(self) -> StreamingIngest:
+        """A fresh single-use streaming ingest bound to the wire spec
+        (one per aggregation; schedulers call this at fold time)."""
+        return StreamingIngest(self._ingest_codec, self.uplink.spec,
+                               self.engine_cfg.ingest_opts)
 
     # -- the one loop ------------------------------------------------------
 
@@ -446,7 +493,13 @@ class FederatedEngine:
                                        for c in intake.contributions)
                         down_bytes = 0
                         if survivors:
-                            agg = self.aggregate(survivors, intake.weights)
+                            # a streaming scheduler ships the aggregate it
+                            # already folded (repro.fl.ingest); gather runs
+                            # the Aggregate stage over the decoded trees
+                            agg = (intake.preagg
+                                   if intake.preagg is not None
+                                   else self.aggregate(survivors,
+                                                       intake.weights))
                             self.server, down_bytes = self.server_step(
                                 self.server, agg, self.downlink,
                                 intake.receivers, self.transmit)

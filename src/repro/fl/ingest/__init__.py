@@ -1,0 +1,13 @@
+"""Streaming aggregation ingest: decode payloads straight into running
+weighted accumulators (O(1) server memory in cohort size).
+
+See README.md in this directory for the queue/backpressure model, the
+fold-order determinism contract, and the speculative-decode engine knob;
+``repro.fl.rounds`` wires this stage behind ``EngineConfig.ingest =
+"streaming"`` for both schedulers.
+"""
+from repro.fl.ingest.stream import (IngestConfig, IngestResult, IngestStats,
+                                    RejectedPayload, StreamingIngest)
+
+__all__ = ["IngestConfig", "IngestResult", "IngestStats", "RejectedPayload",
+           "StreamingIngest"]

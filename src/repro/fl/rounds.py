@@ -115,6 +115,13 @@ class Contribution:
     the DECODED wire reconstruction when the engine transmits (schema v2
     additionally sources ``bn_state`` from the payload's BN section), or the
     device-side reconstruction on the no-wire fast path.
+
+    Under ``EngineConfig.ingest="streaming"`` the contribution is
+    encode-only: ``payload`` holds the wire bytes, no decoded host tree
+    exists (the scheduler folds survivors through ``repro.fl.ingest``),
+    and ``delta_params``/``bn_state`` are lazy DEVICE row views — kept for
+    Eq.-5 residual re-injection on drops/rejects and the v1 out-of-band BN
+    mean, never fetched to host.
     """
     client: int
     delta_params: Any
@@ -124,6 +131,7 @@ class Contribution:
     staleness: int = 0
     arrival_time: float = 0.0
     metrics: dict[str, float] | None = None
+    payload: bytes | None = None
 
 
 @dataclasses.dataclass
@@ -145,12 +153,20 @@ class RoundIntake:
     clients without refunding their bytes).  ``weights`` is None for the
     sync plain mean, or the normalised FedBuff staleness weights.
     ``receivers`` is how many clients receive the following broadcast.
+
+    ``preagg`` is the streaming-ingest hand-off: when a scheduler already
+    folded the survivors through ``repro.fl.ingest`` (decode-and-
+    accumulate, O(1) memory), it ships the finished
+    :class:`AggregatedRound` here and the orchestrator skips the
+    ``Aggregate`` stage (which would need the per-client decoded trees
+    the streaming path never materialises).
     """
     contributions: list[Contribution]
     survivors: list[int]
     weights: np.ndarray | None
     sim_time: float
     receivers: int
+    preagg: "AggregatedRound | None" = None
 
 
 # ---------------------------------------------------------------- cohort plan
@@ -437,6 +453,9 @@ class Uplink:
         self.workers = engine_cfg.uplink_workers
         self.executor_kind = engine_cfg.uplink_executor
         self.batch = engine_cfg.uplink_batch
+        # streaming ingest: intake is encode-only (payload bytes on the
+        # Contribution), the decode+fold happens in repro.fl.ingest
+        self.streaming = engine_cfg.ingest == "streaming"
         if (self.workers > 1 and self.executor_kind == "process"
                 and not self.codec.fork_safe):
             raise ValueError(
@@ -613,6 +632,8 @@ class Uplink:
                 bn_state=row(out.bn_state, i),
                 metrics=self._metric_row(metrics, i))
                 for i, c in enumerate(clients)]
+        if self.streaming:
+            return self._intake_streaming(out, clients)
         host, metrics = self.fetch(out)
         upds = [comms.ClientUpdate(*(None if t is None else client_slice(t, i)
                                      for t in host))
@@ -627,6 +648,42 @@ class Uplink:
             payload_bytes=nbytes,
             metrics=self._metric_row(metrics, i))
             for i, (c, (nbytes, dec)) in enumerate(zip(clients, results))]
+
+    def _intake_streaming(self, out, clients: list[int]) -> list[Contribution]:
+        """Encode-only intake for ``EngineConfig.ingest="streaming"``.
+
+        Contributions carry the PAYLOAD, not a decoded tree — the
+        scheduler folds survivors through ``repro.fl.ingest`` after
+        drop/churn resolution, so per-client decoded pytrees never
+        co-exist.  ``delta_params`` (and ``bn_state`` under v1) are lazy
+        device row views into the stacked RoundOutput: the residual
+        re-injection for drops and quarantined payloads (Eq. 5) uses the
+        client-side reconstruction — bit-identical to the decoded tree
+        for level-lossless codecs — and the v1 BN mean stays on device
+        exactly like the gather path."""
+        host, metrics = self.fetch(out)
+        upds = [comms.ClientUpdate(*(None if t is None else client_slice(t, i)
+                                     for t in host))
+                for i in range(len(clients))]
+        with obs_trace.span("uplink.encode_batch", n=len(upds)):
+            payloads = self.codec.encode_batch(upds, self.spec,
+                                               clients=clients)
+        for p in payloads:
+            self._account_payload(p)
+
+        def row(tree, i):
+            return jax.tree.map(lambda x: x[i], tree)
+
+        return [Contribution(
+            client=c,
+            delta_params=row(out.recon_delta_params, i),
+            delta_scales=None,
+            bn_state=(None if self.spec.version == 2
+                      else row(out.bn_state, i)),
+            payload_bytes=len(p),
+            payload=p,
+            metrics=self._metric_row(metrics, i))
+            for i, (c, p) in enumerate(zip(clients, payloads))]
 
 
 # ---------------------------------------------------------------- aggregate
@@ -907,8 +964,51 @@ class SyncScheduler(RoundScheduler):
                         clients[i], contribs[i].delta_params)
         for c in contribs:
             c.arrival_time = self.sim_clock
+        preagg = None
+        if eng.streaming_ingest:
+            preagg, survivors = self._fold_streaming(contribs, survivors,
+                                                     clients)
         return RoundIntake(contribs, survivors, weights=None,
-                           sim_time=self.sim_clock, receivers=cohort)
+                           sim_time=self.sim_clock, receivers=cohort,
+                           preagg=preagg)
+
+    def _fold_streaming(self, contribs: list[Contribution],
+                        survivors: list[int], clients: list[int]):
+        """Decode-and-accumulate the surviving payloads (O(1) memory).
+
+        Each survivor's payload folds into the running accumulators in
+        cohort order — for the equal-weight sync mean this reproduces the
+        gather path's stacked mean (float64 single-pass fold, see
+        ``TreeAccumulator``).  Corrupt payloads are quarantined: excluded
+        from the survivor set (bytes stay charged, like a drop) with
+        their mass re-injected into the client residual under error
+        feedback — Eq. 5 via the device-side reconstruction row, since
+        the payload never decodes."""
+        eng = self.eng
+        ing = eng.make_ingest()
+        for i in survivors:
+            ing.submit(contribs[i].client, contribs[i].payload)
+        res = ing.finish()
+        if res.rejected:
+            rej = {survivors[r.seq] for r in res.rejected}
+            survivors = [i for i in survivors if i not in rej]
+            if eng.protocol_cfg.error_feedback:
+                for i in sorted(rej):
+                    eng.local_train.reinject_residual(
+                        clients[i], contribs[i].delta_params)
+        if not survivors:
+            return None, survivors
+        if eng.uplink.spec.version == 2:
+            mbn = res.bn
+        else:
+            # v1: BN rides out-of-band as device rows — same stacked mean
+            # as the gather Aggregate, never fetched to host
+            mbn = tree_mean0(stack_trees(
+                [contribs[i].bn_state for i in survivors]))
+        return AggregatedRound(
+            delta_params=res.delta_params, delta_scales=res.delta_scales,
+            bn_state=mbn, survivors=tuple(clients[i] for i in survivors),
+            weights=None), survivors
 
     def log_fields(self, rec, intake: RoundIntake) -> dict[str, Any]:
         fields: dict[str, Any] = {
@@ -1211,12 +1311,58 @@ class BufferedAsyncScheduler(RoundScheduler):
             # streaming regime additionally re-tries short draws there)
             self.pending_dispatch += len(window)
             if len(buffer) >= self.acfg.buffer_size:
+                if self.eng.streaming_ingest:
+                    return self._flush_streaming(buffer)
                 w = normalized_staleness_weights(
                     [b.staleness for b in buffer],
                     self.acfg.staleness_exponent)
                 return RoundIntake(buffer, list(range(len(buffer))),
                                    weights=w, sim_time=self.now,
                                    receivers=self.concurrency)
+
+    def _flush_streaming(self, buffer: list[Contribution]) -> RoundIntake:
+        """Decode-at-flush: fold the buffered payloads in buffer order
+        with the FedBuff staleness weights — the same weights, trees and
+        fold order as the gather path's ``weighted_mean_trees``, so the
+        aggregate is bit-identical when every payload decodes.
+
+        A corrupt payload drops its entry (async has no residual to
+        re-inject into — the bytes stay charged), the weights renormalise
+        over the remainder and the fold re-runs; rejects are corruption-
+        rare, so the re-decode costs less than holding decoded trees
+        around to re-weight."""
+        eng = self.eng
+        keep = list(range(len(buffer)))
+        while keep:
+            w = normalized_staleness_weights(
+                [buffer[i].staleness for i in keep],
+                self.acfg.staleness_exponent)
+            ing = eng.make_ingest()
+            for j, i in enumerate(keep):
+                ing.submit(buffer[i].client, buffer[i].payload,
+                           weight=w[j])
+            res = ing.finish()
+            if not res.rejected:
+                break
+            rej = {keep[r.seq] for r in res.rejected}
+            keep = [i for i in keep if i not in rej]
+        if not keep:
+            return RoundIntake(buffer, [], weights=None,
+                               sim_time=self.now,
+                               receivers=self.concurrency)
+        if eng.uplink.spec.version == 2:
+            mbn = res.bn
+        else:
+            # v1 BN: device rows through the SAME weighted_mean_trees
+            # call the gather aggregate uses (device path, bit-identical)
+            mbn = weighted_mean_trees(
+                [buffer[i].bn_state for i in keep], w)
+        preagg = AggregatedRound(
+            delta_params=res.delta_params, delta_scales=res.delta_scales,
+            bn_state=mbn, survivors=tuple(buffer[i].client for i in keep),
+            weights=w)
+        return RoundIntake(buffer, keep, weights=w, sim_time=self.now,
+                           receivers=self.concurrency, preagg=preagg)
 
     def log_fields(self, rec, intake: RoundIntake) -> dict[str, Any]:
         fields: dict[str, Any] = {

@@ -28,6 +28,7 @@ from repro.core.protocol import ProtocolConfig, baseline_configs
 from repro.data import federated, synthetic
 from repro.fl.async_buffer import AsyncConfig
 from repro.fl.engine import EngineConfig, RunResult, run_simulation
+from repro.fl.ingest import IngestConfig
 from repro.fl.population import (DIURNAL_DEFAULT, StoreConfig, TrafficConfig)
 from repro.fl.sampling import SamplingConfig
 from repro.fl.server_opt import ServerOptConfig
@@ -76,6 +77,9 @@ class Scenario:
     uplink_workers: int = 0         # >1: parallel per-client encode+decode
     uplink_executor: str = "thread"  # "thread" | "process"
     uplink_batch: bool = False      # codec batch API: <=W pool tasks/cohort
+    # --- server ingest (repro.fl.ingest) ---
+    ingest: str = "gather"          # "gather" | "streaming"
+    ingest_engine: str = "vectorized"  # streaming decode engine
     # --- telemetry (repro.obs) ---
     telemetry: str = "off"          # "off" | "metrics" | "trace"
     metrics_out: str | None = None  # per-round metrics JSONL stream
@@ -126,6 +130,8 @@ def build_engine(s: Scenario) -> EngineConfig:
         uplink_workers=s.uplink_workers,
         uplink_executor=s.uplink_executor,
         uplink_batch=s.uplink_batch,
+        ingest=s.ingest,
+        ingest_opts=IngestConfig(decode_engine=s.ingest_engine),
         telemetry=s.telemetry,
         metrics_out=s.metrics_out,
         # partial updates never have non-classifier deltas, so the wire
@@ -282,6 +288,23 @@ for _s in [
              "batched uplink over the forkserver pool: workers return flat "
              "level arrays instead of pickled pytrees",
              uplink_workers=2, uplink_executor="process", uplink_batch=True),
+    # ---- streaming aggregation ingest (repro.fl.ingest) ----
+    Scenario("stream_ingest_k8",
+             "decode-and-accumulate ingest: every payload folds into the "
+             "running weighted accumulators on arrival — O(1) server "
+             "memory in cohort size, bit-identical aggregation",
+             ingest="streaming"),
+    Scenario("stream_ingest_spec_k8",
+             "streaming ingest decoding through the speculative "
+             "multi-symbol CABAC engine (verify-and-commit against the "
+             "range coder; byte-path-identical to the serial oracle)",
+             ingest="streaming", ingest_engine="speculative"),
+    Scenario("stream_ingest_async_b4",
+             "buffered-async decode-at-flush: the FedBuff buffer holds "
+             "payload bytes, staleness-weighted folding happens at "
+             "aggregation time",
+             mode="async", buffer_size=4, concurrency=4,
+             ingest="streaming"),
     # ---- cohort execution backends (repro.fl.executors) ----
     Scenario("exec_serial_k4",
              "per-client jit execution of the sync cohort (compiles once "

@@ -3,6 +3,12 @@
 The ``repro.dist`` mesh runtime is not part of this checkout; everything
 that needs it imports lazily and fails with a clear message instead of a
 bare ImportError.  ``repro.launch.serve`` and the FL engine run without it.
+
+``repro.launch.serve`` now fronts the FL ingest server by default: without
+``--arch`` it delegates to ``repro.launch.ingest_serve`` (the streaming
+decode-and-accumulate pipeline of ``repro.fl.ingest``, reporting
+payloads/s and MB/s); with ``--arch`` it keeps the transformer
+prefill+decode path.
 """
 from __future__ import annotations
 

@@ -1,0 +1,162 @@
+"""FL ingest server: stream encoded client payloads through the
+decode-and-accumulate pipeline and report sustained payloads/s and MB/s.
+
+This is the serving face of ``repro.fl.ingest``: the same
+:class:`~repro.fl.ingest.StreamingIngest` stage the federated engine runs
+behind ``EngineConfig.ingest = "streaming"``, driven standalone over a
+synthetic cohort of paper-regime ternary payloads so the server-side
+decode+fold rate is measurable in isolation (no training in the loop).
+
+    PYTHONPATH=src python -m repro.launch.ingest_serve --k 32 --rounds 3
+        [--engine vectorized|speculative|serial] [--workers 0] [--chunk 8]
+        [--codec nnc-cabac] [--density 0.04] [--trace-out FILE]
+
+``--engine speculative`` turns on the multi-symbol CABAC decoder (and the
+pointer-jump exp-Golomb walk for ``--codec golomb``).  ``--trace-out``
+writes the ``ingest.decode`` / ``ingest.fold`` spans as Chrome
+trace-event JSON (opens at https://ui.perfetto.dev).
+
+``repro.launch.serve`` without ``--arch`` lands here, and
+``benchmarks/ingest_rate.py`` reuses :func:`synthetic_cohort` /
+:func:`serve_cohort` so the CI guard times exactly what this server runs.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import comms, obs
+from repro.core import quant as quant_lib
+from repro.fl.ingest import IngestConfig, StreamingIngest
+from repro.obs import trace as obs_trace
+
+# per-client template: two conv-ish carriers + the bias/scales sections a
+# real wire payload frames.  ~160k elements -> ~0.6 MB fp32 raw per client.
+_SHAPES = {"conv": {"w": (32, 16, 3, 3), "b": (32,)},
+           "fc": {"w": (128, 1024)}}
+_SCALE_SHAPES = {"s0": (32,), "s1": (128,)}
+
+
+def _tree_of(fn, node):
+    if isinstance(node, dict):
+        return {k: _tree_of(fn, v) for k, v in node.items()}
+    return fn(node)
+
+
+def synthetic_cohort(k: int, density: float = 0.04, seed: int = 0):
+    """K STC-regime client updates (+-1 levels at 1-``density`` sparsity)
+    plus the WireSpec that frames them -> ``(upds, spec, raw_bytes)``.
+
+    The regime matches the paper's uplink (sparse ternary differentials,
+    the workload the speculative CABAC decoder targets); each client draws
+    from its own stream so payload bytes differ across the cohort.
+    """
+    q = quant_lib.QuantConfig()
+    fine = _tree_of(lambda s: len(s) < 2, _SHAPES)
+    spec = comms.WireSpec(
+        params=_tree_of(lambda s: jax.ShapeDtypeStruct(s, np.float32),
+                        _SHAPES),
+        scales=_tree_of(lambda s: jax.ShapeDtypeStruct(s, np.float32),
+                        _SCALE_SHAPES),
+        fine_mask=fine, step_size=q.step_size,
+        fine_step_size=q.fine_step_size, ternary=True)
+    upds = []
+    for i in range(k):
+        rng = np.random.default_rng(seed * 1000 + i)
+        lv = _tree_of(
+            lambda s: (rng.integers(-1, 2, s)
+                       * (rng.random(s) < density)).astype(np.int32),
+            _SHAPES)
+        mag = np.float32(abs(rng.normal()) + 1e-3)
+        recon = jax.tree.map(
+            lambda l: (mag * np.sign(l)).astype(np.float32), lv)
+        s_lv = _tree_of(lambda s: rng.integers(-3, 4, s).astype(np.int32),
+                        _SCALE_SHAPES)
+        s_recon = jax.tree.map(
+            lambda l: l.astype(np.float32) * np.float32(q.fine_step_size),
+            s_lv)
+        upds.append(comms.ClientUpdate(lv, s_lv, recon, s_recon))
+    n_elems = sum(int(np.prod(s)) for s in
+                  jax.tree.leaves(_tree_of(lambda s: s, _SHAPES),
+                                  is_leaf=lambda x: isinstance(x, tuple)))
+    n_elems += sum(int(np.prod(s)) for s in
+                   jax.tree.leaves(_tree_of(lambda s: s, _SCALE_SHAPES),
+                                   is_leaf=lambda x: isinstance(x, tuple)))
+    return upds, spec, 4 * n_elems * k
+
+
+def serve_cohort(codec, payloads, spec, cfg: IngestConfig):
+    """One server pass: stream ``payloads`` through a fresh ingest.
+
+    Returns the :class:`~repro.fl.ingest.IngestResult` — its ``stats``
+    carry payloads/s and MB/s for the pass.
+    """
+    ing = StreamingIngest(codec, spec, cfg)
+    for i, p in enumerate(payloads):
+        ing.submit(i, p)
+    return ing.finish()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="FL ingest server demo (decode-and-accumulate rate)")
+    ap.add_argument("--k", type=int, default=32, help="cohort size")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="timed server passes over the cohort")
+    ap.add_argument("--codec", default="nnc-cabac")
+    ap.add_argument("--engine", default="vectorized",
+                    help="decode engine (vectorized|serial|speculative "
+                         "for nnc-cabac; vectorized|speculative for golomb)")
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="decode worker threads (0 = inline)")
+    ap.add_argument("--density", type=float, default=0.04,
+                    help="fraction of nonzero ternary levels per update")
+    ap.add_argument("--trace-out", default=None,
+                    help="write ingest spans as Chrome trace-event JSON")
+    args = ap.parse_args(argv)
+
+    codec = comms.get_codec(args.codec)
+    cfg = IngestConfig(chunk=args.chunk,
+                       queue_depth=max(32, 2 * args.chunk),
+                       workers=args.workers, decode_engine=args.engine)
+    cfg.validate()
+
+    upds, spec, raw = synthetic_cohort(args.k, density=args.density)
+    with obs_trace.span("serve.encode_cohort", k=args.k):
+        payloads = codec.encode_batch(upds, spec,
+                                      clients=list(range(args.k)))
+    wire = sum(len(p) for p in payloads)
+    print(f"# cohort: K={args.k} ternary density={args.density} "
+          f"raw={raw / 1e6:.1f} MB wire={wire / 1e6:.3f} MB "
+          f"({raw / wire:.0f}x)")
+    print(f"# ingest: codec={args.codec} engine={args.engine} "
+          f"chunk={args.chunk} workers={args.workers}")
+
+    tel = obs.make_telemetry("trace" if args.trace_out else "off")
+    best = None
+    with tel.activate():
+        for r in range(args.rounds):
+            res = serve_cohort(codec, payloads, spec, cfg)
+            assert res.accepted == args.k and not res.rejected
+            s = res.stats
+            print(f"round {r}: {s.payloads_per_s:8.1f} payloads/s  "
+                  f"{s.mb_per_s:6.2f} MB/s  "
+                  f"(decode {s.decode_s * 1e3:.0f} ms, "
+                  f"fold {s.fold_s * 1e3:.0f} ms, "
+                  f"resident<={s.max_resident})")
+            if best is None or s.payloads_per_s > best.payloads_per_s:
+                best = s
+    print(f"best: {best.payloads_per_s:.1f} payloads/s, "
+          f"{best.mb_per_s:.2f} MB/s wire "
+          f"({best.mb_per_s * raw / wire:.1f} MB/s raw-equivalent)")
+    if args.trace_out:
+        n = tel.export_chrome_trace(args.trace_out)
+        print(f"trace: {args.trace_out} ({n} events)")
+    return best
+
+
+if __name__ == "__main__":
+    main()

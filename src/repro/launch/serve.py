@@ -1,10 +1,23 @@
-"""Serving launcher: batched prefill + decode for any `--arch <id>`.
+"""Serving launcher.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --steps 8
-    [--trace-out FILE]   (span-trace the prefill/decode loop; Chrome
-                          trace-event JSON, opens at https://ui.perfetto.dev)
+Two front doors share this entry point:
+
+* **FL ingest server** (default, no ``--arch``): delegates every argument
+  to ``repro.launch.ingest_serve`` — the decode-and-accumulate uplink
+  pipeline (``repro.fl.ingest``) serving a cohort of encoded payloads and
+  reporting payloads/s and MB/s.
+
+      PYTHONPATH=src python -m repro.launch.serve --k 32 --engine speculative
+
+* **Transformer prefill+decode** (``--arch <id>``): batched prefill then
+  step-wise decode for any config id, as before.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --steps 8
+      [--trace-out FILE]   (span-trace the loop; Chrome trace-event JSON,
+                            opens at https://ui.perfetto.dev)
 """
 import argparse
+import sys
 
 import jax
 
@@ -12,7 +25,12 @@ from repro import obs
 from repro.obs import trace as obs_trace
 
 
-def main():
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if not any(a == "--arch" or a.startswith("--arch=") for a in argv):
+        from repro.launch import ingest_serve
+        return ingest_serve.main(argv)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=8)
@@ -21,7 +39,7 @@ def main():
     ap.add_argument("--trace-out", default=None,
                     help="write prefill/decode spans as Chrome trace-event "
                          "JSON")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     from repro.configs import get, make_inputs
     from repro.models import decode as decode_lib

@@ -177,6 +177,123 @@ def test_strict_decoder_consumes_stream_exactly():
         assert dec.pos == len(data)
 
 
+# ------------------------------------------- speculative decode differential
+
+
+def _decode_stream(dec, cs, ctx_ids):
+    """Drain a bin stream through decode_bits in same-context blocks."""
+    out, i, n = [], 0, len(ctx_ids)
+    while i < n:
+        j = i
+        while j < n and ctx_ids[j] == ctx_ids[i]:
+            j += 1
+        out.extend(dec.decode_bits(cs, int(ctx_ids[i]), j - i).tolist())
+        i = j
+    return out
+
+
+def test_speculative_decoder_bitwise_identical_to_per_bin():
+    """Decoder(speculative=True) commits the identical bits, cursor and
+    context states as the per-bin oracle — across the sparse band where
+    speculation runs long, the dense band where every guess misses, and
+    mixed streams that bounce the state across the engagement threshold."""
+    rng = np.random.default_rng(11)
+    densities = [0.0, 0.02, 0.1, 0.5, 0.9, 1.0]
+    for trial in range(72):
+        n = int(rng.integers(1, 700))
+        nctx = int(rng.integers(1, 4))
+        density = densities[trial % len(densities)]
+        bits = (rng.random(n) < density).astype(np.uint8)
+        ctx_ids = np.sort(rng.integers(0, nctx, n)).astype(np.uint8)
+        data, _ = _serial_encode_bins(ctx_ids, bits, nctx)
+        ref_dec, ref_cs = Decoder(data), ContextSet(nctx)
+        ref = [ref_dec.decode_bit(ref_cs, int(c)) for c in ctx_ids]
+        sp_dec = Decoder(data, strict=True, speculative=True)
+        sp_cs = ContextSet(nctx)
+        out = _decode_stream(sp_dec, sp_cs, ctx_ids)
+        assert out == ref == bits.tolist(), trial
+        assert sp_dec.pos == ref_dec.pos
+        np.testing.assert_array_equal(sp_cs.p, ref_cs.p)
+
+
+def test_forced_speculation_misses_fall_back_exactly():
+    """Adversarial LPS runs: streams that first train the context deep into
+    speculation range (long 0-runs) and then feed solid 1s force a miss on
+    every speculated bin — the rollback must replay the serial step."""
+    for zeros, ones in ((200, 50), (600, 1), (32, 32), (1, 400)):
+        bits = np.array([0] * zeros + [1] * ones, np.uint8)
+        ctx_ids = np.zeros(bits.size, np.uint8)
+        data, _ = _serial_encode_bins(ctx_ids, bits, 1)
+        ref_dec, ref_cs = Decoder(data), ContextSet(1)
+        ref = [ref_dec.decode_bit(ref_cs, 0) for _ in range(bits.size)]
+        sp_dec = Decoder(data, strict=True, speculative=True)
+        sp_cs = ContextSet(1)
+        out = sp_dec.decode_bits(sp_cs, 0, bits.size).tolist()
+        assert out == ref == bits.tolist()
+        assert sp_dec.pos == ref_dec.pos
+        np.testing.assert_array_equal(sp_cs.p, ref_cs.p)
+
+
+def test_speculative_nnc_engine_differential():
+    """Full-message differential: the speculative engine (multi-symbol
+    CABAC + pointer-jump exp-Golomb) is value-identical to the serial
+    oracle over the random tree sweep."""
+    for seed in range(40):
+        tree = _rand_tree(seed)
+        msg = nnc.encode_tree(tree, engine="serial")
+        shapes = nnc.shapes_of(tree)
+        _assert_tree_equal(nnc.decode_tree(msg, shapes, engine="speculative"),
+                           tree)
+
+
+def test_speculative_truncation_raises_typed_error():
+    """Speculation must not let a truncated stream decode silently: the
+    same typed rejection as the serial path, at every cut."""
+    _, msg, shapes = _sample_message()
+    for cut in range(len(msg)):
+        with pytest.raises(CorruptPayloadError):
+            nnc.decode_tree(msg[:cut], shapes, engine="speculative")
+
+
+def test_golomb_jump_decode_matches_reference(monkeypatch):
+    """Pointer-jump exp-Golomb walk vs. the serial reference: values,
+    cursor and trailing bits, with the engagement floor lowered so every
+    section (including tiny ones) exercises the jump path."""
+    monkeypatch.setattr(golomb, "_JUMP_MIN", 0)
+    rng = np.random.default_rng(13)
+    for trial in range(48):
+        n = int(rng.integers(0, 700))
+        k = int(rng.integers(0, 9))
+        vals = rng.integers(0, 2**28, n).astype(np.int64)
+        if trial % 3 == 0:
+            vals = (vals % 5).astype(np.int64)   # short codes: many/jump
+        w = BitWriter()
+        golomb.encode_egk(w, vals, k)
+        w.put_uint(5, 3)
+        data = w.to_bytes()
+        fast, ref = BitReader(data), BitReader(data)
+        np.testing.assert_array_equal(golomb.decode_egk_jump(fast, n, k),
+                                      vals)
+        np.testing.assert_array_equal(golomb.decode_egk_ref(ref, n, k), vals)
+        assert fast.tell() == ref.tell()
+        assert fast.get_uint(3) == 5
+
+
+def test_golomb_jump_engages_above_natural_floor():
+    """Without any monkeypatching, a section above _JUMP_MIN decodes
+    through the jump walk (and grows the jump window) identically."""
+    rng = np.random.default_rng(14)
+    n = golomb._JUMP_MIN * 4
+    vals = (rng.integers(0, 7, n)).astype(np.int64)
+    w = BitWriter()
+    golomb.encode_egk(w, vals, 0)
+    data = w.to_bytes()
+    fast, ref = BitReader(data), BitReader(data)
+    np.testing.assert_array_equal(golomb.decode_egk_jump(fast, n, 0), vals)
+    np.testing.assert_array_equal(golomb.decode_egk_ref(ref, n, 0), vals)
+    assert fast.tell() == ref.tell()
+
+
 # ------------------------------------------------------- hypothesis suite
 
 try:

@@ -261,6 +261,47 @@ def test_async_windows_trace_and_batch_histogram(tiny2):
     assert hist is not None and hist["count"] >= 1
 
 
+def test_streaming_ingest_telemetry_counters_and_spans(tiny2):
+    """Streaming ingest under telemetry: ingest.decode/ingest.fold spans
+    appear, the payload counter equals the cohort, the queue-depth gauge
+    is present — and the fsfl seed pin still holds (telemetry observes the
+    ingest without perturbing it)."""
+    model, splits = tiny2
+    pin = _PINS["fsfl"]
+    cfg = ProtocolConfig(name="fsfl", batch_size=32, local_lr=2e-3,
+                         **pin["cfg"])
+    res = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                         engine=EngineConfig(ingest="streaming",
+                                             telemetry="trace"))
+    assert [r.up_bytes for r in res.records] == pin["up_bytes"]
+    names = {s.name for s in res.telemetry.recorder.snapshot()}
+    assert {"ingest.decode", "ingest.fold",
+            "uplink.encode_batch"} <= names
+    snap = res.records[0].telemetry
+    assert snap["counters"]["ingest.payloads"] == 2     # both clients
+    assert snap["counters"].get("ingest.rejected", 0) == 0
+    assert "ingest.queue_depth" in snap["gauges"]
+    assert "ingest.payloads_per_s" in snap["gauges"]
+
+
+def test_streaming_ingest_telemetry_off_is_deterministic(tiny2):
+    """The telemetry-off determinism pin extends to ingest: a streaming
+    run with telemetry off equals the traced run record-for-record."""
+    model, splits = tiny2
+    pin = _PINS["fsfl"]
+    cfg = ProtocolConfig(name="fsfl", batch_size=32, local_lr=2e-3,
+                         **pin["cfg"])
+    on = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                        engine=EngineConfig(ingest="streaming",
+                                            telemetry="metrics"))
+    off = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                         engine=EngineConfig(ingest="streaming"))
+    assert [r.up_bytes for r in off.records] == pin["up_bytes"]
+    for a, b in zip(on.records, off.records):
+        assert (a.up_bytes, a.test_acc, a.train_loss) == \
+            (b.up_bytes, b.test_acc, b.train_loss)
+
+
 # ------------------------------------------------------------- codec anatomy
 
 def _mini_update(ternary=False, version=1):

@@ -379,6 +379,153 @@ def test_process_executor_refuses_non_fork_safe_codec(tiny2):
                                            uplink_executor="process"))
 
 
+# ------------------------------------------------------------- streaming ingest
+
+@pytest.mark.parametrize("name", ["fsfl", "stc", "fedavg_nnc"])
+def test_streaming_ingest_reproduces_pins(tiny2, name):
+    """The decode-and-accumulate intake holds the three frozen seed pins
+    bit-for-bit: streaming is a memory shape, not a numerics change."""
+    model, splits = tiny2
+    pin = _PINS[name]
+    cfg = ProtocolConfig(name=name, batch_size=32, local_lr=2e-3,
+                         **pin["cfg"])
+    res = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                         engine=EngineConfig(ingest="streaming"))
+    assert [r.up_bytes for r in res.records] == pin["up_bytes"]
+    if pin["acc"] is not None:
+        assert [round(r.test_acc, 6) for r in res.records] == pin["acc"]
+
+
+def test_streaming_ingest_never_calls_gather_aggregate(tiny8):
+    """Structural O(1) proof: under streaming the scheduler hands the
+    engine a pre-folded aggregate — the Aggregate stage (which stacks K
+    pytrees) is never invoked, and contributions carry encoded payloads
+    instead of decoded host trees."""
+    model, splits = tiny8
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    eng = FederatedEngine(model, cfg, splits, jax.random.PRNGKey(7),
+                          engine_cfg=EngineConfig(ingest="streaming"))
+    calls, seen = [], []
+    orig_make = eng.make_ingest
+
+    def make():
+        ing = orig_make()
+        orig_submit = ing.submit
+
+        def submit(client, payload, weight=1.0):
+            seen.append(payload)
+            orig_submit(client, payload, weight)
+
+        ing.submit = submit
+        return ing
+
+    eng.make_ingest = make
+    eng.aggregate = _spy(eng.aggregate, calls, "aggregate")
+    res = eng.run(1)
+    assert calls == []                     # no K-wide gather mean ever ran
+    assert len(seen) == 8 and all(isinstance(p, bytes) for p in seen)
+    assert res.records[0].up_bytes == sum(len(p) for p in seen)
+
+
+def test_streaming_contributions_carry_payloads_and_device_rows(tiny2):
+    """Streaming contributions ship the encoded payload plus a device-row
+    view for EF re-injection — no decoded host trees at the uplink."""
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    eng = FederatedEngine(model, cfg, splits, jax.random.PRNGKey(7),
+                          engine_cfg=EngineConfig(ingest="streaming"))
+    seen = []
+    orig = eng.scheduler._fold_streaming
+
+    def capture(contribs, survivors, clients):
+        seen.extend(contribs)
+        return orig(contribs, survivors, clients)
+
+    eng.scheduler._fold_streaming = capture
+    eng.run(1)
+    for c in seen:
+        assert isinstance(c.payload, bytes) and c.payload_bytes == len(
+            c.payload)
+        assert c.delta_scales is None
+        for leaf in jax.tree.leaves(c.delta_params):
+            assert isinstance(leaf, jax.Array)
+
+
+def test_streaming_quarantine_keeps_rest_of_cohort(tiny8):
+    """One corrupted payload in a K=8 round: the round completes with the
+    7 surviving clients aggregated and the reject recorded."""
+    model, splits = tiny8
+    cfg = ProtocolConfig(name="fsfl", method="sparse", error_feedback=True,
+                         fixed_sparsity=0.9, batch_size=32, local_lr=2e-3)
+    eng = FederatedEngine(model, cfg, splits, jax.random.PRNGKey(7),
+                          engine_cfg=EngineConfig(ingest="streaming"))
+    orig_make = eng.make_ingest
+    rejected = []
+
+    def make():
+        ing = orig_make()
+        orig_submit = ing.submit
+        counter = {"n": 0}
+
+        def submit(client, payload, weight=1.0):
+            if counter["n"] == 2:          # corrupt the third submission
+                payload = payload[:-3]
+            counter["n"] += 1
+            orig_submit(client, payload, weight)
+
+        ing.submit = submit
+        orig_finish = ing.finish
+
+        def finish():
+            res = orig_finish()
+            rejected.extend(res.rejected)
+            return res
+
+        ing.finish = finish
+        return ing
+
+    eng.make_ingest = make
+    res = eng.run(1)
+    assert len(rejected) == 1 and rejected[0].seq == 2
+    assert len(res.records[0].participants) == 7
+    assert rejected[0].client not in res.records[0].participants
+
+
+def test_async_streaming_equals_gather_bitwise(tiny8):
+    """BufferedAsyncScheduler: the decode-at-flush streaming fold and the
+    gather path produce identical records (bytes, accuracy, sim time)."""
+    model, splits = tiny8
+    base = Scenario("async_gather_t", mode="async", buffer_size=3,
+                    concurrency=3, num_clients=8)
+    stream = dataclasses.replace(base, name="async_stream_t",
+                                 ingest="streaming")
+    spec = dataclasses.replace(stream, name="async_stream_spec_t",
+                               ingest_engine="speculative")
+    from repro.fl import run_scenario
+    runs = [run_scenario(s, rounds=3, model=model, splits=splits)
+            for s in (base, stream, spec)]
+    for other in runs[1:]:
+        for a, b in zip(runs[0].records, other.records):
+            assert a.up_bytes == b.up_bytes
+            assert a.test_acc == b.test_acc
+            assert a.participants == b.participants
+
+
+def test_streaming_engine_rejects_bad_pairs_at_construction(tiny2):
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    from repro.fl.ingest import IngestConfig
+    with pytest.raises(ValueError, match="decode engine"):
+        FederatedEngine(
+            model, cfg, splits, jax.random.PRNGKey(7),
+            engine_cfg=EngineConfig(
+                ingest="streaming", codec="raw-fp32",
+                ingest_opts=IngestConfig(decode_engine="speculative")))
+
+
 # ------------------------------------------------------------- satellites
 
 def test_final_acc_is_nan_on_empty_records():

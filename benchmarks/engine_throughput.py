@@ -136,6 +136,84 @@ def bench_uplink(num_clients: int, smoke: bool, workers: int,
     return rows
 
 
+# ------------------------------------------------------- device encode bench
+
+def _stacked_round_output(stacks):
+    """The synthetic cohort as a device-resident stacked RoundOutput view
+    (what Codec.encode_cohort reads)."""
+    import jax
+    import jax.numpy as jnp
+    from types import SimpleNamespace
+
+    lv, s_lv, recon, s_recon, bn = stacks
+    dev = lambda t: jax.tree.map(jnp.asarray, t)
+    return SimpleNamespace(
+        levels_params=dev(lv), levels_scales=dev(s_lv),
+        recon_delta_params=dev(recon), recon_delta_scales=dev(s_recon),
+        bn_state=dev(bn))
+
+
+def _host_encode(codec, spec, out, k):
+    """The host path the device encode replaces: bulk device_get of the
+    trees the codec reads, per-client slicing, encode_batch."""
+    import jax
+
+    need_lv = "levels" in codec.needs
+    need_rc = "recon" in codec.needs or spec.ternary
+    trees = jax.device_get((
+        out.levels_params if need_lv else None,
+        out.levels_scales if need_lv else None,
+        out.recon_delta_params if need_rc else None,
+        out.recon_delta_scales if need_rc else None))
+
+    def row(tree, i):
+        return (None if tree is None
+                else jax.tree.map(lambda x: x[i], tree))
+
+    upds = [ClientUpdate(*(row(t, i) for t in trees))
+            for i in range(k)]
+    return codec.encode_batch(upds, spec, clients=list(range(k)))
+
+
+def bench_device_encode(num_clients: int, smoke: bool,
+                        codecs=("int8-blockscale", "golomb", "nnc-cabac"),
+                        repeats: int = 3):
+    """Host encode_batch vs device encode_cohort on the same cohort.
+
+    Payloads are asserted byte-identical in-bench before timing — the
+    speedup column can never be bought with a bytes change."""
+    from repro import comms
+
+    server, stacks = _synthetic_cohort(num_clients, smoke)
+    out = _stacked_round_output(stacks)
+    rows = []
+    for name in codecs:
+        codec = comms.get_codec(name)
+        spec = _make_uplink(server, name, 0, "thread", 1).spec
+        host_payloads = _host_encode(codec, spec, out, num_clients)
+        dev_payloads = codec.encode_cohort(out, spec,
+                                           clients=list(range(num_clients)))
+        assert dev_payloads is not None, f"{name}: no device fast path"
+        assert [bytes(p) for p in dev_payloads] == \
+            [bytes(p) for p in host_payloads], f"{name}: bytes diverged"
+        t_host, _ = time_best(
+            lambda: _host_encode(codec, spec, out, num_clients),
+            repeats=repeats, label=f"host.{name}")
+        t_dev, _ = time_best(
+            lambda: codec.encode_cohort(out, spec,
+                                        clients=list(range(num_clients))),
+            repeats=repeats, label=f"device.{name}")
+        rows.append({"codec": name, "clients": num_clients,
+                     "payload_bytes": sum(len(p) for p in host_payloads),
+                     "host_s": round(t_host, 4),
+                     "device_s": round(t_dev, 4),
+                     "device_speedup": round(t_host / t_dev, 2)})
+        print(f"# device-encode {name}: host={t_host:.4f}s "
+              f"device={t_dev:.4f}s ({rows[-1]['device_speedup']}x)",
+              file=sys.stderr, flush=True)
+    return rows
+
+
 # ------------------------------------------------------------- round bench
 
 def bench_rounds(rounds: int, scenarios=("sync_full_fedavg_fsfl",
@@ -166,6 +244,13 @@ def main():
     ap.add_argument("--workers", type=int, default=None,
                     help="pool size (default: min(4, cpu count))")
     ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--device-encode", choices=["off", "both"],
+                    default="off",
+                    help="'both': add host-vs-device encode_cohort rows")
+    ap.add_argument("--guard", action="store_true",
+                    help="fail unless the int8-blockscale device encode is "
+                         ">=10x over the host path (needs --device-encode "
+                         "both)")
     args = ap.parse_args()
 
     workers = args.workers or min(4, os.cpu_count() or 1)
@@ -188,10 +273,24 @@ def main():
                                  "speedup": best_proc["process_speedup"]},
         "rounds": bench_rounds(rounds),
     }
+    if args.device_encode != "off":
+        report["device_encode"] = bench_device_encode(args.clients,
+                                                      smoke=args.smoke)
     write_report(args.out, report)
     if not args.smoke and report["best_thread_speedup"]["speedup"] < 1.5:
         print("WARNING: thread-pooled uplink under 1.5x serial",
               file=sys.stderr)
+    if args.guard:
+        if args.device_encode == "off":
+            sys.exit("--guard needs --device-encode both")
+        int8 = next(r for r in report["device_encode"]
+                    if r["codec"] == "int8-blockscale")
+        if int8["device_speedup"] < 10.0:
+            sys.exit(f"GUARD FAILED: int8-blockscale device encode "
+                     f"{int8['device_speedup']}x < 10x over host at "
+                     f"K={int8['clients']}")
+        print(f"# guard OK: int8-blockscale device encode "
+              f"{int8['device_speedup']}x (>=10x)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -25,7 +25,9 @@ if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
     --out /tmp/BENCH_cabac_smoke.json
 
   echo "== engine throughput smoke: parallel uplink + round wall-clock =="
-  python benchmarks/engine_throughput.py --smoke --out /tmp/BENCH_engine_smoke.json >/dev/null
+  echo "== + device-encode guard (int8 encode_cohort >=10x host at K=8) =="
+  python benchmarks/engine_throughput.py --smoke --device-encode both \
+    --guard --out /tmp/BENCH_engine_smoke.json >/dev/null
 
   echo "== cohort scaling smoke: executor backends + async window batching =="
   python benchmarks/cohort_scaling.py --smoke --out /tmp/BENCH_cohort_smoke.json >/dev/null

@@ -191,17 +191,25 @@ def _decode_tensor_ref(shape: tuple, enc_dec: Decoder, ctx: ContextSet,
 # ===========================================================================
 
 def _plan_tensor(levels: np.ndarray, bypass: BitWriter,
-                 bin_chunks: list[tuple[int, np.ndarray]]) -> None:
+                 bin_chunks: list[tuple[int, np.ndarray]],
+                 nz_rows: np.ndarray | None = None) -> None:
     """Pass-1 bin extraction for one tensor: the vectorized twin of
     :func:`encode_tensor`.  Appends ``(context, bits)`` chunks in coding
     order and writes the (already vectorised) bypass sections.  Identical
     bits to the reference path, but no full-tensor int64 copy and no kept
     copy when every row survives — only the nonzero values are widened.
+
+    ``nz_rows``, when given, is the precomputed row-skip flag vector
+    (``rows.any(axis=1)``) — the device uplink computes it on-accelerator
+    for the whole cohort in one dispatch and hands it in so pass 1 never
+    touches the dense tensor for the row scan.  Flags are exact booleans,
+    so the bins (and therefore the bytes) cannot differ.
     """
     rows = _as_rows(np.asarray(levels))
     structured = levels.ndim >= 2
     if structured:
-        nz_rows = rows.any(axis=1)
+        if nz_rows is None:
+            nz_rows = rows.any(axis=1)
         bin_chunks.append((CTX_ROW_SKIP, nz_rows))
         kept = (rows.reshape(-1) if nz_rows.all()
                 else rows[nz_rows].reshape(-1))
@@ -229,13 +237,16 @@ def _plan_tensor(levels: np.ndarray, bypass: BitWriter,
     golomb.encode_egk(bypass, rem, k_rem)
 
 
-def _encode_leaves(leaves: Sequence[np.ndarray]) -> bytes:
+def _encode_leaves(leaves: Sequence[np.ndarray],
+                   row_flags: Sequence[np.ndarray | None] | None = None
+                   ) -> bytes:
     """Two-pass encode of ordered level tensors into one NNC message."""
     with obs_trace.span("nnc.encode", leaves=len(leaves)):
         bypass = BitWriter()
         bin_chunks: list[tuple[int, np.ndarray]] = []
-        for leaf in leaves:
-            _plan_tensor(np.asarray(leaf), bypass, bin_chunks)
+        for j, leaf in enumerate(leaves):
+            flags = row_flags[j] if row_flags is not None else None
+            _plan_tensor(np.asarray(leaf), bypass, bin_chunks, nz_rows=flags)
         total = sum(c.size for _, c in bin_chunks)
         ctx_ids = np.empty(total, np.uint8)
         bits = np.empty(total, np.uint8)
@@ -475,6 +486,40 @@ def encode_tree_batch(trees: Sequence[Any],
             byp = bypass.to_bytes()
             out.append(len(cab).to_bytes(8, "big")
                        + len(byp).to_bytes(8, "big") + cab + byp)
+    return out
+
+
+def encode_leaves_batch(leaf_lists: Sequence[Sequence[np.ndarray]],
+                        engine: str = DEFAULT_ENGINE,
+                        row_flags: Sequence[Sequence[np.ndarray | None]]
+                        | None = None) -> list[bytes]:
+    """Encode K clients' PRE-ORDERED leaf lists (sorted-path wire order).
+
+    The pass-1 entry point for the device uplink (``repro.comms.device``):
+    the caller already holds the cohort's level tensors as slices of one
+    stacked fetch, so there is no pytree to flatten per client.  Each
+    ``leaf_lists[k]`` must be the exact sequence ``leaves_with_paths`` would
+    produce for client k's tree; ``row_flags[k]``, when given, aligns with
+    it (None entries for unstructured tensors) and carries device-computed
+    row-skip flags straight into :func:`_plan_tensor`.
+
+    Payload k is byte-identical to ``encode_tree(tree_k, engine)``.
+    """
+    if _check_engine(engine) != "serial":   # speculation is decode-side
+        return [_encode_leaves([np.asarray(l) for l in leaves],
+                               row_flags=row_flags[k] if row_flags else None)
+                for k, leaves in enumerate(leaf_lists)]
+    out = []
+    for leaves in leaf_lists:               # oracle path recomputes flags
+        enc = Encoder()
+        ctx = ContextSet(NUM_CTX)
+        bypass = BitWriter()
+        for leaf in leaves:
+            encode_tensor(np.asarray(leaf), enc, ctx, bypass)
+        cab = enc.finish()
+        byp = bypass.to_bytes()
+        out.append(len(cab).to_bytes(8, "big")
+                   + len(byp).to_bytes(8, "big") + cab + byp)
     return out
 
 

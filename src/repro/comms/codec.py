@@ -230,6 +230,15 @@ def check_batch_clients(clients: Any, n: int, what: str) -> None:
         raise ValueError(f"duplicate client ids in batch: {dupes}")
 
 
+def _cohort_size(out: Any) -> int:
+    """Client count of a stacked RoundOutput (leading axis of any leaf)."""
+    import jax
+
+    leaves = jax.tree_util.tree_leaves(
+        (out.levels_params, out.recon_delta_params))
+    return int(leaves[0].shape[0]) if leaves else 0
+
+
 class Codec:
     """One wire codec: ``encode`` to a payload, ``decode`` back to pytrees.
 
@@ -342,6 +351,23 @@ class Codec:
         """Decode K payloads; result i == ``decode(payloads[i], spec)``."""
         check_batch_clients(clients, len(payloads), "payloads")
         return [self.decode(p, spec) for p in payloads]
+
+    def encode_cohort(self, out: Any, spec: WireSpec, *,
+                      clients: Sequence[int] | None = None
+                      ) -> list[bytes] | None:
+        """Device fast path: encode a still-on-device stacked cohort.
+
+        ``out`` is the executor's stacked ``RoundOutput`` (every tree leaf
+        carries a leading client axis, resident on the accelerator).  A
+        codec with a device pipeline returns one payload per client,
+        byte-identical to ``encode_batch`` on the host-sliced updates — the
+        uplink routes here under ``EngineConfig.device_encode`` and treats
+        ``None`` as "no fast path" (base default, and the per-cohort
+        fallback codecs use when a device invariant does not hold, e.g.
+        golomb's int32 zigzag range guard), falling back to the host path.
+        """
+        check_batch_clients(clients, _cohort_size(out), "cohort rows")
+        return None
 
     def _encode_body(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
         raise NotImplementedError

@@ -112,7 +112,11 @@ class Int8BlockScaleCodec(Codec):
 
     name = "int8-blockscale"
     lossless = False
-    fork_safe = False   # encode dispatches the Pallas kernel through jax
+    # encode dispatches the Pallas kernel through jax, but only ONE dispatch
+    # per message and the uplink's process pool is forkserver-based: each
+    # worker owns a fresh XLA runtime instead of inheriting forked thread
+    # state, so the process executor is safe for this codec
+    fork_safe = True
     block = 128
 
     def _kernel(self):
@@ -124,17 +128,37 @@ class Int8BlockScaleCodec(Codec):
                                            interpret=interpret)
 
     def _encode_body(self, upd: ClientUpdate, spec: WireSpec) -> bytes:
-        kernel = self._kernel()
-        chunks = []
+        # The per-leaf zero pad is wire LAYOUT, not a kernel requirement
+        # (the kernel wrapper pads ragged n itself): aligning every leaf to
+        # a block boundary keeps each 128-block inside one tensor, so the
+        # concatenated buffer quantizes to the same q/scale chunks as the
+        # historical leaf-at-a-time dispatch — but in ONE kernel call per
+        # message instead of one per leaf.
+        flats, meta = [], []
         for _, leaf in _sent_recon_items(upd, spec):
             flat = _np32(leaf).reshape(-1)
             pad = (-flat.size) % self.block
-            flat = np.pad(flat, (0, pad))
-            q, s = kernel(flat)
-            chunks.append(np.asarray(q, np.int8).tobytes())
-            chunks.append(np.asarray(s).astype("<f4").tobytes())
+            padded = flat.size + pad
+            meta.append((padded, padded // self.block))
+            flats.append(np.pad(flat, (0, pad)) if pad else flat)
+        chunks = []
+        if flats:
+            q, s = self._kernel()(np.concatenate(flats))
+            q = np.asarray(q, np.int8)
+            s = np.asarray(s)
+            qo = so = 0
+            for padded, nblk in meta:
+                chunks.append(q[qo:qo + padded].tobytes())
+                chunks.append(s[so:so + nblk].astype("<f4").tobytes())
+                qo += padded
+                so += nblk
         chunks += _encode_scales_fp32(upd, spec)
         return b"".join(chunks)
+
+    def encode_cohort(self, out, spec: WireSpec, *, clients=None):
+        from repro.comms import device
+
+        return device.int8_encode_cohort(self, out, spec, clients=clients)
 
     def _decode_body(self, payload: bytes, spec: WireSpec) -> Decoded:
         off = 0
@@ -301,6 +325,11 @@ class NncCabacCodec(LevelCodec):
             return [self._frame(body + self._ternary_tail(u, spec), u, spec)
                     for body, u in zip(bodies, upds)]
 
+    def encode_cohort(self, out, spec: WireSpec, *, clients=None):
+        from repro.comms import device
+
+        return device.nnc_encode_cohort(self, out, spec, clients=clients)
+
     def decode_batch(self, payloads, spec, *, clients=None):
         check_batch_clients(clients, len(payloads), "payloads")
         if not payloads:
@@ -396,6 +425,11 @@ class GolombCodec(LevelCodec):
             w.put_uint(k, 4)
             golomb_lib.encode_egk(w, zig, k)
         return w.to_bytes()
+
+    def encode_cohort(self, out, spec: WireSpec, *, clients=None):
+        from repro.comms import device
+
+        return device.golomb_encode_cohort(self, out, spec, clients=clients)
 
     def _decode_levels(self, body, p_shapes, s_shapes):
         r = BitReader(body)

@@ -179,6 +179,10 @@ class EngineConfig:
     uplink_workers: int = 0              # >1: parallel encode+decode
     uplink_executor: str = "thread"      # "thread" | "process"
     uplink_batch: bool = False           # batch-API intake: <=W pool tasks
+    device_encode: bool = False          # cohort encode on device
+    #   (Codec.encode_cohort: ONE fused program over the stacked client
+    #   axis; codecs without a fast path fall back to the host per-client
+    #   encode — payload bytes are identical either way)
     # --- server ingest (repro.fl.ingest) ---
     # "gather" decodes every payload into a per-client pytree and averages
     # the list (O(K) memory); "streaming" folds each decoded payload into
@@ -230,6 +234,9 @@ class EngineConfig:
                     "weighted sampling needs one weight per client")
         if self.channel is not None and not self.measure_bytes:
             raise ValueError("a channel model needs real payloads: "
+                             "set measure_bytes=True")
+        if self.device_encode and not self.measure_bytes:
+            raise ValueError("device_encode builds real payloads on device: "
                              "set measure_bytes=True")
         if (self.channel is not None and self.channel.drop_rate > 0.0
                 and self.mode == "async"):

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import comms
+from repro.comms import device as comms_device
 from repro.coding.nnc import leaves_with_paths
 from repro.core import delta as delta_lib
 from repro.core import prand
@@ -456,6 +457,9 @@ class Uplink:
         # streaming ingest: intake is encode-only (payload bytes on the
         # Contribution), the decode+fold happens in repro.fl.ingest
         self.streaming = engine_cfg.ingest == "streaming"
+        # device cohort encode: Codec.encode_cohort on the still-stacked
+        # RoundOutput (ONE fused program per cohort); None => host fallback
+        self.device_encode = engine_cfg.device_encode
         if (self.workers > 1 and self.executor_kind == "process"
                 and not self.codec.fork_safe):
             raise ValueError(
@@ -603,6 +607,27 @@ class Uplink:
             self._ex.shutdown()
             self._ex = None
 
+    # -- device cohort encode ----------------------------------------------
+
+    def _device_payloads(self, out, clients: list[int]):
+        """Cohort payloads from the device fast path, or None.
+
+        Calls ``Codec.encode_cohort`` on the still-stacked ``RoundOutput``
+        — the fused kernels replace the fetch + per-client encode.  The
+        ``uplink.kernel_dispatches`` counter records how many fused device
+        programs the cohort cost (the K x leaves -> O(1) collapse is the
+        point of the path, so it is observable in traces)."""
+        before = comms_device.dispatch_count()
+        with obs_trace.span("uplink.device_encode", n=len(clients),
+                            codec=self.codec.name):
+            payloads = self.codec.encode_cohort(out, self.spec,
+                                                clients=clients)
+        m = obs_metrics.get_registry()
+        if m.enabled:
+            m.count("uplink.kernel_dispatches",
+                    comms_device.dispatch_count() - before)
+        return payloads
+
     # -- RoundOutput -> Contributions --------------------------------------
 
     def _metric_row(self, metrics, i: int | None) -> dict[str, float]:
@@ -634,6 +659,27 @@ class Uplink:
                 for i, c in enumerate(clients)]
         if self.streaming:
             return self._intake_streaming(out, clients)
+        if self.device_encode:
+            payloads = self._device_payloads(out, clients)
+            if payloads is not None:
+                # only the scalar metrics cross to host — the payloads
+                # already did, inside encode_cohort's single device_get
+                metrics = jax.device_get(out.metrics)
+                for p in payloads:
+                    self._account_payload(p)
+                decs = self.codec.decode_batch(payloads, self.spec,
+                                               clients=clients)
+                return [Contribution(
+                    client=c,
+                    delta_params=dec.params,
+                    delta_scales=dec.scales,
+                    bn_state=(dec.bn if self.spec.version == 2
+                              else jax.tree.map(lambda x: x[i],
+                                                out.bn_state)),
+                    payload_bytes=len(p),
+                    metrics=self._metric_row(metrics, i))
+                    for i, (c, p, dec) in enumerate(
+                        zip(clients, payloads, decs))]
         host, metrics = self.fetch(out)
         upds = [comms.ClientUpdate(*(None if t is None else client_slice(t, i)
                                      for t in host))
@@ -661,13 +707,19 @@ class Uplink:
         client-side reconstruction — bit-identical to the decoded tree
         for level-lossless codecs — and the v1 BN mean stays on device
         exactly like the gather path."""
-        host, metrics = self.fetch(out)
-        upds = [comms.ClientUpdate(*(None if t is None else client_slice(t, i)
-                                     for t in host))
+        payloads = None
+        if self.device_encode:
+            payloads = self._device_payloads(out, clients)
+        if payloads is not None:
+            metrics = jax.device_get(out.metrics)
+        else:
+            host, metrics = self.fetch(out)
+            upds = [comms.ClientUpdate(
+                *(None if t is None else client_slice(t, i) for t in host))
                 for i in range(len(clients))]
-        with obs_trace.span("uplink.encode_batch", n=len(upds)):
-            payloads = self.codec.encode_batch(upds, self.spec,
-                                               clients=clients)
+            with obs_trace.span("uplink.encode_batch", n=len(upds)):
+                payloads = self.codec.encode_batch(upds, self.spec,
+                                                   clients=clients)
         for p in payloads:
             self._account_payload(p)
 

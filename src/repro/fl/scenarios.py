@@ -77,6 +77,7 @@ class Scenario:
     uplink_workers: int = 0         # >1: parallel per-client encode+decode
     uplink_executor: str = "thread"  # "thread" | "process"
     uplink_batch: bool = False      # codec batch API: <=W pool tasks/cohort
+    device_encode: bool = False     # cohort encode on device (encode_cohort)
     # --- server ingest (repro.fl.ingest) ---
     ingest: str = "gather"          # "gather" | "streaming"
     ingest_engine: str = "vectorized"  # streaming decode engine
@@ -130,6 +131,7 @@ def build_engine(s: Scenario) -> EngineConfig:
         uplink_workers=s.uplink_workers,
         uplink_executor=s.uplink_executor,
         uplink_batch=s.uplink_batch,
+        device_encode=s.device_encode,
         ingest=s.ingest,
         ingest_opts=IngestConfig(decode_engine=s.ingest_engine),
         telemetry=s.telemetry,
@@ -249,6 +251,16 @@ for _s in [
     Scenario("codec_int8_k4",
              "int8-blockscale wire payloads (fused Pallas quantizer)",
              cohort_size=4, codec="int8-blockscale"),
+    Scenario("device_encode_int8",
+             "device cohort encode: the whole cohort's int8-blockscale "
+             "payloads come out of ONE fused (K, n) Pallas dispatch "
+             "(byte-identical to the host per-client path)",
+             cohort_size=4, codec="int8-blockscale", device_encode=True),
+    Scenario("device_encode_cabac",
+             "device cohort encode for DeepCABAC: pass-1 row-skip flags "
+             "computed on device for the stacked cohort, pass-2 range "
+             "coding on host — payloads byte-identical to the host path",
+             device_encode=True),
     Scenario("chan_slow_cabac",
              "1 Mbps uplink, 50 ms latency: DeepCABAC payloads",
              channel=ChannelConfig(up_mbps=1.0, down_mbps=8.0,

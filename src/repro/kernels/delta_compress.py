@@ -7,6 +7,21 @@ this kernel streams each 1-D block through VMEM once and emits the int8
 payload + per-block scale, which is exactly what dist/collectives.py puts on
 the wire.  Memory-bound: one HBM read, 1/4 + eps write.
 
+Two dispatch shapes:
+
+  * ``delta_compress`` — the per-client ``(n,)`` variant; one grid program
+    per ``block`` elements.  Ragged ``n`` is handled INSIDE the jitted
+    wrapper (device-side zero pad + slice), so callers never ``np.pad``.
+    Zero padding cannot move a byte: padded lanes quantize to 0 and an
+    all-pad block gets the same scale-1 sentinel the host layout pins.
+  * ``delta_compress_batch`` — the cohort variant over stacked ``(K, n)``
+    deltas: as many client rows per grid program as a VMEM budget allows
+    (small cohorts collapse to ONE program), each program reshaping its
+    rows to ``(-1, block)`` so the per-128-block wire scales are
+    bit-identical to ``K`` separate calls while grid iteration drops from
+    O(K · n/block) to O(K·n / budget).  This is the uplink's device fast
+    path (``repro.comms.device``).
+
 Companion: `delta_apply` — fused dequant + server-side apply (W += c·q·s).
 """
 from __future__ import annotations
@@ -31,15 +46,20 @@ def _compress_kernel(d_ref, theta_ref, q_ref, s_ref):
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def delta_compress(delta: jax.Array, theta: jax.Array, *, block: int = 1024,
                    interpret: bool = False):
-    """delta: (n,) n % block == 0; theta: scalar threshold (Eq. 2 output).
+    """delta: (n,) for ANY n (padded device-side); theta: scalar (Eq. 2).
 
-    Returns (q int8 (n,), scales f32 (n/block,)).
+    Returns (q int8 (n,), scales f32 (ceil(n/block),)).  The scale of a
+    trailing partial block is computed over the zero-padded block — zeros
+    never win the amax, so it equals the unpadded block's scale.
     """
     n = delta.shape[0]
-    assert n % block == 0, (n, block)
-    nblk = n // block
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int8), jnp.zeros((0,), jnp.float32))
+    pad = (-n) % block
+    flat = jnp.pad(delta, (0, pad)) if pad else delta
+    nblk = flat.shape[0] // block
     theta_arr = jnp.broadcast_to(jnp.asarray(theta, jnp.float32), (1,))
-    return pl.pallas_call(
+    q, scales = pl.pallas_call(
         _compress_kernel,
         grid=(nblk,),
         in_specs=[
@@ -50,10 +70,74 @@ def delta_compress(delta: jax.Array, theta: jax.Array, *, block: int = 1024,
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (i,)),
         ],
-        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int8),
+        out_shape=[jax.ShapeDtypeStruct((flat.shape[0],), jnp.int8),
                    jax.ShapeDtypeStruct((nblk,), jnp.float32)],
         interpret=interpret,
-    )(delta, theta_arr)
+    )(flat, theta_arr)
+    return (q[:n] if pad else q), scales
+
+
+# per-program f32 input budget for the batch kernel: rows are grouped so
+# one program's working set stays well under a TPU core's ~16 MB VMEM
+# (input + kept + quantized copies ~3x this)
+_VMEM_ROW_BYTES = 2 << 20
+
+
+def _compress_row_kernel(d_ref, theta_ref, q_ref, s_ref, *, block):
+    # One program per GROUP of client rows; the reshape keeps per-`block`
+    # scales bit-identical to the per-block grid above — each length-block
+    # slice of a row is reduced independently, however many rows ride in
+    # one program.
+    d = d_ref[...].astype(jnp.float32).reshape(-1, block)
+    theta = theta_ref[0]
+    kept = jnp.where(jnp.abs(d) >= theta, d, 0.0)
+    amax = jnp.max(jnp.abs(kept), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(kept / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8).reshape(q_ref.shape)
+    s_ref[...] = scale.reshape(s_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def delta_compress_batch(deltas: jax.Array, theta: jax.Array, *,
+                         block: int = 128, interpret: bool = False):
+    """Cohort variant: deltas (K, n) for ANY n, ONE pallas dispatch.
+
+    Returns (q int8 (K, n), scales f32 (K, ceil(n/block))), row i byte-equal
+    to ``delta_compress(deltas[i], theta, block=block)``.
+    """
+    k, n = deltas.shape
+    if n == 0 or k == 0:
+        return (jnp.zeros((k, 0), jnp.int8), jnp.zeros((k, 0), jnp.float32))
+    pad = (-n) % block
+    flat = jnp.pad(deltas, ((0, 0), (0, pad))) if pad else deltas
+    p = flat.shape[1]
+    nblk = p // block
+    # group rows per program under the VMEM budget: a tiny cohort runs in
+    # ONE program, a huge model still tiles row-by-row.  Zero-padded rows
+    # quantize to (q=0, scale=1) and are sliced away.
+    rows = min(k, max(1, _VMEM_ROW_BYTES // (p * 4)))
+    kpad = (-k) % rows
+    if kpad:
+        flat = jnp.pad(flat, ((0, kpad), (0, 0)))
+    kp = k + kpad
+    theta_arr = jnp.broadcast_to(jnp.asarray(theta, jnp.float32), (1,))
+    q, scales = pl.pallas_call(
+        functools.partial(_compress_row_kernel, block=block),
+        grid=(kp // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, p), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, p), lambda i: (i, 0)),
+            pl.BlockSpec((rows, nblk), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((kp, p), jnp.int8),
+                   jax.ShapeDtypeStruct((kp, nblk), jnp.float32)],
+        interpret=interpret,
+    )(flat, theta_arr)
+    return q[:k, :n], scales[:k]
 
 
 def _apply_kernel(w_ref, q_ref, s_ref, coef_ref, o_ref):
@@ -66,12 +150,25 @@ def _apply_kernel(w_ref, q_ref, s_ref, coef_ref, o_ref):
 def delta_apply(w: jax.Array, q: jax.Array, scales: jax.Array,
                 coef: float = 1.0, *, block: int = 1024,
                 interpret: bool = False) -> jax.Array:
-    """Fused dequantize + apply: returns w + coef * (q * scale)."""
+    """Fused dequantize + apply: returns w + coef * (q * scale).
+
+    Accepts ANY n (padded device-side); scales has ceil(n/block) entries —
+    the layout ``delta_compress`` emits.
+    """
     n = w.shape[0]
-    assert n % block == 0 and q.shape == (n,)
-    nblk = n // block
+    assert q.shape == (n,)
+    if n == 0:
+        return w
+    pad = (-n) % block
+    if pad:
+        w_p = jnp.pad(w, (0, pad))
+        q_p = jnp.pad(q, (0, pad))
+    else:
+        w_p, q_p = w, q
+    nblk = w_p.shape[0] // block
+    assert scales.shape == (nblk,), (scales.shape, nblk)
     coef_arr = jnp.broadcast_to(jnp.asarray(coef, jnp.float32), (1,))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _apply_kernel,
         grid=(nblk,),
         in_specs=[
@@ -81,6 +178,7 @@ def delta_apply(w: jax.Array, q: jax.Array, scales: jax.Array,
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), w.dtype),
+        out_shape=jax.ShapeDtypeStruct((w_p.shape[0],), w.dtype),
         interpret=interpret,
-    )(w, q, scales, coef_arr)
+    )(w_p, q_p, scales, coef_arr)
+    return out[:n] if pad else out

@@ -1,0 +1,78 @@
+"""Pallas kernel: the level codecs' fused lossy front end on the cohort axis.
+
+One pass per client row over stacked ``(K, n)`` deltas fuses the whole
+client-side compression chain the level codecs (golomb / nnc-cabac)
+transmit:
+
+    carried = delta + residual            # error-feedback carry (Eq. 5)
+    kept    = carried · [|carried| ≥ θ]   # threshold sparsify (Eq. 2 style)
+    levels  = clip(round(kept / step), ±max_level)   # uniform quantize (§3)
+    carry   = carried − levels · step     # next round's residual
+
+The unfused pipeline (``core/residual.py`` + ``core/sparsify.py`` +
+``core/quant.py``) materialises ``carried``/``kept``/``recon`` as separate
+HBM arrays per stage; this kernel reads delta+residual once and writes only
+the int32 levels and the f32 carry.  Semantics are pinned against the
+pure-jnp oracle ``ref.level_assign`` (round-to-nearest-even, the repo-wide
+quantization convention) in ``tests/test_kernels.py``.
+
+Like ``delta_compress_batch``, the grid is ``(K,)`` — one program per
+client — so a whole cohort is ONE dispatch regardless of model size, and
+ragged ``n`` is zero-padded device-side inside the jitted wrapper (padded
+lanes carry 0 → level 0, carry 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _level_assign_kernel(d_ref, r_ref, theta_ref, step_ref, lv_ref, c_ref,
+                         *, max_level):
+    carried = d_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    theta = theta_ref[0]
+    step = step_ref[0]
+    kept = jnp.where(jnp.abs(carried) >= theta, carried, 0.0)
+    lv = jnp.clip(jnp.round(kept / step), -max_level, max_level)
+    lv_ref[...] = lv.astype(jnp.int32)
+    c_ref[...] = carried - lv * step
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_level", "interpret"))
+def level_assign(deltas: jax.Array, residuals: jax.Array, theta: jax.Array,
+                 step: jax.Array, *, max_level: int = 2**23,
+                 interpret: bool = False):
+    """Fused EF-carry → sparsify → quantize over stacked (K, n) deltas.
+
+    Returns ``(levels int32 (K, n), carry f32 (K, n))`` in ONE dispatch.
+    ``theta``/``step`` are scalars shared across the cohort (the engine's
+    per-tensor step sizes dispatch one call per step group).
+    """
+    k, n = deltas.shape
+    assert residuals.shape == (k, n), (residuals.shape, deltas.shape)
+    if n == 0 or k == 0:
+        return (jnp.zeros((k, n), jnp.int32), jnp.zeros((k, n), jnp.float32))
+    theta_arr = jnp.broadcast_to(jnp.asarray(theta, jnp.float32), (1,))
+    step_arr = jnp.broadcast_to(jnp.asarray(step, jnp.float32), (1,))
+    levels, carry = pl.pallas_call(
+        functools.partial(_level_assign_kernel, max_level=max_level),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((k, n), jnp.int32),
+                   jax.ShapeDtypeStruct((k, n), jnp.float32)],
+        interpret=interpret,
+    )(deltas, residuals, theta_arr, step_arr)
+    return levels, carry

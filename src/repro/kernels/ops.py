@@ -40,17 +40,21 @@ def scaled_matmul(x, w, s, *, bm=128, bn=128, bk=128):
 
 
 def delta_compress(delta, theta, *, block=1024):
-    flat = delta.reshape(-1)
-    flat, n = _pad_to(flat, 0, block)
-    q, scales = dc.delta_compress(flat, theta, block=block,
+    # ragged n pads device-side inside the jitted kernel wrapper
+    q, scales = dc.delta_compress(delta.reshape(-1), theta, block=block,
                                   interpret=INTERPRET)
-    return q[:n].reshape(delta.shape) if n != flat.shape[0] else \
-        (q.reshape(delta.shape) if n == q.shape[0] else q[:n]), scales
+    return q.reshape(delta.shape), scales
 
 
 def delta_compress_flat(delta, theta, *, block=1024):
-    """No-unpad variant for pre-padded buckets (the dist path)."""
+    """Flat (n,) variant for pre-padded buckets (the dist path)."""
     return dc.delta_compress(delta, theta, block=block, interpret=INTERPRET)
+
+
+def delta_compress_batch(deltas, theta, *, block=128):
+    """Cohort (K, n) variant: one dispatch, rows byte-equal to per-client."""
+    return dc.delta_compress_batch(deltas, theta, block=block,
+                                   interpret=INTERPRET)
 
 
 def delta_apply(w, q, scales, coef=1.0, *, block=1024):

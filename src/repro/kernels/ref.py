@@ -18,15 +18,40 @@ def scaled_matmul(x: jax.Array, w: jax.Array, s: jax.Array) -> jax.Array:
 def delta_compress(delta: jax.Array, theta: float, block: int):
     """Fused Eq.2-style threshold sparsify + per-block symmetric int8 quant.
 
-    delta: (n,) with n % block == 0.  Returns (q int8 (n,), scales f32
-    (n/block,)): kept = |d| >= theta, scale = max|kept|/127 (1 if all zero).
+    delta: (n,) for ANY n (zero-padded to a block multiple like the kernel
+    wrapper).  Returns (q int8 (n,), scales f32 (ceil(n/block),)):
+    kept = |d| >= theta, scale = max|kept|/127 (1 if all zero).
     """
-    d = delta.astype(jnp.float32).reshape(-1, block)
+    n = delta.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int8), jnp.zeros((0,), jnp.float32)
+    pad = (-n) % block
+    d = jnp.pad(delta.astype(jnp.float32), (0, pad)).reshape(-1, block)
     kept = jnp.where(jnp.abs(d) >= theta, d, 0.0)
     amax = jnp.max(jnp.abs(kept), axis=1)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q = jnp.clip(jnp.round(kept / scale[:, None]), -127, 127).astype(jnp.int8)
-    return q.reshape(-1), scale
+    return q.reshape(-1)[:n], scale
+
+
+def delta_compress_batch(deltas: jax.Array, theta: float, block: int):
+    """Row-stacked oracle: row i == delta_compress(deltas[i], theta, block)."""
+    qs, ss = zip(*(delta_compress(deltas[i], theta, block)
+                   for i in range(deltas.shape[0])))
+    return jnp.stack(qs), jnp.stack(ss)
+
+
+def level_assign(deltas: jax.Array, residuals: jax.Array, theta: float,
+                 step: float, max_level: int = 2**23):
+    """Fused EF-carry (Eq. 5) → threshold sparsify → uniform quantize.
+
+    The composition of core/residual.apply_error_feedback with a
+    threshold+quantize compress_fn, on stacked (K, n) deltas.
+    """
+    carried = deltas.astype(jnp.float32) + residuals.astype(jnp.float32)
+    kept = jnp.where(jnp.abs(carried) >= theta, carried, 0.0)
+    lv = jnp.clip(jnp.round(kept / step), -max_level, max_level)
+    return lv.astype(jnp.int32), carried - lv * step
 
 
 def delta_apply(w: jax.Array, q: jax.Array, scales: jax.Array, block: int,

@@ -302,6 +302,31 @@ def test_streaming_ingest_telemetry_off_is_deterministic(tiny2):
             (b.up_bytes, b.test_acc, b.train_loss)
 
 
+def test_device_encode_telemetry_off_is_deterministic(tiny2):
+    """The telemetry-off determinism pin extends to the device cohort
+    encode: the uplink.device_encode span and uplink.kernel_dispatches
+    counter observe the fused path without moving a byte — traced and
+    silent device runs agree record-for-record on the frozen pin."""
+    model, splits = tiny2
+    pin = _PINS["fsfl"]
+    cfg = ProtocolConfig(name="fsfl", batch_size=32, local_lr=2e-3,
+                         **pin["cfg"])
+    on = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                        engine=EngineConfig(device_encode=True,
+                                            telemetry="trace"))
+    off = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                         engine=EngineConfig(device_encode=True))
+    assert [r.up_bytes for r in off.records] == pin["up_bytes"]
+    for a, b in zip(on.records, off.records):
+        assert (a.up_bytes, a.test_acc, a.train_loss) == \
+            (b.up_bytes, b.test_acc, b.train_loss)
+    names = {s.name for s in on.telemetry.recorder.snapshot()}
+    assert "uplink.device_encode" in names
+    assert "uplink.fetch" not in names  # the bulk fetch is gone
+    snap = on.records[0].telemetry
+    assert snap["counters"]["uplink.kernel_dispatches"] == 1
+
+
 # ------------------------------------------------------------- codec anatomy
 
 def _mini_update(ternary=False, version=1):

@@ -369,14 +369,116 @@ def test_up_bytes_pin_through_batch_path(tiny2):
 
 
 def test_process_executor_refuses_non_fork_safe_codec(tiny2):
+    """int8-blockscale is fork-safe since its single-dispatch encode (one
+    kernel launch per message, forkserver workers own a fresh XLA
+    runtime), so the refusal is asserted with a synthetic codec."""
+    from repro import comms
+
+    class _Unsafe(type(comms.get_codec("raw-fp32"))):
+        fork_safe = False
+
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fsfl", method="sparse",
+                         fixed_sparsity=0.9, batch_size=32,
+                         local_lr=2e-3)
+    with pytest.raises(ValueError, match="fork"):
+        run_simulation(model, cfg, splits, 1, jax.random.PRNGKey(7),
+                       engine=EngineConfig(
+                           codec=_Unsafe("test-unsafe", "<f4", True),
+                           uplink_workers=2,
+                           uplink_executor="process"))
+
+
+def test_int8_codec_is_fork_safe_now(tiny2):
+    """Satellite re-evaluation: with ONE kernel dispatch per message and a
+    forkserver (fork+exec) pool, int8-blockscale runs under the process
+    executor — and still holds the serial payload bytes."""
     model, splits = tiny2
     cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
                          batch_size=32, local_lr=2e-3)
-    with pytest.raises(ValueError, match="fork"):
+    from repro import comms
+    assert comms.get_codec("int8-blockscale").fork_safe
+    base = run_simulation(model, cfg, splits, 1, jax.random.PRNGKey(7),
+                          engine=EngineConfig(codec="int8-blockscale"))
+    pooled = run_simulation(model, cfg, splits, 1, jax.random.PRNGKey(7),
+                            engine=EngineConfig(codec="int8-blockscale",
+                                                uplink_workers=2,
+                                                uplink_executor="process"))
+    assert ([r.up_bytes for r in pooled.records]
+            == [r.up_bytes for r in base.records])
+
+
+# ------------------------------------------------------------- device encode
+
+@pytest.mark.parametrize("name", ["fsfl", "stc", "fedavg_nnc"])
+def test_device_encode_reproduces_pins(tiny2, name):
+    """The device cohort encode holds the three frozen seed pins
+    bit-for-bit: the fused kernels change WHERE the payload is computed,
+    never a single byte of it."""
+    model, splits = tiny2
+    pin = _PINS[name]
+    cfg = ProtocolConfig(name=name, batch_size=32, local_lr=2e-3,
+                         **pin["cfg"])
+    res = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                         engine=EngineConfig(device_encode=True))
+    assert [r.up_bytes for r in res.records] == pin["up_bytes"]
+    if pin["acc"] is not None:
+        assert [round(r.test_acc, 6) for r in res.records] == pin["acc"]
+
+
+def test_device_encode_streaming_reproduces_pins(tiny2):
+    """device_encode composes with streaming ingest: payload-only intake
+    from the device path, same frozen bytes."""
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    res = run_simulation(model, cfg, splits, 2, jax.random.PRNGKey(7),
+                         engine=EngineConfig(device_encode=True,
+                                             ingest="streaming"))
+    assert [r.up_bytes for r in res.records] == _PINS["fsfl"]["up_bytes"]
+
+
+def test_device_encode_one_dispatch_per_cohort(tiny8):
+    """O(1) fused dispatches in cohort size: the whole K-client cohort
+    costs ONE device program, observable via uplink.kernel_dispatches."""
+    from repro.comms import device as comms_device
+
+    model, splits = tiny8
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    for k in (2, 8):
+        before = comms_device.dispatch_count()
+        res = run_simulation(model, cfg, splits, 1, jax.random.PRNGKey(7),
+                             engine=EngineConfig(
+                                 device_encode=True, telemetry="metrics",
+                                 sampling=SamplingConfig(cohort_size=k)))
+        # one fused program for the whole cohort, independent of K
+        assert comms_device.dispatch_count() - before == 1
+        snap = res.records[0].telemetry
+        assert snap["counters"]["uplink.kernel_dispatches"] == 1
+
+
+def test_device_encode_requires_wire(tiny2):
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    with pytest.raises(ValueError, match="measure_bytes"):
         run_simulation(model, cfg, splits, 1, jax.random.PRNGKey(7),
-                       engine=EngineConfig(codec="int8-blockscale",
-                                           uplink_workers=2,
-                                           uplink_executor="process"))
+                       engine=EngineConfig(device_encode=True,
+                                           measure_bytes=False))
+
+
+def test_device_encode_falls_back_for_codecs_without_fast_path(tiny2):
+    """raw-fp32 has no encode_cohort override: the uplink silently takes
+    the host path and bytes match the non-device run."""
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fedavg_raw", method="none", quantize=False,
+                         batch_size=32, local_lr=2e-3)
+    base = run_simulation(model, cfg, splits, 1, jax.random.PRNGKey(7))
+    dev = run_simulation(model, cfg, splits, 1, jax.random.PRNGKey(7),
+                         engine=EngineConfig(device_encode=True))
+    assert ([r.up_bytes for r in dev.records]
+            == [r.up_bytes for r in base.records])
 
 
 # ------------------------------------------------------------- streaming ingest

@@ -1,69 +1,153 @@
-"""Distributed FSFL training on a (simulated) mesh: the SAME shard_map
-train step the 512-chip dry-run lowers, here on 8 host devices —
-2 clients x 2-way FSDP x 2-way TP, compressed gradient exchange, scaling
-sub-step, Markov-LM synthetic data.
+"""Multi-host federated training on a real ``jax.distributed`` mesh.
 
-    PYTHONPATH=src python examples/multipod_train.py [--steps N] [--dense]
+Self-spawning demo of the engine's ``executor="dist"`` backend
+(``repro.dist``): run with no arguments and the parent
 
-(--dense switches the exchange to the uncompressed FedAvg psum baseline so
-you can compare the logical payload bytes.)
+  1. runs a single-process reference on a simulated mesh of ``--procs``
+     local devices (``sharded`` backend — the same device topology the
+     distributed job will have),
+  2. relaunches itself ``--procs`` times as coordinated worker processes
+     (localhost coordination service, one CPU device each, gloo
+     collectives), every worker running the IDENTICAL engine loop with the
+     cohort axis sharded across the multi-process mesh and persistent
+     client state partitioned by training ownership
+     (``repro.dist.CrossHostClientStore``),
+  3. checks the workers' round records against the reference bit-for-bit.
+
+    PYTHONPATH=src python examples/multipod_train.py [--rounds N] [--procs P]
+
+Workers see only their own shard of the stacked client arrays
+(``jax.make_array_from_process_local_data``); when cohort sampling moves a
+client between hosts, its error-feedback state hands off through one
+host collective.  The records printed by every process are identical —
+the engine is one SPMD program, and process topology must not move a byte.
 """
-import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
 import argparse
-import dataclasses
+import json
+import os
+import socket
+import subprocess
+import sys
 
-import jax
-import jax.numpy as jnp
+REPRO_ENV = ("REPRO_DIST_COORD", "REPRO_DIST_NPROCS", "REPRO_DIST_PID")
 
 
-def main():
+def run_engine(executor: str, rounds: int):
+    import jax
+
+    from repro.core.protocol import ProtocolConfig
+    from repro.data import federated, synthetic
+    from repro.fl import EngineConfig, SamplingConfig, run_simulation
+    from repro.fl.server_opt import ServerOptConfig
+    from repro.models import cnn
+
+    task = synthetic.ImageTask("multipod", num_classes=4, channels=3,
+                               size=32, prototypes_per_class=2, noise=0.25)
+    x, y = synthetic.make_image_dataset(jax.random.PRNGKey(0), task, 480)
+    splits = federated.split_federated(jax.random.PRNGKey(1), x, y,
+                                       num_clients=8)
+    model = cnn.make_vgg("vgg_tiny_comms", [8, 16], 4, 3,
+                         dense_width=16, pool_after=(0, 1))
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         error_feedback=True, batch_size=32, local_lr=2e-3)
+    eng = EngineConfig(sampling=SamplingConfig(cohort_size=2),
+                       server_opt=ServerOptConfig(name="fedavg", lr=1.0),
+                       mode="sync", measure_bytes=True, executor=executor)
+    res = run_simulation(model, cfg, splits, rounds, jax.random.PRNGKey(11),
+                         engine=eng)
+    return [dict(round=r.round, up_bytes=r.up_bytes,
+                 acc=round(r.test_acc, 6), participants=list(r.participants))
+            for r in res.records]
+
+
+def worker_main(rounds: int) -> None:
+    """One coordinated process: context FIRST, then the shared loop."""
     from repro.launch import require_dist
-    require_dist()
-    from repro.configs import get
-    from repro.data.synthetic import make_markov_lm
-    from repro.dist.collectives import MeshCompression
-    from repro.dist.sharding import MeshLayout, make_plan
-    from repro.dist import train_step as train_lib
-    from repro.launch.mesh import make_mesh
+    dist = require_dist()
+    ctx = dist.init_from_env()
+    records = run_engine("dist", rounds)
+    print(f"[worker {ctx.process_index}/{ctx.process_count}] "
+          f"{len(ctx.local_devices)} local / {len(ctx.global_devices)} "
+          "global devices")
+    for r in records:
+        print(f"[worker {ctx.process_index}] round {r['round']}: "
+              f"clients={r['participants']} up={r['up_bytes']}B "
+              f"acc={r['acc']:.4f}")
+    print("RECORDS " + json.dumps(records), flush=True)
 
+
+def parent_main(rounds: int, procs: int) -> int:
+    from repro.launch import require_dist
+    require_dist()  # fail early with the friendly message if dist is broken
+
+    print(f"== reference: 1 process, {procs} simulated devices, "
+          "sharded backend ==")
+    env = {k: v for k, v in os.environ.items() if k not in REPRO_ENV}
+    env.update(XLA_FLAGS=f"--xla_force_host_platform_device_count={procs}",
+               PYTHONPATH=os.pathsep.join(
+                   p for p in (os.environ.get("PYTHONPATH"), "src") if p))
+    ref = subprocess.run(
+        [sys.executable, "-c",
+         "from examples.multipod_train import run_engine; import json; "
+         f"print('RECORDS ' + json.dumps(run_engine('sharded', {rounds})))"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if ref.returncode != 0:
+        print(ref.stderr[-2000:])
+        return 1
+    expected = json.loads(
+        [l for l in ref.stdout.splitlines()
+         if l.startswith("RECORDS ")][-1][len("RECORDS "):])
+    for r in expected:
+        print(f"[reference] round {r['round']}: clients={r['participants']} "
+              f"up={r['up_bytes']}B acc={r['acc']:.4f}")
+
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    print(f"== spawning {procs} worker processes "
+          f"(coordinator localhost:{port}) ==")
+    children = []
+    for pid in range(procs):
+        wenv = dict(env, REPRO_DIST_COORD=f"localhost:{port}",
+                    REPRO_DIST_NPROCS=str(procs), REPRO_DIST_PID=str(pid),
+                    XLA_FLAGS="--xla_force_host_platform_device_count=1")
+        children.append(subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__),
+             "--rounds", str(rounds)],
+            env=wenv, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True))
+    ok = True
+    for pid, p in enumerate(children):
+        out, err = p.communicate(timeout=900)
+        sys.stdout.write(out)
+        if p.returncode != 0:
+            print(f"worker {pid} failed (rc={p.returncode}):\n{err[-2000:]}")
+            ok = False
+            continue
+        got = json.loads([l for l in out.splitlines()
+                          if l.startswith("RECORDS ")][-1][len("RECORDS "):])
+        if got != expected:
+            print(f"worker {pid} records DIVERGED from the reference:"
+                  f"\n  ref: {expected}\n  got: {got}")
+            ok = False
+    if ok:
+        print(f"OK: {procs}-process records match the single-process "
+              "reference bit-for-bit")
+    return 0 if ok else 1
+
+
+def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=10)
-    ap.add_argument("--arch", default="gemma2-2b")
-    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--procs", type=int, default=2)
     args = ap.parse_args()
-
-    cfg = dataclasses.replace(get(args.arch).reduced(), dtype=jnp.float32)
-    mesh = make_mesh((4, 2), ("data", "model"))
-    layout = MeshLayout(1, 4, 2, clients_per_pod=2)
-    plan = make_plan(cfg, 2)
-    comp = MeshCompression(enabled=not args.dense, block=64, sparsity=0.9)
-    settings = train_lib.TrainSettings(microbatches=2, compression=comp,
-                                       scale_step=True, lr=1e-3)
-
-    make, sds, sh, specs = train_lib.make_train_step(cfg, layout, plan, mesh,
-                                                     settings)
-    B, S = 8, 64
-    batch_sds = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
-                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
-    fn = make(batch_sds)
-    batch_sh = train_lib.batch_shardings(cfg, layout, mesh, batch_sds)
-    run = jax.jit(fn, in_shardings=(sh, batch_sh), out_shardings=(sh, None))
-
-    print(f"init ({cfg.name}, 2 clients x 2 fsdp x 2 tp, "
-          f"{'dense' if args.dense else 'FSFL-compressed'} exchange)...")
-    state = train_lib.init_state(jax.random.PRNGKey(0), cfg, layout, plan,
-                                 mesh, settings)
-    x, y = make_markov_lm(jax.random.PRNGKey(1), cfg.vocab, B, S)
-    batch = {"tokens": x, "labels": y}
-    for i in range(args.steps):
-        state, metrics = run(state, batch)
-        print(f"step {i:2d} loss={float(metrics['loss']):.4f} "
-              f"exchange_payload={float(metrics['payload_bytes'])/1e3:.1f}kB "
-              f"scale_delta^2={float(metrics['scale_delta_sq']):.2e}")
+    if os.environ.get("REPRO_DIST_NPROCS"):
+        worker_main(args.rounds)
+        return 0
+    return parent_main(args.rounds, args.procs)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -45,6 +45,11 @@ if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
   echo "== equality + telemetry-off overhead guard (< 2%) =="
   python scripts/trace_smoke.py
 
+  echo "== dist smoke: 2-process jax.distributed mesh, record equality =="
+  echo "== vs single-process (clean skip where the sandbox forbids the =="
+  echo "== coordination socket) =="
+  python scripts/dist_smoke.py
+
   echo "== engine smoke: 2 rounds, K=4 of C=8, FedAdam, tiny CNN =="
   python - <<'PY'
 import jax

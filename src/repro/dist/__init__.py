@@ -1,0 +1,33 @@
+"""``repro.dist`` — the multi-process (multi-host) federated runtime.
+
+Revived (PR 10) as the ``jax.distributed`` runtime behind
+``repro.launch.require_dist``: a :class:`DistContext` initializes the
+coordination service and describes the process topology, the FL engine's
+``executor="dist"`` backend (``repro.fl.executors.DistExecutor``) shards
+the cohort axis across the resulting multi-host mesh, and
+:class:`CrossHostClientStore` partitions persistent client state so each
+host owns only the client shards its mesh slice trains (with cross-host
+handoff when cohort sampling moves a client between hosts).
+
+The engine remains one SPMD program: every process runs the identical
+scheduler/uplink/aggregation logic on the identical PRNG key sequence, so
+records (bytes, accuracies) agree bitwise across processes and with the
+single-process run — the property ``tests/test_dist_fl.py`` pins on the
+frozen seed pins over a 2-process CPU mesh.
+
+Note: the pre-seed transformer mesh-training runtime
+(``repro.dist.train_step`` / ``sharding`` / ``collectives`` /
+``serve_step``) is NOT part of this checkout; ``tests/test_dist.py``
+skips unless those modules are restored.
+"""
+from repro.dist.context import (DistConfig, DistContext, get_context,
+                                init_from_env)
+from repro.dist.state import CrossHostClientStore
+
+__all__ = [
+    "DistConfig",
+    "DistContext",
+    "CrossHostClientStore",
+    "get_context",
+    "init_from_env",
+]

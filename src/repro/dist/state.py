@@ -1,0 +1,118 @@
+"""Cross-host client state: ownership-partitioned store with state handoff.
+
+In a multi-process run each host's mesh slice trains a contiguous block of
+the (padded) cohort rows, so only that host observes those clients' updated
+persistent state.  :class:`CrossHostClientStore` wraps a per-host backend
+(:class:`repro.fl.population.ShardedLazyStore` for population scale, or the
+in-memory store for small runs) and partitions WRITE ownership by training
+position: ``scatter`` writes only the rows this process's devices trained,
+so each host's inner store holds only the client shards its mesh slice
+owns — O(population / num_processes) state per host instead of
+O(population).
+
+Reads are collective.  Every process tracks the (deterministic) ownership
+map ``client -> last training process``; on ``gather`` each process
+contributes its owned rows and zeros elsewhere, and one
+``process_allgather`` + sum routes every row from its owning host to all
+hosts (exactly one non-zero contribution per row, so the sum is exact for
+float and integer leaves alike).  When cohort sampling moves a client to a
+different host's mesh slice, the next gather is the handoff: the old owner
+ships the row through the collective, the new owner trains and writes it,
+and the ownership map (updated identically on every process) records the
+move — ``stats()["handoffs"]`` counts them.
+
+Never-trained clients have no owner; all processes serve them from the
+init template row, exactly like a cold ``ShardedLazyStore`` gather.
+
+Determinism contract: gather/scatter MUST be called in the same order with
+the same indices on every process (the schedulers are deterministic SPMD,
+so this holds by construction); a diverging call order deadlocks in the
+collective, it never silently corrupts state.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.fl.population.store import ClientStateStore
+
+
+class CrossHostClientStore(ClientStateStore):
+    """Ownership-partitioned wrapper over a per-host state store.
+
+    ``owner_fn(n) -> np.ndarray`` maps the ``n`` cohort positions of a
+    scatter to the process index whose mesh slice trained each row (the
+    dist executor derives it from the cohort sharding's device index map,
+    so it is consistent with where the row actually computed).
+    """
+
+    name = "crosshost"
+    dense = False
+
+    def __init__(self, inner: ClientStateStore, ctx,
+                 owner_fn: Callable[[int], np.ndarray], template: Any):
+        self.inner = inner
+        self.ctx = ctx
+        self.owner_fn = owner_fn
+        self.num_clients = inner.num_clients
+        host = jax.tree.map(np.asarray, jax.device_get(template))
+        self._template_leaves, self._treedef = jax.tree.flatten(host)
+        # client id -> process index of the host that last trained it;
+        # updated identically on every process (deterministic schedule)
+        self._owner: dict[int, int] = {}
+        self.handoffs = 0       # rows whose owning host changed
+        self.cold_gathers = 0   # rows served from the init template
+
+    def gather(self, idx) -> Any:
+        idx = np.asarray(idx)
+        n = len(idx)
+        owners = np.asarray(
+            [self._owner.get(int(c), -1) for c in idx], np.int64)
+        me = self.ctx.process_index
+        mine = np.nonzero(owners == me)[0]
+        buffers = [np.zeros((n,) + t.shape, t.dtype)
+                   for t in self._template_leaves]
+        if len(mine):
+            rows = jax.device_get(self.inner.gather(idx[mine]))
+            for buf, leaf in zip(buffers, jax.tree.leaves(rows)):
+                buf[mine] = np.asarray(leaf)
+        summed = self.ctx.sum_across_processes(
+            jax.tree.unflatten(self._treedef, buffers))
+        leaves = [np.asarray(x) for x in jax.tree.leaves(summed)]
+        cold = np.nonzero(owners < 0)[0]
+        if len(cold):
+            self.cold_gathers += len(cold)
+            for buf, t in zip(leaves, self._template_leaves):
+                buf[cold] = t
+        return jax.tree.unflatten(self._treedef, leaves)
+
+    def scatter(self, idx, rows: Any) -> None:
+        idx = np.asarray(idx)
+        owners = np.asarray(self.owner_fn(len(idx)), np.int64)
+        me = self.ctx.process_index
+        mine = np.nonzero(owners == me)[0]
+        if len(mine):
+            host = jax.device_get(rows)
+            self.inner.scatter(
+                idx[mine], jax.tree.map(lambda x: np.asarray(x)[mine], host))
+        for i, c in enumerate(idx):
+            c = int(c)
+            prev = self._owner.get(c)
+            new = int(owners[i])
+            if prev is not None and prev != new:
+                self.handoffs += 1
+            self._owner[c] = new
+
+    def stats(self) -> dict[str, int]:
+        me = self.ctx.process_index
+        out = dict(self.inner.stats())
+        out.update(
+            handoffs=self.handoffs,
+            crosshost_cold_gathers=self.cold_gathers,
+            owned_clients=sum(1 for o in self._owner.values() if o == me))
+        return out
+
+    def close(self) -> None:
+        self.inner.close()

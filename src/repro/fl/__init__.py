@@ -12,8 +12,9 @@ from repro.fl.async_buffer import (AsyncConfig, BufferEntry, TreeAccumulator,
 from repro.fl.engine import (EngineConfig, FederatedEngine, RoundRecord,
                              RunResult, encode_client_bytes,
                              measure_update_bytes, run_simulation)
-from repro.fl.executors import (EXECUTORS, ClientExecutor, SerialExecutor,
-                                ShardedExecutor, VmapExecutor, make_executor)
+from repro.fl.executors import (EXECUTORS, ClientExecutor, DistExecutor,
+                                SerialExecutor, ShardedExecutor,
+                                VmapExecutor, make_executor)
 from repro.fl.ingest import (IngestConfig, IngestResult, IngestStats,
                              RejectedPayload, StreamingIngest)
 from repro.fl.rounds import (SCHEDULERS, Aggregate, AggregatedRound,
@@ -25,8 +26,9 @@ from repro.fl.population import (ClientStateStore, InMemoryStore,
                                  ShardedLazyStore, SplitsView, StoreConfig,
                                  TRAFFIC_PRESETS, TrafficConfig, TrafficModel,
                                  VirtualPopulationView, make_store, make_view)
-from repro.fl.sampling import (SamplingConfig, gather_clients, pad_clients,
-                               sample_cohort, scatter_clients, stream_cohort)
+from repro.fl.sampling import (EmptyCohortError, SamplingConfig,
+                               gather_clients, pad_clients, sample_cohort,
+                               scatter_clients, stream_cohort)
 from repro.fl.scenarios import (SCENARIOS, Scenario, get_scenario,
                                 list_scenarios, register, run_scenario,
                                 validate_scenario)
@@ -45,13 +47,14 @@ __all__ = [
     "SCHEDULERS", "Aggregate", "AggregatedRound", "BufferedAsyncScheduler",
     "CohortPlan", "Contribution", "Downlink", "Evaluate", "LocalTrain",
     "RoundIntake", "RoundScheduler", "ServerStep", "SyncScheduler", "Uplink",
-    "EXECUTORS", "ClientExecutor", "SerialExecutor", "ShardedExecutor",
-    "VmapExecutor", "make_executor",
+    "EXECUTORS", "ClientExecutor", "DistExecutor", "SerialExecutor",
+    "ShardedExecutor", "VmapExecutor", "make_executor",
     "IngestConfig", "IngestResult", "IngestStats", "RejectedPayload",
     "StreamingIngest",
     "ClientStateStore", "InMemoryStore", "ShardedLazyStore", "SplitsView",
     "StoreConfig", "TRAFFIC_PRESETS", "TrafficConfig", "TrafficModel",
     "VirtualPopulationView", "make_store", "make_view",
+    "EmptyCohortError",
     "SamplingConfig", "gather_clients", "pad_clients", "sample_cohort",
     "scatter_clients", "stream_cohort",
     "SCENARIOS", "Scenario", "get_scenario", "list_scenarios", "register",

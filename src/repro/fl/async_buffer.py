@@ -48,6 +48,53 @@ class AsyncConfig:
     call_saving_s: float | None = None
 
 
+_REPO_MARKERS = ("BENCH_cohort.json", "pyproject.toml", ".git", "ROADMAP.md")
+_FALLBACK_WARNED = False
+
+
+def _bench_root() -> str | None:
+    """Directory holding ``BENCH_cohort.json`` (or the repo root expected
+    to hold it).
+
+    ``REPRO_BENCH_DIR`` wins outright (installed-package deployments point
+    it at wherever the benchmark artefacts live).  Otherwise walk up from
+    this file towards the filesystem root until a directory carries the
+    benchmark file itself or a repo marker — the old code hard-coded four
+    ``dirname`` hops, which lands inside ``site-packages`` under any
+    installed layout and silently degraded every adaptive-window run to
+    the default saving.
+    """
+    env = os.environ.get("REPRO_BENCH_DIR")
+    if env:
+        return env
+    d = os.path.dirname(os.path.abspath(__file__))
+    while True:
+        if any(os.path.exists(os.path.join(d, m)) for m in _REPO_MARKERS):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return None
+        d = parent
+
+
+def _warn_fallback(path: str | None, default: float) -> float:
+    """One warning per process when the benchmark file is missing/corrupt —
+    a silent 0.05 under an installed layout is exactly the bug this
+    resolution replaced."""
+    global _FALLBACK_WARNED
+    if not _FALLBACK_WARNED:
+        _FALLBACK_WARNED = True
+        import warnings
+        warnings.warn(
+            f"load_call_saving: no usable BENCH_cohort.json at "
+            f"{path!r}; adaptive async windows fall back to the default "
+            f"per-call saving of {default}s (run "
+            "benchmarks/cohort_scaling.py, or set REPRO_BENCH_DIR to the "
+            "directory holding the benchmark output)",
+            RuntimeWarning, stacklevel=3)
+    return default
+
+
 def load_call_saving(path: str | None = None, default: float = 0.05) -> float:
     """Per-executor-call dispatch saving measured by the cohort benchmark.
 
@@ -62,13 +109,20 @@ def load_call_saving(path: str | None = None, default: float = 0.05) -> float:
     with B completions per aggregation and m the mean windowed batch size
     (a B-completion aggregation costs B calls serially and B/m windowed).
     The adaptive window batches the next finisher exactly while the
-    marginal wait is below this number.  Falls back to ``default`` when no
-    benchmark file exists (fresh checkout).
+    marginal wait is below this number.
+
+    ``path=None`` resolves ``BENCH_cohort.json`` via the ``REPRO_BENCH_DIR``
+    environment override, then a repo-root marker walk from this file (so
+    source checkouts and installed packages both find a real artefact when
+    one exists).  Falls back to ``default`` — with a one-time warning —
+    when no benchmark file is found (fresh checkout).
     """
     if path is None:
-        root = os.path.dirname(os.path.dirname(os.path.dirname(
-            os.path.dirname(os.path.abspath(__file__)))))
-        path = os.path.join(root, "BENCH_cohort.json")
+        root = _bench_root()
+        path = (os.path.join(root, "BENCH_cohort.json")
+                if root is not None else None)
+    if path is None:
+        return _warn_fallback(path, default)
     try:
         with open(path) as f:
             bench = json.load(f)["async"]
@@ -79,7 +133,7 @@ def load_call_saving(path: str | None = None, default: float = 0.05) -> float:
         m = float(np.mean(sizes)) if sizes else 1.0
         b = float(bench["concurrency"])
     except (OSError, KeyError, ValueError, json.JSONDecodeError):
-        return default
+        return _warn_fallback(path, default)
     if m <= 1.0 or b <= 0.0 or t_serial <= t_windowed:
         return default
     return (t_serial - t_windowed) / b / (1.0 - 1.0 / m)

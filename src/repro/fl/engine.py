@@ -190,7 +190,10 @@ class EngineConfig:
     ingest: str = "gather"               # "gather" | "streaming"
     ingest_opts: IngestConfig = dataclasses.field(
         default_factory=IngestConfig)    # chunk/queue/workers/decode engine
-    executor: str = "vmap"               # cohort backend (fl.executors)
+    executor: str = "vmap"               # cohort backend (fl.executors):
+    #   "serial" | "vmap" | "sharded" | "dist" — "dist" runs the sharded
+    #   program on a jax.distributed multi-process mesh (repro.dist); its
+    #   mesh spans every host's devices, so mesh_shape stays None
     mesh_shape: tuple[int, ...] | None = None  # sharded: 1-D cohort mesh
     # --- population axes (repro.fl.population) ---
     population: int | None = None        # virtual clients (None = splits')
@@ -216,7 +219,8 @@ class EngineConfig:
                 raise ValueError(
                     f"mesh_shape configures the sharded cohort mesh; it has "
                     f"no meaning for executor={self.executor!r} — drop it or "
-                    "set executor='sharded'")
+                    "set executor='sharded' (the 'dist' backend builds its "
+                    "mesh from the jax.distributed process topology)")
             if len(self.mesh_shape) != 1 or self.mesh_shape[0] < 1:
                 raise ValueError(
                     f"mesh_shape must be a 1-D positive shape (the cohort "
@@ -407,14 +411,27 @@ class FederatedEngine:
             engine_cfg.sampling, self.num_clients,
             streaming=engine_cfg.population is not None,
             traffic=self.traffic)
+        executor = make_executor(engine_cfg.executor,
+                                 mesh_shape=engine_cfg.mesh_shape)
+        store = make_store(engine_cfg.store, persistent0, self.num_clients)
+        if (engine_cfg.executor == "dist"
+                and executor.ctx.process_count > 1):
+            # multi-process mesh: partition persistent client state by
+            # training ownership — each host's store holds only the client
+            # shards its mesh slice trains, with cross-host handoff (one
+            # collective per gather) when sampling moves a client between
+            # hosts (repro.dist.state)
+            from repro.dist import CrossHostClientStore
+            store = CrossHostClientStore(store, executor.ctx,
+                                         executor.position_owners,
+                                         template=persistent0)
         self.local_train = LocalTrain(
             client_round,
             make_view(splits, engine_cfg.population,
                       seed=engine_cfg.sampling.stream_seed),
-            make_store(engine_cfg.store, persistent0, self.num_clients),
+            store,
             cfg.batch_size,
-            executor=make_executor(engine_cfg.executor,
-                                   mesh_shape=engine_cfg.mesh_shape))
+            executor=executor)
         self.uplink = Uplink(cfg, engine_cfg, server)
         self.aggregate = Aggregate()
         self.server_step = ServerStep(make_server_opt(engine_cfg.server_opt))

@@ -17,6 +17,14 @@ cohort.  *Who* trains *when* is scheduling policy (``repro.fl.rounds``);
     row repeated) and the padded rows are dropped from the output, so
     ragged cohorts (K not divisible by the device count) behave exactly
     like the single-device path.
+  * :class:`DistExecutor` — the sharded program on a MULTI-PROCESS mesh:
+    a ``jax.distributed`` job (``repro.dist.DistContext``) whose cohort
+    mesh spans every host's devices.  Each process feeds only its local
+    shard of the stacked client arrays
+    (``jax.make_array_from_process_local_data``) and the outputs are
+    all-gathered back to every host (the engine's uplink/aggregation is
+    replicated SPMD), so the compiled per-row program — and therefore the
+    seed-parity pins — is unchanged; only where rows live differs.
 
 Every backend exposes the same two entry points and MUST be numerically
 equivalent on the same inputs (tolerance-pinned in tests/test_executors.py):
@@ -38,6 +46,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.fl.sampling import pad_clients
@@ -200,10 +209,128 @@ class ShardedExecutor(VmapExecutor):
             return _row(out, slice(0, n))
 
 
+class DistExecutor(ShardedExecutor):
+    """The sharded cohort program on a ``jax.distributed`` multi-host mesh.
+
+    Construction resolves the process's :class:`repro.dist.DistContext`
+    (env-var driven ``jax.distributed.initialize``; degenerates to a
+    single-process local-device mesh when no job is configured) and builds
+    the cohort mesh over the GLOBAL device list.  Three things differ from
+    :class:`ShardedExecutor`:
+
+      * **input feed** — each process materialises only the rows its own
+        devices address (``jax.make_array_from_process_local_data``); the
+        server snapshot is fed replicated.  The stacked host arrays are
+        identical on every process (deterministic SPMD engine), so the
+        per-host slice is just a view of rows the host already computed.
+      * **output fetch** — the sharded outputs are resharded to fully
+        replicated (one compiled all-gather) and fetched to host numpy, so
+        the host-side wire/aggregation path sees the full cohort on every
+        process exactly like the single-process run.
+      * **ownership** — :meth:`position_owners` exposes which process's
+        mesh slice trained each cohort position (from the batch sharding's
+        device index map), the contract
+        :class:`repro.dist.CrossHostClientStore` partitions persistent
+        client state by.
+
+    The compiled per-row program is untouched (same vmapped HLO, rows just
+    live on more hosts), so results — including the frozen seed byte pins —
+    are bitwise identical to the single-process backends.
+    """
+
+    name = "dist"
+
+    def __init__(self, ctx=None):
+        if ctx is None:
+            from repro.dist import get_context
+            ctx = get_context()
+        self.ctx = ctx
+        super().__init__(mesh=ctx.cohort_mesh())
+        self._rep_jit = jax.jit(lambda t: t, out_shardings=self._replicated)
+        self._local_cache: dict[int, tuple[int, int]] = {}
+        self._owner_cache: dict[int, Any] = {}
+
+    def _place(self, tree: Any, sharding: NamedSharding) -> Any:
+        if self.ctx.process_count == 1:
+            return jax.device_put(tree, sharding)
+        sharded_rows = bool(sharding.spec) and sharding.spec[0] == COHORT_AXIS
+
+        def put(x):
+            x = np.asarray(jax.device_get(x))
+            gshape = x.shape
+            if sharded_rows:
+                lo, hi = self._local_rows(gshape[0])
+                if (lo, hi) != (0, gshape[0]):
+                    return jax.make_array_from_process_local_data(
+                        sharding, np.ascontiguousarray(x[lo:hi]), gshape)
+            return jax.make_array_from_process_local_data(sharding, x, gshape)
+
+        return jax.tree.map(put, tree)
+
+    def _local_rows(self, total: int) -> tuple[int, int]:
+        """The contiguous [lo, hi) row block this process's devices address
+        under the batch sharding; (0, total) when the device order is not a
+        contiguous block (then the full replicated feed is used — always
+        correct, just a larger host->device transfer)."""
+        cached = self._local_cache.get(total)
+        if cached is not None:
+            return cached
+        amap = self._batch.addressable_devices_indices_map((total,))
+        bounds = sorted({(s[0].start or 0,
+                          total if s[0].stop is None else s[0].stop)
+                         for s in amap.values()})
+        lo, hi = bounds[0][0], bounds[-1][1]
+        if sum(b[1] - b[0] for b in bounds) != hi - lo:
+            lo, hi = 0, total
+        self._local_cache[total] = (lo, hi)
+        return lo, hi
+
+    def _fetch(self, out: Any) -> Any:
+        """All-gather the row-sharded outputs and fetch to host numpy, so
+        every process's wire path sees the full cohort."""
+        if self.ctx.process_count == 1:
+            return out
+        return jax.device_get(self._rep_jit(out))
+
+    def position_owners(self, n: int) -> Any:
+        """Process index whose mesh slice trains each of ``n`` cohort rows
+        (after padding) — the write-ownership contract of
+        ``repro.dist.CrossHostClientStore``."""
+        if n <= 0:
+            return np.empty(0, np.int32)
+        total = -(-n // self.mesh_size) * self.mesh_size
+        owners = self._owner_cache.get(total)
+        if owners is None:
+            owners = np.empty(total, np.int32)
+            for dev, index in self._batch.devices_indices_map(
+                    (total,)).items():
+                owners[index[0]] = dev.process_index
+            self._owner_cache[total] = owners
+        return owners[:n]
+
+    def run_shared(self, server, pers, cx, cy, cvx, cvy, bidx):
+        n = cx.shape[0]
+        with obs_trace.device_span("executor.run_shared", backend=self.name,
+                                   n=int(n)):
+            batch = self._padded((pers, cx, cy, cvx, cvy, bidx), n)
+            out = self.vround(self._place(server, self._replicated), *batch)
+            return _row(self._fetch(out), slice(0, n))
+
+    def run_stacked(self, servers, pers, cx, cy, cvx, cvy, bidx):
+        n = cx.shape[0]
+        with obs_trace.device_span("executor.run_stacked", backend=self.name,
+                                   n=int(n)):
+            servers, *batch = self._padded(
+                (servers, pers, cx, cy, cvx, cvy, bidx), n)
+            out = self.vround_stacked(servers, *batch)
+            return _row(self._fetch(out), slice(0, n))
+
+
 EXECUTORS: dict[str, type[ClientExecutor]] = {
     "serial": SerialExecutor,
     "vmap": VmapExecutor,
     "sharded": ShardedExecutor,
+    "dist": DistExecutor,
 }
 
 
@@ -215,4 +342,6 @@ def make_executor(name: str, *,
         raise ValueError(f"unknown executor: {name!r} (known: {known})")
     if name == "sharded":
         return ShardedExecutor(mesh_shape=mesh_shape)
+    if name == "dist":
+        return DistExecutor()
     return EXECUTORS[name]()

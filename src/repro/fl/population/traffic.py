@@ -100,9 +100,11 @@ class TrafficConfig:
                              f"got {total}")
         if any(c.speed <= 0.0 for c in self.classes):
             raise ValueError("device-class speeds must be > 0")
-        if not 0.0 <= self.churn_rate < 1.0:
-            raise ValueError("churn_rate must be in [0, 1) — a rate of 1 "
-                             "means no client ever uploads")
+        if not 0.0 <= self.churn_rate <= 1.0:
+            # 1.0 (no client ever uploads) is legal: the schedulers bound
+            # their retry loops and surface all-drop rounds instead of
+            # spinning, so even total churn terminates
+            raise ValueError("churn_rate must be in [0, 1]")
         if self.latency_mean <= 0.0 or self.latency_sigma < 0.0:
             raise ValueError("latency_mean must be > 0 and latency_sigma "
                              ">= 0")

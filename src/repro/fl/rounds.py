@@ -72,8 +72,9 @@ from repro.fl.executors import ClientExecutor, VmapExecutor
 from repro.fl.async_buffer import (client_latencies, load_call_saving,
                                    normalized_staleness_weights,
                                    weighted_mean_trees)
-from repro.fl.sampling import (SamplingConfig, sample_available,
-                               sample_cohort, stream_cohort)
+from repro.fl.sampling import (EmptyCohortError, SamplingConfig,
+                               sample_available, sample_cohort,
+                               stream_cohort)
 from repro.fl.server_opt import server_update
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
@@ -279,6 +280,10 @@ class LocalTrain:
     def train_cohort(self, kb: jax.Array, idx: np.ndarray, server: ServerState,
                      full: bool):
         """One barrier round over the cohort ``idx``; returns RoundOutput."""
+        if len(idx) == 0:
+            raise EmptyCohortError(
+                "train_cohort received an empty cohort; schedulers should "
+                "surface this as an all-drop round, not an executor call")
         with obs_trace.span("local_train.cohort", n=len(idx)):
             batch_idx = client_epoch_batches(kb, len(idx), self.n_train,
                                              self.batch_size)
@@ -310,6 +315,11 @@ class LocalTrain:
         broadcast path avoids materialising one server copy per client.
         Returns the client-stacked RoundOutput in ``clients`` order.
         """
+        if len(clients) == 0:
+            raise EmptyCohortError(
+                "train_window received an empty dispatch window; schedulers "
+                "should surface this as an all-drop round, not an executor "
+                "call")
         with obs_trace.span("local_train.window", n=len(clients)):
             idx = np.asarray(clients)
             bidx = jnp.stack([epoch_batches(kb, self.n_train, self.batch_size)
@@ -972,9 +982,19 @@ class SyncScheduler(RoundScheduler):
         clients = [int(c) for c in idx]
         cohort = len(clients)
 
-        out = eng.local_train.train_cohort(
-            kb, idx, eng.server,
-            full=eng.cohort.full and cohort == eng.num_clients)
+        try:
+            out = eng.local_train.train_cohort(
+                kb, idx, eng.server,
+                full=eng.cohort.full and cohort == eng.num_clients)
+        except EmptyCohortError:
+            # nothing to execute (a zero-size cohort selection): surface an
+            # all-drop round — no contributions, no server step — and
+            # advance the simulated clock one availability-curve step so a
+            # traffic-gated run keeps moving
+            day = (eng.traffic.cfg.day_s if eng.traffic is not None else 96.0)
+            self.sim_clock += day / 96.0
+            return RoundIntake([], [], weights=None,
+                               sim_time=self.sim_clock, receivers=0)
         contribs = eng.uplink.intake(out, clients)
 
         traffic = eng.traffic
@@ -1299,6 +1319,7 @@ class BufferedAsyncScheduler(RoundScheduler):
         eng = self.eng
         buffer: list[Contribution] = []
         stalls = 0
+        churn_stalls = 0
         while True:
             self.pending_dispatch -= self._dispatch(self.pending_dispatch)
             if not self.in_flight:
@@ -1331,7 +1352,25 @@ class BufferedAsyncScheduler(RoundScheduler):
                         kept.append(e)
                 window = kept
                 if not window:
+                    # at churn_rate -> 1 every dispatch can vanish before
+                    # uploading, which used to spin this loop forever;
+                    # after a bounded number of fully-churned windows the
+                    # round is surfaced as an all-drop intake (whatever the
+                    # buffer holds, usually nothing) instead of hanging
+                    churn_stalls += 1
+                    if churn_stalls > 1000:
+                        if buffer and eng.streaming_ingest:
+                            return self._flush_streaming(buffer)
+                        w = (normalized_staleness_weights(
+                                [b.staleness for b in buffer],
+                                self.acfg.staleness_exponent)
+                             if buffer else None)
+                        return RoundIntake(buffer,
+                                           list(range(len(buffer))),
+                                           weights=w, sim_time=self.now,
+                                           receivers=self.concurrency)
                     continue
+            churn_stalls = 0
             kbs = []
             for _ in window:
                 self.key, kb = jax.random.split(self.key)

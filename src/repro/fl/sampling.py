@@ -168,6 +168,18 @@ def stream_cohort(seed: int, round_idx: int, num_clients: int, k: int, *,
 
 # ---------------------------------------------------------------- gather
 
+class EmptyCohortError(RuntimeError):
+    """A zero-row cohort reached a stage that needs at least one client.
+
+    Raised (instead of an opaque downstream shape error) by
+    :func:`pad_clients` when there is no row to repeat, and by
+    ``LocalTrain`` before any executor dispatch.  The schedulers catch it
+    and surface the round as an all-drop intake (no contributions, no
+    server step) — the semantics a fully-churned / fully-unavailable round
+    deserves, rather than a crash deep inside the sharded executor.
+    """
+
+
 def gather_clients(tree: Any, idx: np.ndarray) -> Any:
     """Slice a client-stacked pytree down to the cohort rows."""
     return jax.tree.map(lambda x: x[idx], tree)
@@ -186,11 +198,21 @@ def pad_clients(tree: Any, total: int) -> Any:
     trace the same program without NaN/zero hazards — and drops the padded
     rows from the output.  A tree already at (or beyond) ``total`` rows is
     returned unchanged.
+
+    A ZERO-row tree has no last row to repeat (``x[-1:]`` on n=0 is empty,
+    so the old code silently returned 0 rows and the mesh placement blew
+    up later with a shape error); padding an empty cohort to a positive
+    total raises :class:`EmptyCohortError` instead, which the schedulers
+    treat as an all-drop round.
     """
     def pad(x):
         n = x.shape[0]
         if n >= total:
             return x
+        if n == 0:
+            raise EmptyCohortError(
+                f"cannot pad an empty cohort to {total} rows: there is no "
+                "client row to repeat (an empty cohort cannot execute)")
         return jnp.concatenate(
             [x, jnp.repeat(x[-1:], total - n, axis=0)], axis=0)
     return jax.tree.map(pad, tree)

@@ -68,7 +68,7 @@ class Scenario:
     bidirectional: bool = False
     rounds: int = 3
     # --- cohort execution backend (repro.fl.executors) ---
-    executor: str = "vmap"          # "serial" | "vmap" | "sharded"
+    executor: str = "vmap"          # "serial" | "vmap" | "sharded" | "dist"
     mesh_shape: tuple[int, ...] | None = None  # sharded: 1-D cohort mesh
     # --- wire: codec x channel x schema (repro.comms) ---
     codec: str = "auto"             # registry name; "auto" = seed semantics
@@ -327,6 +327,12 @@ for _s in [
              "(NamedSharding over the vmapped client axis; ragged cohorts "
              "pad to the mesh size)",
              executor="sharded"),
+    Scenario("dist_cohort_full",
+             "cohort axis sharded across a jax.distributed multi-process "
+             "mesh (repro.dist; single-process runs degrade to the local "
+             "device mesh) with cross-host client-state ownership — "
+             "records are bitwise identical to the single-process run",
+             executor="dist"),
     Scenario("async_windowed_b4",
              "buffered async with a 0.5 s dispatch window: concurrently "
              "finishing clients train as ONE vmapped executor call",

@@ -1,10 +1,13 @@
-"""Launchers for the (optional) multi-host mesh runtime.
+"""Launchers for serving, training dry-runs, and the multi-host runtime.
 
-The ``repro.dist`` mesh runtime is not part of this checkout; everything
-that needs it imports lazily and fails with a clear message instead of a
-bare ImportError.  ``repro.launch.serve`` and the FL engine run without it.
+``repro.dist`` is the ``jax.distributed`` multi-host federated runtime
+(PR 10): :class:`repro.dist.DistContext` initializes the coordination
+service and the FL engine's ``executor="dist"`` backend shards the cohort
+axis across the resulting multi-process mesh.  ``require_dist()`` guards
+the entry points that need it and fails with an actionable message on a
+checkout where the package is absent or broken.
 
-``repro.launch.serve`` now fronts the FL ingest server by default: without
+``repro.launch.serve`` fronts the FL ingest server by default: without
 ``--arch`` it delegates to ``repro.launch.ingest_serve`` (the streaming
 decode-and-accumulate pipeline of ``repro.fl.ingest``, reporting
 payloads/s and MB/s); with ``--arch`` it keeps the transformer
@@ -13,17 +16,19 @@ prefill+decode path.
 from __future__ import annotations
 
 DIST_MISSING_MSG = (
-    "the `repro.dist` mesh runtime is not present in this checkout; "
-    "this entry point needs it (see ROADMAP.md — restore repro.dist to "
-    "run mesh training/dry-runs).  The federated engine "
+    "the `repro.dist` runtime failed to import; this entry point needs it "
+    "(the jax.distributed multi-host cohort runtime — see ROADMAP.md and "
+    "src/repro/dist/).  The single-process federated engine "
     "(examples/federated_cifar.py, benchmarks/fl_convergence.py) runs "
     "without it."
 )
 
 
-def require_dist() -> None:
-    """Raise SystemExit with a friendly message if repro.dist is absent."""
+def require_dist():
+    """Import and return ``repro.dist``; SystemExit with a friendly
+    message if the runtime is absent or broken in this checkout."""
     try:
-        import repro.dist  # noqa: F401
+        import repro.dist
     except ImportError:
         raise SystemExit(DIST_MISSING_MSG) from None
+    return repro.dist

@@ -32,3 +32,24 @@ def make_cohort_mesh(mesh_shape: tuple[int, ...] | None = None,
         raise ValueError(
             f"cohort mesh is 1-D (the client axis); got shape {mesh_shape!r}")
     return jax.make_mesh(tuple(mesh_shape), (axis,))
+
+
+def make_multihost_cohort_mesh(axis: str = "clients"):
+    """1-D cohort mesh spanning every device of every process.
+
+    After ``jax.distributed.initialize`` (``repro.dist.DistContext``),
+    ``jax.devices()`` is the GLOBAL device list, so the full-device cohort
+    mesh covers all hosts; this wrapper additionally asserts the mesh
+    really spans the job (a worker that silently failed to join the
+    coordination service would otherwise shard over its local devices only
+    and diverge from the other processes).  Single-process jobs degrade to
+    exactly :func:`make_cohort_mesh`'s all-local-devices mesh.
+    """
+    mesh = make_cohort_mesh(None, axis=axis)
+    procs = {d.process_index for d in mesh.devices.flat}
+    if len(procs) != jax.process_count():
+        raise RuntimeError(
+            f"multi-host cohort mesh covers processes {sorted(procs)} but "
+            f"jax reports {jax.process_count()} processes — the "
+            "coordination service is not fully joined")
+    return mesh

@@ -10,7 +10,10 @@ import textwrap
 
 import pytest
 
-pytest.importorskip("repro.dist")  # mesh runtime not present in this checkout
+# repro.dist is now the FL multi-host runtime (tests/test_dist_fl.py); the
+# transformer mesh-TRAINING runtime these tests exercise is still absent
+# from this checkout, so gate on its entry module specifically
+pytest.importorskip("repro.dist.train_step")
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

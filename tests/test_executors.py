@@ -27,11 +27,11 @@ import pytest
 from repro.core import quant as quant_lib
 from repro.core.protocol import ProtocolConfig
 from repro.data import federated, synthetic
-from repro.fl import (AsyncConfig, EngineConfig, FederatedEngine,
-                      SamplingConfig, Scenario, SerialExecutor,
-                      ShardedExecutor, VmapExecutor, gather_clients,
-                      make_executor, pad_clients, scatter_clients,
-                      validate_scenario)
+from repro.fl import (AsyncConfig, EmptyCohortError, EngineConfig,
+                      FederatedEngine, SamplingConfig, Scenario,
+                      SerialExecutor, ShardedExecutor, VmapExecutor,
+                      gather_clients, make_executor, pad_clients,
+                      scatter_clients, validate_scenario)
 from repro.fl.rounds import stack_trees
 from repro.models import cnn
 
@@ -106,6 +106,18 @@ def test_pad_clients_repeats_last_row_and_roundtrips():
     _assert_trees_close(jax.tree.map(lambda x: x[:3], padded), tree, rtol=0)
     # already-at-size trees come back unchanged
     _assert_trees_close(pad_clients(tree, 3), tree, rtol=0)
+
+
+def test_pad_clients_empty_cohort_raises():
+    """Regression: ``jnp.repeat(x[-1:], n)`` on a 0-row tree used to return
+    0 rows silently, so an empty cohort sailed into the executor and blew
+    up (or padded wrong) far from the cause.  Now it's a typed error the
+    schedulers catch as an all-drop round."""
+    empty = {"w": jnp.zeros((0, 2)), "s": jnp.zeros((0,))}
+    with pytest.raises(EmptyCohortError, match="empty cohort"):
+        pad_clients(empty, 4)
+    # padding an empty tree TO zero rows stays a no-op, not an error
+    _assert_trees_close(pad_clients(empty, 0), empty, rtol=0)
 
 
 def test_executor_registry():

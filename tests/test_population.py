@@ -371,3 +371,65 @@ def test_population_run_end_to_end(tiny2):
     parts = {c for r in res.records for c in r.participants}
     assert len(parts) > 2 and max(parts) >= 2  # virtual ids beyond shards
     assert all(len(r.participants) == 4 for r in res.records)
+
+
+# ------------------------------------------------- full churn / bench path
+
+
+def test_async_full_churn_completes_as_all_drop(tiny2):
+    """Regression: at churn_rate=1 every dispatch vanishes before its
+    upload, and the async scheduler used to spin its pop-dispatch loop
+    forever (``self.now`` advanced only on availability stalls, never on
+    fully-churned windows).  The bounded retry now surfaces all-drop
+    rounds and the run completes."""
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    res = run_simulation(
+        model, cfg, splits, 2, jax.random.PRNGKey(3),
+        engine=EngineConfig(
+            mode="async",
+            async_cfg=AsyncConfig(buffer_size=2, concurrency=2),
+            traffic=TrafficConfig(churn_rate=1.0, seed=5)))
+    assert len(res.records) == 2
+    assert all(r.participants == () for r in res.records)
+    assert all(r.up_bytes == 0 and r.down_bytes == 0 for r in res.records)
+
+
+def test_load_call_saving_env_override_and_marker_walk(tmp_path, monkeypatch):
+    """REPRO_BENCH_DIR wins outright; without it the marker walk resolves
+    the checkout root (the old code hard-coded four dirname hops, which
+    breaks under any installed layout)."""
+    import json
+
+    import repro.fl.async_buffer as ab
+
+    bench = {"async": {
+        "concurrency": 4,
+        "no_wire": {
+            "serial_completions": {"steady_agg_s": 2.0},
+            "windowed": {"steady_agg_s": 1.0, "batch_sizes": [2, 2]}}}}
+    (tmp_path / "BENCH_cohort.json").write_text(json.dumps(bench))
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
+    # (2.0 - 1.0) / concurrency 4 / (1 - 1/mean_batch 2) = 0.5
+    assert load_call_saving() == pytest.approx(0.5)
+
+    monkeypatch.delenv("REPRO_BENCH_DIR")
+    root = ab._bench_root()
+    assert root is not None
+    assert any(os.path.exists(os.path.join(root, m))
+               for m in ("BENCH_cohort.json", "pyproject.toml"))
+
+
+def test_load_call_saving_fallback_warns_once(tmp_path, monkeypatch):
+    import warnings
+
+    import repro.fl.async_buffer as ab
+
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path / "nowhere"))
+    monkeypatch.setattr(ab, "_FALLBACK_WARNED", False)
+    with pytest.warns(RuntimeWarning, match="BENCH_cohort.json"):
+        assert ab.load_call_saving(default=0.07) == 0.07
+    with warnings.catch_warnings():  # one warning per process, then silent
+        warnings.simplefilter("error")
+        assert ab.load_call_saving(default=0.07) == 0.07

@@ -716,3 +716,41 @@ def test_no_wire_fast_path_stays_on_device(tiny2):
     for c in seen:
         for leaf in jax.tree.leaves(c.delta_params):
             assert isinstance(leaf, jax.Array), type(leaf)
+
+
+# ------------------------------------------------------- empty cohorts
+
+
+def test_sync_scheduler_empty_cohort_is_all_drop_round(tiny2):
+    """A zero-size cohort selection surfaces as a typed EmptyCohortError
+    that the sync scheduler converts into an all-drop round: no
+    contributions, no server step, clock advanced — the run keeps going."""
+    from repro.fl import EmptyCohortError
+    from repro.fl.sampling import pad_clients
+
+    with pytest.raises(EmptyCohortError):
+        pad_clients({"w": jax.numpy.zeros((0, 3))}, 2)
+
+    model, splits = tiny2
+    cfg = ProtocolConfig(name="fsfl", method="sparse", fixed_sparsity=0.9,
+                         batch_size=32, local_lr=2e-3)
+    eng = FederatedEngine(model, cfg, splits, jax.random.PRNGKey(7),
+                          engine_cfg=EngineConfig(
+                              sampling=SamplingConfig(cohort_size=1)))
+    orig = eng.cohort.select
+    calls = {"n": 0}
+
+    def select_empty_first(key):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            key, _ = jax.random.split(key)
+            return np.array([], dtype=np.int64), key
+        return orig(key)
+
+    eng.cohort.select = select_empty_first
+    res = eng.run(2)
+    first, second = res.records
+    assert first.participants == () and first.up_bytes == 0
+    assert first.down_bytes == 0  # no server step happened
+    assert second.participants != () and second.up_bytes > 0
+    assert second.sim_time_s >= first.sim_time_s > 0.0  # clock advanced
